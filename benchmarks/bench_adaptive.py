@@ -1,0 +1,126 @@
+"""Figures 10/11/19 + Tables 4/5: adaptive-global vs NaviX (adaptive-local)
+under uncorrelated / positively / negatively correlated workloads, with the
+heuristic-pick distributions and the correlation-ratio (ce) table."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, measure, n_queries
+from benchmarks.datasets import wiki_dataset
+from repro.configs.navix_paper import CORR_SELECTIVITIES
+from repro.data.synthetic import (correlation_ratio, make_queries,
+                                  person_chunk_plan, uncorrelated_plan)
+from repro.query.operators import evaluate
+
+
+def _workloads(idx, data):
+    nq = n_queries()
+    out = []
+    # uncorrelated: id filter + mixture queries
+    for sigma in (0.5, 0.3, 0.1, 0.01):
+        mask = evaluate(uncorrelated_plan(sigma, data.n_chunks),
+                        data.store).mask
+        out.append(("uncorrelated", sigma,
+                    make_queries(data, nq, "uncorrelated", seed=21), mask))
+    # correlated: person-chunk joins, date-range selectivity control
+    person_frac = data.chunk_is_person.mean()
+    for sigma in CORR_SELECTIVITIES:
+        frac = min(sigma / person_frac, 1.0)
+        mask = evaluate(person_chunk_plan(data.store, frac),
+                        data.store).mask
+        out.append(("positive", mask.mean(),
+                    make_queries(data, nq, "person", seed=22), mask))
+        out.append(("negative", mask.mean(),
+                    make_queries(data, nq, "nonperson", seed=23), mask))
+    return out
+
+
+def run() -> list[dict]:
+    idx, data = wiki_dataset()
+    rows = []
+    # ce's kNN horizon must stay inside one topic cluster (the paper's 15M
+    # chunks easily satisfy this at k=100; quick-mode scaling does not)
+    ce_k = max(20, min(100, data.n_chunks // 300))
+    for corr, sigma, queries, mask in _workloads(idx, data):
+        ce = correlation_ratio(data.embeddings, queries, mask, k=ce_k,
+                               metric="cos")
+        for h in ("adaptive_g", "adaptive_local"):
+            m = measure(idx, queries, mask, h)
+            p = m.picks / max(m.picks.sum(), 1)
+            rows.append({
+                "bench": "fig10_adaptive", "workload": corr,
+                "sigma": round(float(sigma), 4), "ce": round(ce, 3),
+                "heuristic": h, "efs": m.efs, "recall": round(m.recall, 4),
+                "ms_per_query": round(m.ms_per_query, 2),
+                "t_dc": round(m.t_dc, 1), "s_dc": round(m.s_dc, 1),
+                "pick_onehop": round(float(p[0]), 3),
+                "pick_directed": round(float(p[1]), 3),
+                "pick_blind": round(float(p[2]), 3),
+            })
+    emit(rows, "fig10_adaptive")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    fails = []
+    # Table 4/5: ce ~ 1 uncorrelated, >> 1 positive, << 1 negative
+    ces = {}
+    for r in rows:
+        ces.setdefault(r["workload"], []).append(r["ce"])
+    # ce granularity at sigma=1% is coarse (the paper's own uncorrelated
+    # table shows up to 1.18); gate at 2.0
+    if not all(0.6 < c < 2.0 for c in ces.get("uncorrelated", [])):
+        fails.append(f"uncorrelated ce off: {ces.get('uncorrelated')}")
+    if not all(c > 2.0 for c in ces.get("positive", [])):
+        fails.append(f"positive ce too weak: {ces.get('positive')}")
+    if not all(c < 0.5 for c in ces.get("negative", [])):
+        fails.append(f"negative ce too strong: {ces.get('negative')}")
+    # Fig 10: adaptive-local must beat adaptive-g clearly (the paper: "up
+    # to 1.7x") at multiple correlated points via the onehop-s switching
+    # mechanism, and wins must dominate regressions. A regression band
+    # where sigma_l falls in directed's region is a documented dataset
+    # dependence (directed's mid-band edge is weaker on synthetic
+    # mixtures; lf is the paper's own knob for this trade) -- see
+    # EXPERIMENTS.md SSClaims. Points missing the recall target are
+    # excluded (the paper's cross marks, Section 5.1.4).
+    wins = big_wins = regressions = 0
+    for corr in ("positive", "negative"):
+        sub = [r for r in rows if r["workload"] == corr]
+        for s in sorted({r["sigma"] for r in sub}):
+            ag = next(r for r in sub if r["sigma"] == s
+                      and r["heuristic"] == "adaptive_g")
+            al = next(r for r in sub if r["sigma"] == s
+                      and r["heuristic"] == "adaptive_local")
+            if ag["recall"] < 0.93 or al["recall"] < 0.93:
+                continue
+            ratio = ag["t_dc"] / max(al["t_dc"], 1e-9)
+            if ratio >= 1.05:
+                wins += 1
+            if ratio >= 1.5:
+                big_wins += 1
+            if ratio < 1 / 1.6:
+                regressions += 1
+    if big_wins == 0:
+        fails.append("adaptive-local never beat adaptive-g >=1.5x on "
+                     "correlated workloads")
+    if regressions > wins:
+        fails.append(f"adaptive-local regressions ({regressions}) exceed "
+                     f"wins ({wins})")
+    # Fig 11: adaptive-g commits (one pick dominates); adaptive-local mixes
+    for r in rows:
+        picks = [r["pick_onehop"], r["pick_directed"], r["pick_blind"]]
+        if r["heuristic"] == "adaptive_g" and max(picks) < 0.99:
+            fails.append("adaptive-g did not commit to one heuristic")
+            break
+    mixed = any(sorted([r["pick_onehop"], r["pick_directed"],
+                        r["pick_blind"]])[1] > 0.05
+                for r in rows if r["heuristic"] == "adaptive_local")
+    if not mixed:
+        fails.append("adaptive-local never mixed heuristics")
+    return fails
+
+
+if __name__ == "__main__":
+    for f in validate(run()):
+        print("CLAIM-FAIL:", f)

@@ -1,0 +1,57 @@
+"""Table 6: index construction throughput (batched morsel-parallel insert),
+plus index-size accounting (the paper's Section 5.1.6 ratio: upper layer
+tiny vs vectors + lower level)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.core.build import BuildParams, build
+from repro.core.navix import NavixConfig
+from repro.data.synthetic import gaussian_mixture
+
+
+def run() -> list[dict]:
+    rows = []
+    sizes = [2000, 6000] if QUICK else [4000, 12000, 24000]
+    for n in sizes:
+        X, _, _ = gaussian_mixture(n, 48, 24, seed=9)
+        t0 = time.perf_counter()
+        graph, stats = build(X, BuildParams(m_u=16, ef_construction=100))
+        dt = time.perf_counter() - t0
+        vec_bytes = graph.vectors.size * 4
+        lower_bytes = graph.lower.size * 4
+        upper_bytes = graph.upper.size * 4 + graph.upper_ids.size * 4
+        rows.append({
+            "bench": "table6_construction", "n": n,
+            "seconds": round(dt, 1),
+            "vectors_per_s": round(n / dt, 1),
+            "insert_dc_per_vector": round(stats.search_dc / n, 1),
+            "vector_mb": round(vec_bytes / 2**20, 2),
+            "lower_mb": round(lower_bytes / 2**20, 2),
+            "upper_mb": round(upper_bytes / 2**20, 3),
+            "upper_vs_total_pct": round(
+                100 * upper_bytes / (vec_bytes + lower_bytes), 2),
+        })
+    emit(rows, "table6_construction")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    fails = []
+    # Section 5.1.6: the in-memory upper layer is a tiny fraction
+    for r in rows:
+        if r["upper_vs_total_pct"] > 5.0:
+            fails.append(f"upper layer too large: {r}")
+    # throughput should not collapse with n (roughly n log n build)
+    if len(rows) >= 2 and rows[-1]["vectors_per_s"] < rows[0]["vectors_per_s"] / 6:
+        fails.append("construction throughput collapsed with n")
+    return fails
+
+
+if __name__ == "__main__":
+    for f in validate(run()):
+        print("CLAIM-FAIL:", f)

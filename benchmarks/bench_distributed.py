@@ -1,0 +1,83 @@
+"""Beyond-paper: distributed shard-and-merge search (the production layout)
+-- recall + dc cost vs shard count, and quorum degradation. Runs in a
+subprocess with placeholder devices so the bench process keeps 1 device."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+from benchmarks.common import QUICK, emit
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import ShardedNavix
+from repro.core.navix import NavixConfig, NavixIndex
+from repro.core.distances import brute_force_topk
+from repro.data.synthetic import gaussian_mixture
+
+n = int(os.environ.get("BENCH_N", "4000"))
+X, _, centers = gaussian_mixture(n, 32, 16, seed=0)
+rng = np.random.default_rng(0)
+Q = (centers[rng.integers(0, 16, size=8)] + 0.25*rng.normal(size=(8, 32))).astype(np.float32)
+mask = rng.random(n) < 0.3
+cfg = NavixConfig(m_u=8, ef_construction=64)
+td, ti = brute_force_topk(jnp.asarray(Q), jnp.asarray(X), 10, "l2", mask=jnp.asarray(mask))
+ti = np.asarray(ti)
+
+def recall(ids):
+    ids = np.asarray(ids)
+    hits = sum(len(set(ids[i][ids[i]>=0].tolist()) & set(ti[i][ti[i]>=0].tolist())) for i in range(len(Q)))
+    return hits / max((ti>=0).sum(), 1)
+
+out = []
+for model in (2, 4, 8):
+    mesh = jax.make_mesh((8//model, model), ("data", "model"))
+    sn = ShardedNavix.build(X, cfg, mesh)
+    d, ids = sn.search(Q, mask, k=10, efs=40)
+    rec = recall(ids)
+    # quorum: drop one shard
+    alive = np.ones(model, bool); alive[-1] = False
+    d2, ids2 = sn.search(Q, mask, k=10, efs=40, alive=alive, quorum=model-1)
+    out.append({"shards": model, "recall": rec, "recall_quorum": recall(ids2)})
+print(json.dumps(out))
+"""
+
+
+def run() -> list[dict]:
+    env = dict(PYTHONPATH="src", PATH="/usr/bin:/bin", HOME="/tmp",
+               BENCH_N="2000" if QUICK else "4000")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], timeout=1800,
+                         capture_output=True, text=True,
+                         cwd=pathlib.Path(__file__).parent.parent, env=env)
+    if out.returncode != 0:
+        return [{"bench": "distributed_search", "error": out.stderr[-300:]}]
+    rows = [dict(bench="distributed_search", **r)
+            for r in json.loads(out.stdout.strip().splitlines()[-1])]
+    emit(rows, "distributed_search")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    fails = []
+    for r in rows:
+        if "error" in r:
+            fails.append(f"distributed bench failed: {r['error']}")
+            return fails
+        if r["recall"] < 0.85:
+            fails.append(f"sharded recall low: {r}")
+        # killing 1 of S shards loses ~1/S of the database; recall should
+        # degrade gracefully toward that bound, not collapse below it
+        alive_frac = (r["shards"] - 1) / r["shards"]
+        if r["recall_quorum"] < r["recall"] * alive_frac - 0.12:
+            fails.append(f"quorum degradation too steep: {r}")
+    return fails
+
+
+if __name__ == "__main__":
+    for f in validate(run()):
+        print("CLAIM-FAIL:", f)

@@ -1,0 +1,100 @@
+"""Figure 8: vector search time / dc vs selectivity per fixed heuristic +
+adaptive-global, uncorrelated workloads at 95% recall.
+
+Claims validated:
+  * onehop-s cheapest at high selectivity but recall collapses below ~0.3;
+  * directed beats blind in the medium band (s-dc edge), blind wins at very
+    low selectivity (no ordering overhead);
+  * adaptive-g tracks the best fixed heuristic's envelope.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, measure, n_queries
+from benchmarks.datasets import uncorrelated_dataset
+from repro.configs.navix_paper import SELECTIVITIES
+
+HEURISTICS = ("onehop_s", "directed", "blind", "adaptive_g")
+
+
+def run(dataset: str = "tiny-like") -> list[dict]:
+    idx, X, _, queries = uncorrelated_dataset(dataset)
+    queries = queries[: n_queries()]
+    n = idx.graph.n
+    rng = np.random.default_rng(11)
+    rows = []
+    for sigma in SELECTIVITIES:
+        mask = rng.permutation(n) < sigma * n      # id-range-like uniform S
+        for h in HEURISTICS:
+            m = measure(idx, queries, mask, h)
+            rows.append({
+                "bench": "fig8_heuristics", "dataset": dataset,
+                "sigma": round(sigma, 3), "heuristic": h, "efs": m.efs,
+                "recall": round(m.recall, 4),
+                "ms_per_query": round(m.ms_per_query, 2),
+                "t_dc": round(m.t_dc, 1), "s_dc": round(m.s_dc, 1),
+                "reached_95": m.reached_target,
+            })
+    emit(rows, f"fig8_{dataset}")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    """Machine-checked paper claims; returns failure strings."""
+    fails = []
+    by = {(r["sigma"], r["heuristic"]): r for r in rows}
+    sig_hi = max(r["sigma"] for r in rows)
+    sig_lo = min(r["sigma"] for r in rows)
+    # onehop-s cheapest (by dc) at the highest selectivity among reaching-95
+    hi = {h: by[(sig_hi, h)] for h in HEURISTICS}
+    if hi["onehop_s"]["reached_95"]:
+        others = [hi[h]["t_dc"] for h in ("directed", "blind")]
+        if not hi["onehop_s"]["t_dc"] <= min(others) * 1.1:
+            fails.append("onehop-s not cheapest at high sigma")
+    # onehop-s must fail (or need huge efs) somewhere at low sigma
+    low_fail = any(not by[(s, "onehop_s")]["reached_95"] or
+                   by[(s, "onehop_s")]["recall"] < 0.95
+                   for s in (0.05, 0.03, 0.01) if (s, "onehop_s") in by)
+    if not low_fail:
+        fails.append("onehop-s did not degrade at low sigma")
+    # blind: t_dc == s_dc everywhere
+    for r in rows:
+        if r["heuristic"] == "blind" and abs(r["t_dc"] - r["s_dc"]) > 1e-6:
+            fails.append("blind t_dc != s_dc")
+            break
+    # directed s-dc <= blind s-dc in the medium band (search effectiveness)
+    for s in (0.3, 0.2, 0.1):
+        if (s, "directed") in by and (s, "blind") in by:
+            if by[(s, "directed")]["s_dc"] > by[(s, "blind")]["s_dc"] * 1.3:
+                fails.append(f"directed not effective at sigma={s}")
+    # adaptive-g "follows the lowest-LATENCY fixed heuristic in almost all
+    # ranges" (paper 5.2 -- latency, not dc: directed's ordering dc hits
+    # contiguous neighbor rows and is cheap in wall time, which is the
+    # paper's own argument). Strict at the regime extremes; off-envelope
+    # (>2x best fixed latency) allowed in at most ~a third of the sweep
+    # (the paper notes its own exception band below the 50% threshold).
+    off = 0
+    total = 0
+    for s in SELECTIVITIES:
+        fixed = [by[(round(s, 3), h)] for h in ("onehop_s", "directed", "blind")
+                 if (round(s, 3), h) in by and by[(round(s, 3), h)]["reached_95"]]
+        ag = by.get((round(s, 3), "adaptive_g"))
+        if not (fixed and ag and ag["reached_95"]):
+            continue
+        total += 1
+        best = min(f["ms_per_query"] for f in fixed)
+        if ag["ms_per_query"] > 2.0 * best:
+            off += 1
+            if s >= 0.5 or s <= 0.03:
+                fails.append(f"adaptive-g off-envelope at extreme sigma={s}")
+    if total and off / total > 0.34:
+        fails.append(f"adaptive-g off-envelope in {off}/{total} of ranges")
+    return fails
+
+
+if __name__ == "__main__":
+    rows = run()
+    for f in validate(rows):
+        print("CLAIM-FAIL:", f)

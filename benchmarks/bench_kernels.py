@@ -1,0 +1,108 @@
+"""Section 4.2.1 / Appendix A.3 analogue: in-buffer-manager (zero-copy)
+distance computation, plus kernel rooflines.
+
+CPU measurement: the fused gather+distance (one jit: gather and distance in
+a single fusion, data never round-trips through an intermediate buffer) vs
+copy-then-compute (two jits with a materialized gathered matrix between
+them -- the 'copy into operator-local buffer' the paper eliminates).
+
+TPU roofline: analytic bytes/flops of the Pallas kernels at serving shapes
+(the kernels themselves are validated in interpret mode by the tests)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.common.hardware import TARGET
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    n, d, k = (20000, 256, 512) if not QUICK else (5000, 128, 256)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, n, size=k), jnp.int32)
+
+    @jax.jit
+    def fused(q, X, ids):
+        rows = X[ids]
+        diff = rows - q
+        return jnp.sum(diff * diff, axis=-1)
+
+    @jax.jit
+    def gather_only(X, ids):
+        return X[ids] + 0.0          # forces materialization
+
+    @jax.jit
+    def dist_only(q, rows):
+        diff = rows - q
+        return jnp.sum(diff * diff, axis=-1)
+
+    fused_us = _time(lambda a, b, c: fused(a, b, c), q, X, ids)
+
+    def copy_then(qq, XX, ii):
+        return dist_only(qq, gather_only(XX, ii))
+    copy_us = _time(copy_then, q, X, ids)
+
+    rows = [{
+        "bench": "a3_inbm_distance", "variant": "fused_zero_copy",
+        "us_per_call": round(fused_us, 1), "k": k, "d": d,
+    }, {
+        "bench": "a3_inbm_distance", "variant": "copy_then_compute",
+        "us_per_call": round(copy_us, 1), "k": k, "d": d,
+        "slowdown_vs_fused": round(copy_us / fused_us, 2),
+    }]
+
+    # --- analytic TPU kernel rooflines at serving shapes -----------------
+    for name, (b, nn, dd, bytes_per_elt) in {
+        "distance_matrix_bf16": (128, 1_000_000, 128, 2),
+        "quantized_distance_int8": (128, 1_000_000, 128, 1),
+    }.items():
+        flops = 2 * b * nn * dd
+        bts = nn * dd * bytes_per_elt + b * dd * 2 + b * nn * 4
+        t_c = flops / TARGET.peak_bf16_flops
+        t_m = bts / TARGET.hbm_bandwidth
+        rows.append({
+            "bench": "kernel_roofline", "variant": name,
+            "flops": flops, "hbm_bytes": bts,
+            "t_compute_us": round(t_c * 1e6, 1),
+            "t_memory_us": round(t_m * 1e6, 1),
+            "bound": "compute" if t_c > t_m else "memory",
+            "arith_intensity": round(flops / bts, 2),
+        })
+    emit(rows, "a3_kernels")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    fails = []
+    fused = next(r for r in rows if r["variant"] == "fused_zero_copy")
+    copy = next(r for r in rows if r["variant"] == "copy_then_compute")
+    if copy["us_per_call"] < fused["us_per_call"] * 0.95:
+        fails.append("fused gather+distance not faster than copy-then-compute")
+    # int8 kernel must raise arithmetic intensity vs bf16
+    ks = {r["variant"]: r for r in rows if r["bench"] == "kernel_roofline"}
+    if ks["quantized_distance_int8"]["arith_intensity"] <= \
+            ks["distance_matrix_bf16"]["arith_intensity"]:
+        fails.append("int8 kernel did not improve arithmetic intensity")
+    return fails
+
+
+if __name__ == "__main__":
+    for f in validate(run()):
+        print("CLAIM-FAIL:", f)

@@ -1,0 +1,122 @@
+"""Figure 16/20 + Table 7: prefiltering (NaviX) vs postfiltering, and the
+prefilter-vs-search time split.
+
+Postfiltering (PGVectorScale/VBase style) streams unfiltered neighbors and
+verifies; it wins at very high selectivity (cheap verification, no upfront
+Q_S scan) and degrades sharply as selectivity falls. Prefiltering pays Q_S
+upfront and stays robust."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, measure, n_queries
+from benchmarks.datasets import wiki_dataset
+from repro.data.synthetic import make_queries, person_chunk_plan, uncorrelated_plan
+from repro.query.operators import evaluate
+
+
+def run() -> list[dict]:
+    idx, data = wiki_dataset()
+    nq = n_queries()
+    queries = make_queries(data, nq, "uncorrelated", seed=31)
+    rows = []
+    for sigma in (0.9, 0.5, 0.3, 0.1, 0.05, 0.01):
+        plan = uncorrelated_plan(sigma, data.n_chunks)
+        qres = evaluate(plan, data.store)
+        mask = qres.mask
+        # --- prefiltering: NaviX ---
+        m = measure(idx, queries, mask, "adaptive_local")
+        rows.append({
+            "bench": "fig16_pre_vs_post", "system": "navix_prefilter",
+            "sigma": sigma, "recall": round(m.recall, 4),
+            "prefilter_ms": round(qres.seconds * 1e3, 3),
+            "search_ms": round(m.ms_per_query, 2),
+            "total_ms": round(qres.seconds * 1e3 + m.ms_per_query, 2),
+            "t_dc": round(m.t_dc, 1), "verifications": 0,
+        })
+        # --- postfiltering ---
+        _, true_ids = idx.brute_force(queries, k=100, semimask=mask)
+        hits = denom = 0
+        times, verifs, tdc = [], 0, 0
+        for qi, q in enumerate(queries):
+            t0 = time.perf_counter()
+            d, ids, stats = idx.search_postfilter(q, k=100, semimask=mask)
+            times.append(time.perf_counter() - t0)
+            verifs += stats.verifications
+            tdc += stats.t_dc
+            t = set(int(x) for x in np.asarray(true_ids)[qi] if x >= 0)
+            hits += len(set(int(x) for x in ids if x >= 0) & t)
+            denom += len(t)
+        rows.append({
+            "bench": "fig16_pre_vs_post", "system": "postfilter",
+            "sigma": sigma, "recall": round(hits / max(denom, 1), 4),
+            "prefilter_ms": 0.0,
+            "search_ms": round(float(np.mean(times) * 1e3), 2),
+            "total_ms": round(float(np.mean(times) * 1e3), 2),
+            "t_dc": round(tdc / nq, 1),
+            "verifications": round(verifs / nq, 1),
+        })
+    emit(rows, "fig16_postfilter")
+    return rows
+
+
+def run_split() -> list[dict]:
+    """Table 7: prefilter vs vector-search share, uncorrelated (cheap id
+    filter) vs negatively correlated (1-hop join) Q_S."""
+    idx, data = wiki_dataset()
+    nq = n_queries()
+    rows = []
+    person_frac = data.chunk_is_person.mean()
+    for workload, sigmas in (("uncorrelated", (0.9, 0.5, 0.3, 0.1, 0.01)),
+                             ("negative_join", (0.229, 0.15, 0.099, 0.05))):
+        for sigma in sigmas:
+            if workload == "uncorrelated":
+                plan = uncorrelated_plan(sigma, data.n_chunks)
+                queries = make_queries(data, nq, "uncorrelated", seed=41)
+            else:
+                plan = person_chunk_plan(data.store,
+                                         min(sigma / person_frac, 1.0))
+                queries = make_queries(data, nq, "nonperson", seed=42)
+            # prefilter time: repeat the Q_S evaluation like a fresh query
+            t0 = time.perf_counter()
+            for _ in range(3):
+                qres = evaluate(plan, data.store)
+            pf_ms = (time.perf_counter() - t0) / 3 * 1e3
+            m = measure(idx, queries, qres.mask, "adaptive_local")
+            total = pf_ms + m.ms_per_query
+            rows.append({
+                "bench": "table7_split", "workload": workload,
+                "sigma": round(float(qres.mask.mean()), 4),
+                "prefilter_ms": round(pf_ms, 3),
+                "search_ms": round(m.ms_per_query, 2),
+                "prefilter_pct": round(100 * pf_ms / total, 1),
+                "recall": round(m.recall, 4),
+            })
+    emit(rows, "table7_split")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    fails = []
+    post = {r["sigma"]: r for r in rows if r["system"] == "postfilter"}
+    pre = {r["sigma"]: r for r in rows if r["system"] == "navix_prefilter"}
+    # postfilter verification cost explodes as sigma falls
+    if post and post[0.01]["verifications"] <= post[0.9]["verifications"] * 3:
+        fails.append("postfilter verifications did not grow at low sigma")
+    # prefilter more robust: dc ratio lo/hi much smaller than postfilter's
+    if post and pre:
+        post_ratio = max(post[0.01]["t_dc"], 1) / max(post[0.9]["t_dc"], 1)
+        pre_ratio = max(pre[0.01]["t_dc"], 1) / max(pre[0.9]["t_dc"], 1)
+        if not pre_ratio < post_ratio:
+            fails.append(f"prefilter not more robust: {pre_ratio} vs {post_ratio}")
+    return fails
+
+
+if __name__ == "__main__":
+    rows = run()
+    run_split()
+    for f in validate(rows):
+        print("CLAIM-FAIL:", f)

@@ -1,0 +1,135 @@
+"""Shared benchmark harness.
+
+Implements the paper's measurement protocol (Section 5.1.4/5.1.7):
+  * every workload has 50 query vectors in the paper; we default to a
+    laptop-scale subset (configurable);
+  * recall targeting: efs is grown until recall@k >= target (0.95) against
+    the exact brute-force oracle, then latency/dc are reported at that efs;
+  * per query: one warm-up execution per compiled shape, then timed runs;
+  * latency is end-to-end per query; distance computations (t-dc / s-dc)
+    are reported as the hardware-independent primary metric (the paper's
+    own drill-down, Fig. 9).
+
+Index/dataset construction is cached under experiments/cache/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+from repro.core.graph import HnswGraph
+from repro.core.navix import NavixConfig, NavixIndex
+
+CACHE = pathlib.Path(os.environ.get("REPRO_CACHE", "experiments/cache"))
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+EFS_GRID = (100, 200, 400, 800)
+TARGET_RECALL = 0.95
+K = 100
+
+
+def n_queries() -> int:
+    return 6 if QUICK else 15
+
+
+def cached_index(name: str, vectors: np.ndarray, cfg: NavixConfig
+                 ) -> NavixIndex:
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"{name}_n{len(vectors)}_m{cfg.m_u}.npz"
+    if f.exists():
+        z = np.load(f)
+        graph = HnswGraph(
+            lower=jnp.asarray(z["lower"]), lower_deg=jnp.asarray(z["lower_deg"]),
+            upper=jnp.asarray(z["upper"]), upper_deg=jnp.asarray(z["upper_deg"]),
+            upper_ids=jnp.asarray(z["upper_ids"]),
+            entry_pos=jnp.asarray(z["entry_pos"]),
+            vectors=jnp.asarray(z["vectors"]))
+        return NavixIndex.from_graph(graph, cfg)
+    idx, stats = NavixIndex.create(vectors, cfg)
+    g = idx.graph
+    np.savez(f, lower=np.asarray(g.lower), lower_deg=np.asarray(g.lower_deg),
+             upper=np.asarray(g.upper), upper_deg=np.asarray(g.upper_deg),
+             upper_ids=np.asarray(g.upper_ids),
+             entry_pos=np.asarray(g.entry_pos),
+             vectors=np.asarray(g.vectors))
+    (CACHE / f"{name}_build.txt").write_text(
+        f"seconds={stats.seconds}\ndc={stats.search_dc}\nn={stats.n}\n")
+    return idx
+
+
+@dataclasses.dataclass
+class Measurement:
+    heuristic: str
+    sigma: float
+    efs: int
+    recall: float
+    ms_per_query: float
+    t_dc: float
+    s_dc: float
+    picks: np.ndarray
+    reached_target: bool
+
+
+def measure(index: NavixIndex, queries: np.ndarray, mask: Optional[np.ndarray],
+            heuristic: str, k: int = K, target: float = TARGET_RECALL,
+            efs_grid=EFS_GRID) -> Measurement:
+    """Grow efs until recall target; report metrics at that efs."""
+    sel = None if mask is None else mask
+    _, true_ids = index.brute_force(queries, k=k, semimask=sel)
+    true_ids = np.asarray(true_ids)
+    sigma = 1.0 if mask is None else float(np.mean(mask))
+    last = None
+    for efs in efs_grid:
+        got, times, t_dc, s_dc = [], [], 0, 0
+        picks = np.zeros(3)
+        # warm-up compile on the first query
+        index.search(queries[0], k=k, efs=efs, semimask=sel,
+                     heuristic=heuristic)
+        for q in queries:
+            t0 = time.perf_counter()
+            r = index.search(q, k=k, efs=efs, semimask=sel,
+                             heuristic=heuristic)
+            r.dists.block_until_ready()
+            times.append(time.perf_counter() - t0)
+            got.append(np.asarray(r.ids))
+            t_dc += int(r.stats.t_dc)
+            s_dc += int(r.stats.s_dc)
+            picks += np.asarray(r.stats.picks)
+        recall = index.recall(np.stack(got), true_ids)
+        last = Measurement(
+            heuristic=heuristic, sigma=sigma, efs=efs, recall=recall,
+            ms_per_query=float(np.mean(times) * 1e3),
+            t_dc=t_dc / len(queries), s_dc=s_dc / len(queries),
+            picks=picks, reached_target=recall >= target)
+        if recall >= target:
+            break
+    return last
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Append rows to the global CSV sink (printed by benchmarks.run)."""
+    import csv
+    import sys
+    out = pathlib.Path("experiments") / "bench" / f"{name}.csv"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    if rows:
+        fields: list[str] = []
+        for r in rows:
+            for k in r:
+                if k not in fields:
+                    fields.append(k)
+        with open(out, "w", newline="") as fh:
+            w = csv.DictWriter(fh, fieldnames=fields, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    sys.stdout.flush()

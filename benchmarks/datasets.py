@@ -1,0 +1,50 @@
+"""Benchmark datasets: laptop-scale analogues of the paper's Table 2 +
+the Wiki-like graph for correlated/join workloads."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+from benchmarks.common import QUICK, cached_index
+from repro.configs.navix_paper import BENCH_INDEX
+from repro.core.navix import NavixConfig
+from repro.data.synthetic import WikiLike, gaussian_mixture, make_wiki_like
+
+
+def scale(n: int) -> int:
+    return max(2000, n // 4) if QUICK else n
+
+
+@functools.lru_cache(maxsize=None)
+def uncorrelated_dataset(name: str = "tiny-like"):
+    """Clustered vectors + uncorrelated query set (paper's GIST/Tiny/Arxiv
+    regime: object embeddings, id-range filters)."""
+    sizes = {"gist-like": (scale(16000), 96, "l2", 24),
+             "tiny-like": (scale(24000), 48, "l2", 32),
+             "arxiv-like": (scale(16000), 64, "cos", 40)}
+    n, d, metric, n_clusters = sizes[name]
+    X, labels, centers = gaussian_mixture(n, d, n_clusters, seed=17)
+    cfg = NavixConfig(m_u=BENCH_INDEX.m_u,
+                      ef_construction=BENCH_INDEX.ef_construction,
+                      metric=metric)
+    idx = cached_index(name, X, cfg)
+    rng = np.random.default_rng(5)
+    qi = centers[rng.integers(0, n_clusters, size=50)]
+    queries = (qi + 0.3 * rng.normal(size=qi.shape)).astype(np.float32)
+    return idx, X, labels, queries
+
+
+@functools.lru_cache(maxsize=None)
+def wiki_dataset():
+    """The Wiki-analogue graph dataset (joins + correlations)."""
+    data = make_wiki_like(n_person=scale(700), n_resource=scale(3200),
+                         chunks_per_person=6, chunks_per_resource=3,
+                         d=64, seed=3)
+    cfg = NavixConfig(m_u=BENCH_INDEX.m_u,
+                      ef_construction=BENCH_INDEX.ef_construction,
+                      metric="cos")
+    idx = cached_index("wiki-like", data.embeddings, cfg)
+    return idx, data

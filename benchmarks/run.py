@@ -1,0 +1,78 @@
+"""Benchmark orchestrator -- one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` style CSV rows (each module also writes
+its full table under experiments/bench/*.csv) and finishes with a
+paper-claim validation summary. Set REPRO_BENCH_QUICK=1 for a fast pass.
+
+  fig8      heuristics vs selectivity      (Figure 8)
+  dc        t-dc vs s-dc                   (Figure 9; folded into fig8 cols)
+  adaptive  adaptive-g vs NaviX + ce       (Figures 10/11, Tables 4/5)
+  postfilter pre vs post + time split      (Figures 16/20, Table 7)
+  construction build throughput/sizes      (Table 6, Section 5.1.6)
+  quantized int8 + re-rank                 (Figure 18 regime)
+  kernels   in-BM zero-copy + rooflines    (Section 4.2.1, Appendix A.3)
+  distributed shard-and-merge + quorum     (beyond paper)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig8,adaptive,postfilter,construction,"
+                         "quantized,kernels,distributed")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_adaptive, bench_construction,
+                            bench_distributed, bench_heuristics,
+                            bench_kernels, bench_postfilter, bench_quantized)
+
+    def post_run():                 # two tables (Fig 16 + Table 7)
+        rows = bench_postfilter.run()
+        bench_postfilter.run_split()
+        return rows
+
+    suites = {
+        "fig8": (bench_heuristics.run, bench_heuristics.validate),
+        "adaptive": (bench_adaptive.run, bench_adaptive.validate),
+        "postfilter": (post_run, bench_postfilter.validate),
+        "construction": (bench_construction.run, bench_construction.validate),
+        "quantized": (bench_quantized.run, bench_quantized.validate),
+        "kernels": (bench_kernels.run, bench_kernels.validate),
+        "distributed": (bench_distributed.run, bench_distributed.validate),
+    }
+
+    wanted = (args.only.split(",") if args.only else list(suites))
+    all_fails: list[str] = []
+    for name in wanted:
+        run_fn, val_fn = suites[name]
+        print(f"=== {name} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            rows = run_fn()
+            fails = val_fn(rows) if val_fn else []
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            fails = [f"{name} crashed: {e}"]
+        for f in fails:
+            print(f"CLAIM-FAIL[{name}]: {f}")
+        all_fails += fails
+        print(f"=== {name} done in {time.perf_counter()-t0:.0f}s ===",
+              flush=True)
+
+    print("\n==== paper-claim validation summary ====")
+    if all_fails:
+        for f in all_fails:
+            print("FAIL:", f)
+        sys.exit(1)
+    print(f"all claims validated across {len(wanted)} suites")
+
+
+if __name__ == "__main__":
+    main()

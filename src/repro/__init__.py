@@ -1,0 +1,14 @@
+"""NaviX-JAX: a native vector index + unified training/serving framework.
+
+Reproduction (and beyond-paper optimization) of:
+  "NaviX: A Native Vector Index Design for Graph DBMSs With Robust
+   Predicate-Agnostic Search Performance" (Sehgal & Salihoglu, 2025).
+
+Public API entry points:
+  repro.core.navix      -- NavixIndex: build / (filtered) search
+  repro.query           -- selection subqueries -> semimasks
+  repro.configs         -- assigned architecture registry (--arch <id>)
+  repro.launch          -- mesh / dryrun / train / serve
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,60 @@
+"""Target-hardware constants and roofline helpers.
+
+The deployment target is a TPU v5e pod (16x16 = 256 chips per pod); the
+multi-pod configuration is 2 pods = 512 chips. This container runs on CPU,
+so these constants parameterize the *analytical* roofline derived from
+compiled HLO (see repro.launch.roofline), never wall-clock measurement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float   # FLOP/s per chip
+    hbm_bandwidth: float     # bytes/s per chip
+    ici_link_bandwidth: float  # bytes/s per link (one direction)
+    ici_links: int           # ICI links per chip (2D torus: 4)
+    hbm_bytes: int           # HBM capacity per chip
+    vmem_bytes: int          # VMEM per core
+
+
+# Values given by the assignment: 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI.
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+TARGET = TPU_V5E
+
+# MXU-native tile sizes (used to align Pallas BlockSpecs).
+MXU_DIM = 128
+VPU_LANES = 128
+VPU_SUBLANES = 8
+
+
+def compute_time_s(flops: float, chips: int, chip: ChipSpec = TARGET) -> float:
+    """Roofline compute term: HLO_FLOPs / (chips * peak)."""
+    return flops / (chips * chip.peak_bf16_flops)
+
+
+def memory_time_s(hbm_bytes: float, chips: int, chip: ChipSpec = TARGET) -> float:
+    """Roofline memory term: HLO bytes-accessed / (chips * HBM bw)."""
+    return hbm_bytes / (chips * chip.hbm_bandwidth)
+
+
+def collective_time_s(coll_bytes: float, chips: int, chip: ChipSpec = TARGET) -> float:
+    """Roofline collective term: collective bytes / (chips * link bw).
+
+    Per the assignment's convention this uses a single-link denominator per
+    chip, i.e. it is conservative for multi-link torus routing.
+    """
+    return coll_bytes / (chips * chip.ici_link_bandwidth)

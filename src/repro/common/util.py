@@ -1,0 +1,73 @@
+"""Small shared utilities: timing, rounding, PRNG fan-out, pytree sizing."""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import time
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))
+
+
+@contextlib.contextmanager
+def timer(sink: dict, key: str) -> Iterator[None]:
+    t0 = time.perf_counter()
+    yield
+    sink[key] = sink.get(key, 0.0) + (time.perf_counter() - t0)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all arrays in a pytree (concrete or ShapeDtypeStruct)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_params(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves if hasattr(l, "shape"))
+
+
+def split_key(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.3g}{unit}"
+        n /= 1000.0
+    return f"{n:.3g}Q"
+
+
+def assert_no_nans(tree: Any, where: str = "") -> None:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            if bool(jnp.any(~jnp.isfinite(leaf))):
+                raise AssertionError(f"non-finite values at {where}{jax.tree_util.keystr(path)}")

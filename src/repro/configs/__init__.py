@@ -1,0 +1,8 @@
+"""Assigned-architecture registry. Importing this package registers all 10
+architectures (+ the paper's own index configurations) with
+repro.config.base; resolve them via get_arch("<id>") / --arch <id>."""
+
+from repro.configs import (bst, deepfm, dien, gemma2_9b, gemma_7b,
+                           granite_moe, kimi_k2, meshgraphnet, qwen15_05b,
+                           wide_deep)  # noqa: F401
+from repro.configs import navix_paper  # noqa: F401

@@ -1,0 +1,5 @@
+"""The paper's primary contribution: HNSW index + predicate-agnostic
+prefiltered search with fixed and adaptive heuristics."""
+
+from repro.core.navix import NavixIndex, NavixConfig, SearchParams  # noqa: F401
+from repro.core.heuristics import Heuristic  # noqa: F401

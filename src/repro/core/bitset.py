@@ -1,0 +1,96 @@
+"""Packed-bitset semimask primitives.
+
+The paper passes the selected set S from the selection subquery to the kNN
+search operator as a *node semimask* (Kuzu's sideways information passing).
+Here a semimask over ``n`` nodes is a packed ``uint32[ceil(n/32)]`` bitset.
+Local selectivity checks are pure bit tests -- zero distance computations,
+exactly matching Section 3.2 of the paper.
+
+All functions are jit-/vmap-compatible; ids < 0 are treated as padding and
+test as False / are never set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def n_words(n: int) -> int:
+    return -(-n // WORD_BITS)
+
+
+def pack(mask: jax.Array) -> jax.Array:
+    """bool[n] -> uint32[ceil(n/32)] (little-endian bit order within words)."""
+    n = mask.shape[-1]
+    pad = n_words(n) * WORD_BITS - n
+    m = jnp.pad(mask.astype(jnp.uint32), [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    m = m.reshape(mask.shape[:-1] + (n_words(n), WORD_BITS))
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return (m * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack(bits: jax.Array, n: int) -> jax.Array:
+    """uint32[W] -> bool[n]."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    expanded = (bits[..., :, None] >> shifts[None, :]) & jnp.uint32(1)
+    flat = expanded.reshape(bits.shape[:-1] + (-1,))
+    return flat[..., :n].astype(bool)
+
+
+def test(bits: jax.Array, ids: jax.Array) -> jax.Array:
+    """Test membership bits for an int32 id vector. ids<0 -> False."""
+    safe = jnp.maximum(ids, 0)
+    word = safe >> 5
+    bit = (safe & 31).astype(jnp.uint32)
+    hit = (bits[word] >> bit) & jnp.uint32(1)
+    return jnp.where(ids >= 0, hit.astype(bool), False)
+
+
+def set_bits(bits: jax.Array, ids: jax.Array) -> jax.Array:
+    """Set bits for (assumed-distinct) ids; ids<0 ignored.
+
+    Distinctness matters: duplicate ids would carry into neighboring bits
+    (the OR is realized as a sum of distinct powers of two). Callers dedupe
+    their expansion lists before marking visited, which is also what the
+    sequential algorithm does implicitly.
+    """
+    already = test(bits, ids)
+    fresh = (ids >= 0) & (~already)
+    safe = jnp.maximum(ids, 0)
+    word = jnp.where(fresh, safe >> 5, 0)
+    val = jnp.where(fresh, (jnp.uint32(1) << (safe & 31).astype(jnp.uint32)), jnp.uint32(0))
+    return bits.at[word].add(val)
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Per-word popcount (uint32)."""
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def count(bits: jax.Array) -> jax.Array:
+    """Total number of set bits."""
+    return popcount(bits).astype(jnp.int32).sum()
+
+
+def count_members(bits: jax.Array, ids: jax.Array) -> jax.Array:
+    """How many of the (padded) ids are set -- the sigma_l numerator."""
+    return test(bits, ids).astype(jnp.int32).sum()
+
+
+def full_mask(n: int, value: bool = True) -> jax.Array:
+    if value:
+        w = n_words(n)
+        bits = np.full(w, 0xFFFFFFFF, dtype=np.uint32)
+        # clear tail padding bits so count() == n
+        tail = n - (w - 1) * WORD_BITS
+        if tail < WORD_BITS:
+            bits[-1] = (1 << tail) - 1
+        return jnp.asarray(bits)
+    return jnp.zeros(n_words(n), dtype=jnp.uint32)

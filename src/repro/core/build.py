@@ -1,0 +1,329 @@
+"""HNSW construction (paper Algorithm 1 / Section 4.1).
+
+NaviX builds a 2-level index: ``G_U`` over a ``sample_rate`` (5%) sample
+with max degree ``M_U``, and ``G_L`` over all vectors with max degree
+``M_L = 2 * M_U``. Kuzu builds with morsel-driven parallelism and tolerates
+benign races between worker threads; the JAX adaptation is *batch-parallel
+insertion*: each batch (morsel) of vectors searches a frozen snapshot of the
+graph (vmapped), then all edge updates are merged functionally. Intra-batch
+inserts do not see each other -- the same staleness the paper's data race
+produces, with the same justification (HNSW is approximate; quality is
+validated by recall tests).
+
+Neighbor selection uses the relative-neighborhood (RNG) pruning rule of
+Toussaint [43] exactly as in Algorithm 1: candidate ``c_j`` (in ascending
+distance from ``v``) is kept iff it is closer to ``v`` than to every
+previously kept candidate. The same rule shrinks overflowing adjacency
+lists when backward edges are added.
+
+Insertion order: upper-sample nodes are inserted into the lower level
+first (phase A), so that upper-layer entry points always exist in the
+lower level -- the batched equivalent of the paper inserting a node into
+every level it belongs to at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import bitset
+from repro.core.distances import dist_matrix, normalize, point_dist, validate_metric
+from repro.core.graph import HnswGraph
+from repro.core.heuristics import Heuristic
+from repro.core.search import SearchParams, _take_first, beam_search_lower
+
+
+class BuildParams(NamedTuple):
+    m_u: int = 16                  # upper max degree; M_L = 2 * m_u
+    ef_construction: int = 100
+    sample_rate: float = 0.05
+    metric: str = "l2"
+    batch_size: int = 256          # morsel size (paper: 2048 rows / thread)
+    new_edge_cap: int = 8          # max backward edges per target per batch
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BuildStats:
+    n: int = 0
+    n_upper: int = 0
+    seconds: float = 0.0
+    search_dc: int = 0             # distance computations in insert searches
+    batches: int = 0
+
+
+# ---------------------------------------------------------------------------
+# RNG (relative neighborhood) pruning -- Toussaint's rule, vectorized
+# ---------------------------------------------------------------------------
+
+
+def rng_prune_mask(cand_d: jax.Array, pd: jax.Array, valid: jax.Array,
+                   m: int) -> jax.Array:
+    """keep[j] per Algorithm 1's SelectNeighbors/RNGShrink.
+
+    ``cand_d``: f32[C] distances candidate->v, ascending. ``pd``: f32[C, C]
+    pairwise candidate distances. Keeps at most ``m``.
+    """
+    c = cand_d.shape[0]
+
+    def body(i, keep):
+        # min distance from candidate i to any already-kept candidate
+        mind = jnp.where(keep, pd[i], jnp.inf).min()
+        ok = valid[i] & (keep.sum() < m) & (cand_d[i] < mind)
+        return keep.at[i].set(ok)
+
+    return lax.fori_loop(0, c, body, jnp.zeros((c,), bool))
+
+
+def _prune_forward(v: jax.Array, cand_ids: jax.Array, cand_d: jax.Array,
+                   vectors: jax.Array, m: int, metric: str) -> jax.Array:
+    """Select <=m forward neighbors from an ascending beam via RNG rule."""
+    X = vectors[jnp.maximum(cand_ids, 0)]
+    pd = dist_matrix(X, X, metric)
+    keep = rng_prune_mask(cand_d, pd, cand_ids >= 0, m)
+    return _take_first(keep, cand_ids, m)
+
+
+# ---------------------------------------------------------------------------
+# one level of construction
+# ---------------------------------------------------------------------------
+
+
+def _graph_view(adj, deg, vectors) -> HnswGraph:
+    """Wrap one level's adjacency as an HnswGraph for beam_search_lower."""
+    return HnswGraph(
+        lower=adj, lower_deg=deg,
+        upper=jnp.full((1, 1), -1, jnp.int32),
+        upper_deg=jnp.zeros((1,), jnp.int32),
+        upper_ids=jnp.zeros((1,), jnp.int32),
+        entry_pos=jnp.int32(0),
+        vectors=vectors,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("efc", "m_fwd", "m_cap", "p_cap",
+                                             "metric"), donate_argnums=(0, 1))
+def _insert_batch(adj, deg, vectors, batch_ids, seeds, efc, m_fwd, m_cap,
+                  p_cap, metric):
+    """Insert a batch of nodes into one level. Returns (adj, deg, dc).
+
+    ``batch_ids`` may contain -1 padding lanes (batches are padded to a
+    small set of fixed sizes so jit compiles only a couple of variants);
+    padded lanes run a throwaway search and all their writes are dropped.
+    """
+    n = vectors.shape[0]
+    bsz = batch_ids.shape[0]
+    lane_ok = batch_ids >= 0
+    safe_ids = jnp.maximum(batch_ids, 0)
+    view = _graph_view(adj, deg, vectors)
+    params = SearchParams(k=efc, efs=efc, heuristic=int(Heuristic.ONEHOP_A),
+                          metric=metric)
+    full = bitset.full_mask(n)
+
+    def one(vid, seed):
+        q = vectors[vid]
+        beam_d, beam_id, stats = beam_search_lower(view, q, full, seed[None],
+                                                   params)
+        # the node being inserted may already appear (re-insert safety)
+        beam_id = jnp.where(beam_id == vid, -1, beam_id)
+        beam_d = jnp.where(beam_id >= 0, beam_d, jnp.inf)
+        fwd = _prune_forward(q, beam_id, beam_d, vectors, m_fwd, metric)
+        return fwd, stats.t_dc
+
+    fwd, dcs = jax.vmap(one)(safe_ids, seeds)             # [B, m_fwd]
+    fwd = jnp.where(lane_ok[:, None], fwd, -1)
+    dcs = jnp.where(lane_ok, dcs, 0)
+
+    # ---- forward edges --------------------------------------------------
+    rows = jnp.full((bsz, adj.shape[1]), -1, jnp.int32).at[:, :m_fwd].set(fwd)
+    adj = adj.at[jnp.where(lane_ok, batch_ids, n)].set(rows, mode="drop")
+    deg = deg.at[jnp.where(lane_ok, batch_ids, n)].set(
+        (rows >= 0).sum(axis=1), mode="drop")
+
+    # ---- backward edges (append; RNG-shrink on overflow) ----------------
+    tgt = fwd.reshape(-1)                                  # [B*m_fwd]
+    src = jnp.repeat(safe_ids, m_fwd)
+    valid = tgt >= 0
+    big = jnp.int32(n + 1)
+    order = jnp.argsort(jnp.where(valid, tgt, big))
+    st, ss, sv = tgt[order], src[order], valid[order]
+    prev = jnp.concatenate([big[None], st[:-1]])
+    newseg = sv & (st != prev)
+    seg_first = lax.cummax(jnp.where(newseg, jnp.arange(st.shape[0]), 0))
+    rank = jnp.arange(st.shape[0]) - seg_first
+    keep = sv & (rank < p_cap)
+
+    u_max = tgt.shape[0]
+    uniq = _take_first(newseg, st, u_max)                  # [U] target ids
+    slot = jnp.cumsum(newseg) - 1
+    news = jnp.full((u_max + 1, p_cap), -1, jnp.int32)
+    news = news.at[jnp.where(keep, slot, u_max),
+                   jnp.where(keep, rank, 0)].set(jnp.where(keep, ss, -1),
+                                                 mode="drop")
+    news = news[:u_max]
+
+    def merge_one(t, new_srcs, row):
+        cand = jnp.concatenate([row, new_srcs])            # [m_cap + P]
+        d_t = jnp.where(cand >= 0,
+                        point_dist(vectors[jnp.maximum(t, 0)],
+                                   vectors[jnp.maximum(cand, 0)], metric),
+                        jnp.inf)
+        o = jnp.argsort(d_t)
+        cand, d_t = cand[o], d_t[o]
+        total = (cand >= 0).sum()
+        X = vectors[jnp.maximum(cand, 0)]
+        pd = dist_matrix(X, X, metric)
+        keep_rng = rng_prune_mask(d_t, pd, cand >= 0, m_cap)
+        keep_all = (cand >= 0) & (jnp.arange(cand.shape[0]) < m_cap)
+        sel = jnp.where(total > m_cap, keep_rng, keep_all)
+        return _take_first(sel, cand, m_cap)
+
+    def chunked(carry, xs):
+        t, new_srcs = xs
+        row = carry[jnp.maximum(t, 0)]
+        new_rows = jax.vmap(merge_one)(t, new_srcs, row)
+        carry = carry.at[jnp.where(t >= 0, t, n)].set(new_rows, mode="drop")
+        return carry, None
+
+    n_chunks = max(1, u_max // 2048)
+    usable = n_chunks * (u_max // n_chunks)
+    adj, _ = lax.scan(chunked, adj,
+                      (uniq[:usable].reshape(n_chunks, -1),
+                       news[:usable].reshape(n_chunks, -1, p_cap)))
+    if usable < u_max:
+        adj, _ = chunked(adj, (uniq[usable:], news[usable:]))
+    deg = (adj >= 0).sum(axis=1)
+    return adj, deg, dcs.sum()
+
+
+_BOOT = 32  # bootstrap pad size; steady-state batches pad to batch_size
+
+
+def _batch_schedule(n_total: int, start: int, batch_size: int):
+    """Doubling warm-up then fixed morsels, all padded to one of two sizes
+    {_BOOT, batch_size} so ``_insert_batch`` compiles at most twice.
+    Yields (lo, hi, padded_size)."""
+    out, i, b = [], start, 1
+    while i < n_total:
+        step = min(b, batch_size, n_total - i)
+        pad = _BOOT if step <= _BOOT else batch_size
+        out.append((i, i + step, pad))
+        i += step
+        b *= 2
+    return out
+
+
+def _pad_batch(ids, pad: int):
+    ids = np.asarray(ids, dtype=np.int32)
+    if len(ids) < pad:
+        ids = np.concatenate([ids, np.full(pad - len(ids), -1, np.int32)])
+    return jnp.asarray(ids)
+
+
+def _build_level(vectors, ids_in_order, m_fwd, m_cap, efc, p_cap, metric,
+                 batch_size=256, entry_fn=None):
+    """Build one proximity-graph level over ``vectors`` restricted to
+    ``ids_in_order`` (insertion order). Returns (adj, deg, dc)."""
+    n = vectors.shape[0]
+    adj = jnp.full((n, m_cap), -1, jnp.int32)
+    deg = jnp.zeros((n,), jnp.int32)
+    total_dc = 0
+    first = int(ids_in_order[0])
+    for lo, hi, pad in _batch_schedule(len(ids_in_order), 1, batch_size):
+        batch = _pad_batch(ids_in_order[lo:hi], pad)
+        if entry_fn is None:
+            seeds = jnp.full((pad,), first, jnp.int32)
+        else:
+            seeds = entry_fn(batch)
+        adj, deg, dc = _insert_batch(adj, deg, vectors, batch, seeds,
+                                     efc=efc, m_fwd=m_fwd, m_cap=m_cap,
+                                     p_cap=p_cap, metric=metric)
+        total_dc += int(dc)
+    return adj, deg, total_dc
+
+
+# ---------------------------------------------------------------------------
+# the full 2-level build
+# ---------------------------------------------------------------------------
+
+
+def build(vectors: jax.Array, params: BuildParams) -> tuple[HnswGraph, BuildStats]:
+    validate_metric(params.metric)
+    t0 = time.perf_counter()
+    vectors = jnp.asarray(vectors, dtype=jnp.float32)
+    if params.metric == "cos":
+        vectors = normalize(vectors)
+    n, d = vectors.shape
+    m_u = params.m_u
+    m_l = 2 * m_u
+    rng = np.random.default_rng(params.seed)
+
+    n_upper = max(1, int(round(n * params.sample_rate)))
+    upper_ids_np = np.sort(rng.choice(n, size=n_upper, replace=False))
+    upper_ids = jnp.asarray(upper_ids_np, dtype=jnp.int32)
+
+    stats = BuildStats(n=n, n_upper=n_upper)
+
+    # ---- upper level over the sampled subset (positions 0..n_u-1) -------
+    up_vectors = vectors[upper_ids]
+    up_adj, up_deg, dc_u = _build_level(
+        up_vectors, list(range(n_upper)), m_fwd=max(m_u // 2, 4), m_cap=m_u,
+        efc=max(params.ef_construction // 2, 32), p_cap=params.new_edge_cap,
+        metric=params.metric)
+    stats.search_dc += dc_u
+
+    # ---- lower level: phase A (upper nodes first), then the rest --------
+    rest = np.setdiff1d(np.arange(n, dtype=np.int64), upper_ids_np)
+    order = np.concatenate([upper_ids_np, rest])
+
+    graph_upper = HnswGraph(
+        lower=jnp.full((n, m_l), -1, jnp.int32),
+        lower_deg=jnp.zeros((n,), jnp.int32),
+        upper=up_adj, upper_deg=up_deg, upper_ids=upper_ids,
+        entry_pos=jnp.int32(0), vectors=vectors)
+
+    from repro.core.search import greedy_upper  # local import (cycle-free)
+
+    @jax.jit
+    def entries(batch_ids):
+        def one(vid):
+            e, _ = greedy_upper(graph_upper, vectors[jnp.maximum(vid, 0)],
+                                params.metric)
+            return e
+        return jax.vmap(one)(batch_ids)
+
+    lo_adj = jnp.full((n, m_l), -1, jnp.int32)
+    lo_deg = jnp.zeros((n,), jnp.int32)
+    total_dc = 0
+    first = int(order[0])
+    n_batches = 0
+    for lo, hi, pad in _batch_schedule(len(order), 1, params.batch_size):
+        batch = _pad_batch(order[lo:hi], pad)
+        # phase A batches are seeded at the first node; phase B batches use
+        # greedy upper-layer entries (all upper nodes are in G_L by then)
+        if lo < n_upper:
+            seeds = jnp.full((pad,), first, jnp.int32)
+        else:
+            seeds = entries(batch)
+        lo_adj, lo_deg, dc = _insert_batch(
+            lo_adj, lo_deg, vectors, batch, seeds,
+            efc=params.ef_construction, m_fwd=m_u, m_cap=m_l,
+            p_cap=params.new_edge_cap, metric=params.metric)
+        total_dc += int(dc)
+        n_batches += 1
+    stats.search_dc += total_dc
+    stats.batches = n_batches
+
+    graph = HnswGraph(lower=lo_adj, lower_deg=lo_deg, upper=up_adj,
+                      upper_deg=up_deg, upper_ids=upper_ids,
+                      entry_pos=jnp.int32(0), vectors=vectors)
+    stats.seconds = time.perf_counter() - t0
+    return graph, stats

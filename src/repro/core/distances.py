@@ -1,0 +1,89 @@
+"""Distance functions.
+
+Conventions (all "distances" are *smaller-is-closer*):
+  l2   -- squared Euclidean distance (monotone in L2)
+  cos  -- 1 - cosine similarity; vectors are pre-normalized at ingest, so
+          this is ``1 - dot``
+  dot  -- negative inner product (max-inner-product search)
+
+The pure-jnp forms below are the reference implementations; the Pallas
+kernels in ``repro.kernels`` provide the TPU hot paths (tiled distance
+matrix, fused gather+distance, int8 quantized distance) and are tested
+against these.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Metric = Literal["l2", "cos", "dot"]
+
+VALID_METRICS = ("l2", "cos", "dot")
+
+
+def validate_metric(metric: str) -> None:
+    if metric not in VALID_METRICS:
+        raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
+
+
+def normalize(x: jax.Array, eps: float = 1e-12) -> jax.Array:
+    return x / jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+
+
+def point_dist(q: jax.Array, x: jax.Array, metric: Metric) -> jax.Array:
+    """dist(q[d], x[..., d]) -> [...]."""
+    if metric == "l2":
+        diff = x - q
+        return jnp.sum(diff * diff, axis=-1)
+    if metric == "cos":
+        return 1.0 - x @ q
+    if metric == "dot":
+        return -(x @ q)
+    raise ValueError(metric)
+
+
+def gathered_dist(q: jax.Array, vectors: jax.Array, ids: jax.Array,
+                  metric: Metric) -> jax.Array:
+    """dist(q, vectors[ids]) with ids<0 padding -> +inf."""
+    safe = jnp.maximum(ids, 0)
+    d = point_dist(q, vectors[safe], metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def dist_matrix(Q: jax.Array, X: jax.Array, metric: Metric) -> jax.Array:
+    """All-pairs distances: Q[b,d], X[n,d] -> [b,n].
+
+    L2 uses the matmul decomposition ||q-x||^2 = ||q||^2 + ||x||^2 - 2 q.x,
+    which is how the MXU kernel computes it too.
+    """
+    dots = Q @ X.T
+    if metric == "l2":
+        qq = jnp.sum(Q * Q, axis=-1)[:, None]
+        xx = jnp.sum(X * X, axis=-1)[None, :]
+        return qq + xx - 2.0 * dots
+    if metric == "cos":
+        return 1.0 - dots
+    if metric == "dot":
+        return -dots
+    raise ValueError(metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def brute_force_topk(Q: jax.Array, X: jax.Array, k: int, metric: Metric,
+                     mask: jax.Array | None = None):
+    """Exact (filtered) kNN oracle. mask: bool[n] selected set; None = all.
+
+    Returns (dists[b,k], ids[b,k]) ascending by distance; unselected rows
+    never appear (padded with +inf/-1 when |S| < k).
+    """
+    d = dist_matrix(Q, X, metric)
+    if mask is not None:
+        d = jnp.where(mask[None, :], d, jnp.inf)
+    neg, idx = jax.lax.top_k(-d, k)
+    dists = -neg
+    ids = jnp.where(jnp.isfinite(dists), idx, -1)
+    return dists, ids

@@ -1,0 +1,165 @@
+"""Distributed (sharded) NaviX search -- the paper's technique at scale.
+
+Production layout (DESIGN.md Section 4): the vector set V is split into
+S shards over the mesh's "model" axis; each shard builds its OWN HNSW
+subgraph over its slice (shard-and-merge ANN). A filtered query runs
+adaptive-local search on every shard in parallel (queries sharded over
+"data", replicated over "model"), then per-shard top-k lists are merged
+into the global top-k (one small all-gather over "model").
+
+Straggler mitigation = quorum merge: searches carry an ``alive`` shard
+mask; dead/slow shards contribute empty results and the merge proceeds
+when >= quorum shards responded -- recall degrades gracefully instead of
+latency collapsing (tested in tests/test_distributed_search.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bitset
+from repro.core.build import BuildParams, build
+from repro.core.graph import HnswGraph
+from repro.core.heuristics import Heuristic
+from repro.core.navix import NavixConfig
+from repro.core.search import SearchParams, beam_search_lower, greedy_upper
+
+
+def _stack_graphs(graphs: list[HnswGraph]) -> HnswGraph:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *graphs)
+
+
+@dataclasses.dataclass
+class ShardedNavix:
+    mesh: Mesh
+    graphs: HnswGraph          # every leaf has leading [S] shard dim
+    n_local: int               # vectors per shard (padded)
+    n_total: int
+    config: NavixConfig
+    model_axis: str = "model"
+    data_axis: str = "data"
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, vectors: np.ndarray, config: NavixConfig, mesh: Mesh,
+              model_axis: str = "model", data_axis: str = "data"
+              ) -> "ShardedNavix":
+        n, d = vectors.shape
+        s = int(mesh.shape[model_axis])
+        n_local = -(-n // s)
+        pad = s * n_local - n
+        if pad:
+            # pad with copies of the last row; padded ids are masked out of
+            # every semimask so they can never be returned
+            vectors = np.concatenate([vectors, np.repeat(vectors[-1:], pad, 0)])
+        graphs = []
+        for i in range(s):
+            sl = vectors[i * n_local:(i + 1) * n_local]
+            g, _ = build(jnp.asarray(sl), config.build_params())
+            graphs.append(g)
+        stacked = _stack_graphs(graphs)
+        spec = jax.tree.map(lambda x: NamedSharding(
+            mesh, P(model_axis, *([None] * (x.ndim - 1)))), stacked)
+        stacked = jax.tree.map(jax.device_put, stacked, spec)
+        return cls(mesh=mesh, graphs=stacked, n_local=n_local, n_total=n,
+                   config=config, model_axis=model_axis, data_axis=data_axis)
+
+    # ------------------------------------------------------------------
+    def shard_semimask(self, mask: np.ndarray) -> jax.Array:
+        """bool[n_total] -> packed u32[S, W_local] (padded rows excluded)."""
+        s, nl = self.n_shards, self.n_local
+        m = np.zeros(s * nl, dtype=bool)
+        m[: self.n_total] = np.asarray(mask, dtype=bool)
+        packed = bitset.pack(jnp.asarray(m.reshape(s, nl)))
+        return jax.device_put(packed, NamedSharding(
+            self.mesh, P(self.model_axis, None)))
+
+    # ------------------------------------------------------------------
+    def search_fn(self, k: int, efs: int, heuristic: str = "adaptive_local"):
+        """Returns a jitted (Q, sel_bits, alive) -> (dists, ids) function.
+
+        Q: f32[B, d] (B divisible by the data axis); sel_bits: u32[S, W];
+        alive: bool[S] shard liveness (all True = no stragglers).
+        Output ids are GLOBAL vector ids; quorum merges survivors only.
+        """
+        mesh = self.mesh
+        params = SearchParams(k=k, efs=max(efs, k), metric=self.config.metric,
+                              heuristic=int(Heuristic.from_name(heuristic)))
+        n_local = self.n_local
+        model_axis, data_axis = self.model_axis, self.data_axis
+        graphs = self.graphs
+
+        def local_search(graph_leaves, q_local, sel, alive):
+            graph = jax.tree.unflatten(
+                jax.tree.structure(graphs), graph_leaves)
+            graph = jax.tree.map(lambda x: x[0], graph)      # drop shard dim
+            sel = sel[0]
+            sidx = jax.lax.axis_index(model_axis)
+            my_alive = alive[sidx]
+
+            def one(q):
+                entry, _ = greedy_upper(graph, q, params.metric)
+                d, ids, _ = beam_search_lower(graph, q, sel, entry[None],
+                                              params)
+                return d[:k], ids[:k]
+
+            d, ids = jax.vmap(one)(q_local)                  # [b, k]
+            gids = jnp.where(ids >= 0, ids + sidx * n_local, -1)
+            d = jnp.where(my_alive, d, jnp.inf)
+            gids = jnp.where(my_alive, gids, -1)
+            return d[None], gids[None]                       # [1, b, k]
+
+        graph_specs = jax.tree.map(
+            lambda x: P(model_axis, *([None] * (x.ndim - 1))), graphs)
+
+        @jax.jit
+        def run(Q, sel_bits, alive):
+            leaves = jax.tree.leaves(graphs)
+            leaf_specs = jax.tree.leaves(graph_specs,
+                                         is_leaf=lambda x: isinstance(x, P))
+            d, ids = jax.shard_map(
+                functools.partial(local_search),
+                mesh=mesh,
+                in_specs=(tuple(leaf_specs), P(data_axis, None),
+                          P(model_axis, None), P()),
+                out_specs=(P(model_axis, data_axis, None),
+                           P(model_axis, data_axis, None)),
+                check_vma=False,   # while-loop beam search inside
+            )(tuple(leaves), Q, sel_bits, alive)
+            # merge: [S, B, k] -> global top-k per query
+            s, b, _ = d.shape
+            d = d.transpose(1, 0, 2).reshape(b, s * k)
+            ids = ids.transpose(1, 0, 2).reshape(b, s * k)
+            neg, order = jax.lax.top_k(-d, k)
+            out_d = -neg
+            out_i = jnp.take_along_axis(ids, order, axis=1)
+            return out_d, jnp.where(jnp.isfinite(out_d), out_i, -1)
+
+        return run
+
+    def search(self, Q, semimask: np.ndarray, k: int = 100, efs: int = 0,
+               heuristic: str = "adaptive_local",
+               alive: Optional[np.ndarray] = None, quorum: int = 0):
+        """Convenience wrapper; raises if fewer than ``quorum`` shards are
+        alive (the serving tier's retry/deadline policy decides quorum)."""
+        alive = (np.ones(self.n_shards, bool) if alive is None
+                 else np.asarray(alive, bool))
+        if quorum and alive.sum() < quorum:
+            raise RuntimeError(
+                f"quorum not met: {int(alive.sum())}/{self.n_shards} alive, "
+                f"need {quorum}")
+        fn = self.search_fn(k=k, efs=efs or 2 * k, heuristic=heuristic)
+        sel = self.shard_semimask(semimask)
+        return fn(jnp.asarray(Q, jnp.float32), sel, jnp.asarray(alive))

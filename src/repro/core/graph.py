@@ -1,0 +1,96 @@
+"""HNSW graph containers.
+
+NaviX is a 2-level HNSW (paper Section 4.1): the lower level ``G_L`` holds
+all ``n`` vectors with max degree ``M_L``; the upper level ``G_U`` holds a
+``sample_rate`` (default 5%) sample with max degree ``M_U`` and is used only
+to find a good entry point. The paper sets ``M_L = 2 * M_U``.
+
+Adjacency is stored as fixed-degree padded arrays (``-1`` padding) -- the
+JAX analogue of Kuzu's disk CSR (the storage layer also exposes a true CSR
+view for the host-side substrates).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HnswGraph(NamedTuple):
+    """Index topology + vector payload (device-resident)."""
+
+    # lower level: all n vectors
+    lower: jax.Array        # int32[n, M_L], -1 padded
+    lower_deg: jax.Array    # int32[n]
+    # upper level: sampled subset, indices are *positions* in upper_ids
+    upper: jax.Array        # int32[n_u, M_U] positions into upper_ids, -1 padded
+    upper_deg: jax.Array    # int32[n_u]
+    upper_ids: jax.Array    # int32[n_u] -> node id in [0, n)
+    entry_pos: jax.Array    # int32 scalar: entry position into upper_ids
+    vectors: jax.Array      # f32[n, d] (normalized when metric == "cos")
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def m_l(self) -> int:
+        return self.lower.shape[1]
+
+    @property
+    def m_u(self) -> int:
+        return self.upper.shape[1]
+
+    @property
+    def n_upper(self) -> int:
+        return self.upper_ids.shape[0]
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in self)
+
+
+def empty_graph(n: int, d: int, m_l: int, m_u: int, n_upper: int,
+                vectors: jax.Array) -> HnswGraph:
+    return HnswGraph(
+        lower=jnp.full((n, m_l), -1, dtype=jnp.int32),
+        lower_deg=jnp.zeros((n,), dtype=jnp.int32),
+        upper=jnp.full((n_upper, m_u), -1, dtype=jnp.int32),
+        upper_deg=jnp.zeros((n_upper,), dtype=jnp.int32),
+        upper_ids=jnp.full((n_upper,), -1, dtype=jnp.int32),
+        entry_pos=jnp.asarray(0, dtype=jnp.int32),
+        vectors=vectors,
+    )
+
+
+def degree_histogram(graph: HnswGraph) -> np.ndarray:
+    deg = np.asarray(graph.lower_deg)
+    return np.bincount(deg, minlength=graph.m_l + 1)
+
+
+def check_symmetric_fraction(graph: HnswGraph, sample: int = 1024,
+                             seed: int = 0) -> float:
+    """Fraction of sampled directed edges whose reverse edge also exists.
+
+    HNSW keeps edges mostly (not strictly) symmetric because backward edges
+    get RNG-pruned; a healthy build typically shows > 0.5.
+    """
+    rng = np.random.default_rng(seed)
+    lower = np.asarray(graph.lower)
+    deg = np.asarray(graph.lower_deg)
+    nodes = rng.integers(0, graph.n, size=sample)
+    hits = total = 0
+    for u in nodes:
+        for v in lower[u, : deg[u]]:
+            if v < 0:
+                continue
+            total += 1
+            if u in lower[v, : deg[v]]:
+                hits += 1
+    return hits / max(total, 1)

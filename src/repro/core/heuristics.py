@@ -1,0 +1,84 @@
+"""Filtered-search heuristic space (paper Section 3, Table 1 / Figure 3).
+
+Per candidate ``c_min`` popped from the beam, the search must decide
+
+  1. explore all or only selected vectors        (onehop-a vs the rest)
+  2. how much of the neighborhood to explore     (1 hop vs 2 hops)
+  3. in which order to explore 2nd-degree hoods  (blind vs directed)
+
+Fixed heuristics:
+  ONEHOP_S  -- selected 1st-degree only              (best at high sigma)
+  DIRECTED  -- 2 hops, parents ordered by dist(v_Q)  (best at medium sigma)
+  BLIND     -- 2 hops, parents in scan order         (best at very low sigma)
+  ONEHOP_A  -- unfiltered original HNSW (all 1st-degree); used for
+               construction / unfiltered search / postfilter streaming.
+
+Adaptive rule (both adaptive-global and adaptive-local, paper Section 3.2):
+
+  sigma >= ub_onehop (0.5)                 -> ONEHOP_S
+  esv = sigma*(M+1)*M >= M*lf  (lf = 3)    -> DIRECTED
+  otherwise                                -> BLIND
+
+adaptive-global evaluates the rule once with sigma_g = |S|/|V|;
+adaptive-local evaluates it *per iteration* with the local selectivity
+sigma_l = |S intersect nbrs(c_min)| / |nbrs(c_min)| (semimask bit tests only).
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+
+class Heuristic(enum.IntEnum):
+    # order matters: these index the lax.switch branch table
+    ONEHOP_S = 0
+    DIRECTED = 1
+    BLIND = 2
+    # meta-strategies (resolved to one of the above before/during search)
+    ADAPTIVE_GLOBAL = 3
+    ADAPTIVE_LOCAL = 4
+    ONEHOP_A = 5
+
+    @staticmethod
+    def from_name(name: str) -> "Heuristic":
+        return _BY_NAME[name.replace("-", "_").lower()]
+
+
+_BY_NAME = {
+    "onehop_s": Heuristic.ONEHOP_S,
+    "onehop_a": Heuristic.ONEHOP_A,
+    "directed": Heuristic.DIRECTED,
+    "blind": Heuristic.BLIND,
+    "adaptive_g": Heuristic.ADAPTIVE_GLOBAL,
+    "adaptive_global": Heuristic.ADAPTIVE_GLOBAL,
+    "adaptive_l": Heuristic.ADAPTIVE_LOCAL,
+    "adaptive_local": Heuristic.ADAPTIVE_LOCAL,
+    "navix": Heuristic.ADAPTIVE_LOCAL,
+}
+
+FIXED = (Heuristic.ONEHOP_S, Heuristic.DIRECTED, Heuristic.BLIND)
+
+#: selectivity above which onehop-s is safe (paper: "50% is a safe choice")
+UB_ONEHOP_S = 0.5
+#: leniency factor for the directed-vs-blind boundary (paper default: 3)
+LENIENCY_FACTOR = 3.0
+
+
+def adaptive_rule(sigma, m: int, ub: float = UB_ONEHOP_S,
+                  lf: float = LENIENCY_FACTOR):
+    """The paper's decision rule -> int32 branch index (traceable).
+
+    esv = sigma * (M+1) * M is the estimated number of selected vectors in
+    the 1st+2nd degree neighborhood; directed only pays off when esv >= M*lf.
+    """
+    sigma = jnp.asarray(sigma, dtype=jnp.float32)
+    esv = sigma * (m + 1) * m
+    pick = jnp.where(
+        sigma >= ub,
+        jnp.int32(Heuristic.ONEHOP_S),
+        jnp.where(esv >= m * lf, jnp.int32(Heuristic.DIRECTED),
+                  jnp.int32(Heuristic.BLIND)),
+    )
+    return pick

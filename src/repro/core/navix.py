@@ -1,0 +1,154 @@
+"""NavixIndex -- the public facade of the paper's contribution.
+
+Usage (mirrors the paper's CREATE_HNSW_INDEX / QUERY_HNSW_INDEX calls):
+
+    idx, build_stats = NavixIndex.create(vectors, NavixConfig(metric="cos"))
+    mask = graph_store.select(...)              # selection subquery -> S
+    res = idx.search(q, k=100, semimask=mask)   # adaptive-local by default
+
+Search defaults to the paper's final design (adaptive-local); every
+heuristic from Table 1 is selectable. Per-query latency benchmarking uses
+``search`` (exclusive lax.switch branches); ``search_many`` is the batch
+path used by the serving engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+from repro.core.build import BuildParams, BuildStats, build
+from repro.core.distances import brute_force_topk, normalize, validate_metric
+from repro.core.graph import HnswGraph
+from repro.core.heuristics import Heuristic
+from repro.core.postfilter import postfilter_search
+from repro.core.quantize import QuantizedStore, dequantize, quantize, rerank
+from repro.core.search import SearchParams, SearchResult, search, search_batch
+
+
+class NavixConfig(NamedTuple):
+    m_u: int = 16                 # paper default M=32 upper / 64 lower at scale
+    ef_construction: int = 100
+    sample_rate: float = 0.05     # upper-layer sample (paper: 5%)
+    metric: str = "l2"
+    batch_size: int = 256
+    seed: int = 0
+
+    def build_params(self) -> BuildParams:
+        return BuildParams(m_u=self.m_u, ef_construction=self.ef_construction,
+                           sample_rate=self.sample_rate, metric=self.metric,
+                           batch_size=self.batch_size, seed=self.seed)
+
+
+@dataclasses.dataclass
+class NavixIndex:
+    graph: HnswGraph
+    config: NavixConfig
+    quantized: Optional[QuantizedStore] = None
+
+    # -- creation ---------------------------------------------------------
+    @classmethod
+    def create(cls, vectors, config: NavixConfig = NavixConfig()
+               ) -> tuple["NavixIndex", BuildStats]:
+        validate_metric(config.metric)
+        graph, stats = build(jnp.asarray(vectors), config.build_params())
+        return cls(graph=graph, config=config), stats
+
+    @classmethod
+    def from_graph(cls, graph: HnswGraph, config: NavixConfig) -> "NavixIndex":
+        return cls(graph=graph, config=config)
+
+    # -- semimasks ----------------------------------------------------------
+    def pack_semimask(self, mask) -> jax.Array:
+        mask = jnp.asarray(mask)
+        if mask.dtype == jnp.uint32:
+            return mask
+        return bitset.pack(mask.astype(bool))
+
+    def full_semimask(self) -> jax.Array:
+        return bitset.full_mask(self.graph.n)
+
+    def sigma(self, sel_bits: jax.Array) -> float:
+        return float(bitset.count(sel_bits)) / self.graph.n
+
+    # -- search -------------------------------------------------------------
+    def _params(self, k, efs, heuristic, max_iters=0) -> SearchParams:
+        h = (Heuristic.from_name(heuristic) if isinstance(heuristic, str)
+             else Heuristic(heuristic))
+        return SearchParams(k=k, efs=max(efs, k), heuristic=int(h),
+                            metric=self.config.metric, max_iters=max_iters)
+
+    def _prep_query(self, q) -> jax.Array:
+        q = jnp.asarray(q, dtype=jnp.float32)
+        if self.config.metric == "cos":
+            q = normalize(q)
+        return q
+
+    def search(self, q, k: int = 100, efs: int = 0, semimask=None,
+               heuristic="adaptive_local", sigma_g=None) -> SearchResult:
+        """Filtered kNN for a single query vector (paper QUERY_HNSW_INDEX)."""
+        efs = efs or 2 * k
+        sel = (self.full_semimask() if semimask is None
+               else self.pack_semimask(semimask))
+        if sigma_g is None:
+            sigma_g = self.sigma(sel)
+        return search(self.graph, self._prep_query(q), sel,
+                      self._params(k, efs, heuristic), sigma_g=sigma_g)
+
+    def search_many(self, Q, k: int = 100, efs: int = 0, semimask=None,
+                    heuristic="adaptive_local") -> SearchResult:
+        """Batched (vmap) search -- the serving-throughput path."""
+        efs = efs or 2 * k
+        sel = (self.full_semimask() if semimask is None
+               else self.pack_semimask(semimask))
+        sigma_g = self.sigma(sel)
+        return search_batch(self.graph, self._prep_query(Q), sel,
+                            self._params(k, efs, heuristic), sigma_g=sigma_g)
+
+    def search_quantized(self, q, k: int = 100, efs: int = 0, semimask=None,
+                         heuristic="adaptive_local"):
+        """DiskANN-regime search: int8 distances + exact re-rank (S 5.8)."""
+        if self.quantized is None:
+            self.quantized = quantize(self.graph.vectors)
+        efs = efs or 2 * k
+        qgraph = self.graph._replace(vectors=dequantize(self.quantized))
+        sel = (self.full_semimask() if semimask is None
+               else self.pack_semimask(semimask))
+        qv = self._prep_query(q)
+        res = search(qgraph, qv, sel, self._params(k, max(efs, k), heuristic),
+                     sigma_g=self.sigma(sel))
+        d, ids = rerank(qv, self.graph.vectors, res.ids, k, self.config.metric)
+        return SearchResult(dists=d, ids=ids, stats=res.stats)
+
+    def search_postfilter(self, q, k: int = 100, semimask=None):
+        sel = (self.full_semimask() if semimask is None
+               else self.pack_semimask(semimask))
+        return postfilter_search(self.graph, self._prep_query(q), sel, k,
+                                 metric=self.config.metric)
+
+    # -- oracles ------------------------------------------------------------
+    def brute_force(self, Q, k: int = 100, semimask=None):
+        Q = jnp.atleast_2d(self._prep_query(Q))
+        mask = None
+        if semimask is not None:
+            sel = self.pack_semimask(semimask)
+            mask = bitset.unpack(sel, self.graph.n)
+        return brute_force_topk(Q, self.graph.vectors, k, self.config.metric,
+                                mask=mask)
+
+    def recall(self, res_ids, true_ids) -> float:
+        """recall@k with -1-padding awareness (both arrays [k] or [b,k])."""
+        res = np.atleast_2d(np.asarray(res_ids))
+        true = np.atleast_2d(np.asarray(true_ids))
+        hits = 0
+        denom = 0
+        for r, t in zip(res, true):
+            tset = set(int(x) for x in t if x >= 0)
+            denom += len(tset)
+            hits += sum(1 for x in r if int(x) in tset)
+        return hits / max(denom, 1)

@@ -1,0 +1,50 @@
+"""Int8 vector quantization (the DiskANN-regime analogue, paper Section 5.8).
+
+DiskANN keeps compressed vectors in memory and re-ranks with exact
+distances; NaviX-cold-quant mimics it. Here: symmetric per-vector int8
+quantization; the search runs on quantized distances (same quantization
+error as a real int8 pipeline -- the arithmetic is exact, the *values* are
+quantized) and the final beam is re-ranked with full-precision distances.
+On TPU the quantized distance runs in the int8 Pallas kernel
+(repro.kernels.quantized).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedStore(NamedTuple):
+    codes: jax.Array    # int8[n, d]
+    scale: jax.Array    # f32[n]   per-vector symmetric scale
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    def nbytes(self) -> int:
+        return self.codes.size + 4 * self.scale.size
+
+
+def quantize(vectors: jax.Array) -> QuantizedStore:
+    amax = jnp.max(jnp.abs(vectors), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(vectors / scale[:, None]), -127, 127)
+    return QuantizedStore(codes=codes.astype(jnp.int8), scale=scale.astype(jnp.float32))
+
+
+def dequantize(store: QuantizedStore) -> jax.Array:
+    return store.codes.astype(jnp.float32) * store.scale[:, None]
+
+
+def rerank(q: jax.Array, vectors: jax.Array, ids: jax.Array, k: int,
+           metric: str):
+    """Exact re-rank of a candidate id list; returns (dists[k], ids[k])."""
+    from repro.core.distances import gathered_dist
+    d = gathered_dist(q, vectors, ids, metric)
+    neg, order = jax.lax.top_k(-d, k)
+    out_d = -neg
+    return out_d, jnp.where(jnp.isfinite(out_d), ids[order], -1)

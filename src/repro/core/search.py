@@ -1,0 +1,382 @@
+"""Filtered HNSW beam search (paper Algorithm 2 + Section 3 heuristics).
+
+JAX adaptation of the paper's search operator:
+
+* the candidates/results priority queues are a single fixed-size *beam* of
+  ``efs`` slots sorted by distance, with per-slot ``expanded`` flags -- the
+  convergence criterion (stop when the closest unexpanded candidate is
+  further than the efs-th best result) is preserved exactly;
+* the visited set is a packed bitset (``repro.core.bitset``);
+* per-iteration heuristic choice is a ``lax.switch`` over the three fixed
+  expansion branches {onehop-s, directed, blind};
+* distance-computation accounting matches the paper's definitions:
+  ``s_dc``  = distances to *selected* vectors that enter the queues,
+  ``t_dc``  = all distances computed (directed additionally pays for
+  unvisited unselected 1st-degree neighbors it must order).
+
+Single-query ``jit`` keeps the switch *exclusive* (only the chosen branch
+executes) -- this is the faithful latency path used by the benchmarks.
+``vmap`` batches are available for throughput serving, at the usual SIMD
+cost of evaluating branch union per iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bitset
+from repro.core.distances import gathered_dist, point_dist
+from repro.core.graph import HnswGraph
+from repro.core.heuristics import (LENIENCY_FACTOR, UB_ONEHOP_S, Heuristic,
+                                   adaptive_rule)
+
+
+class SearchParams(NamedTuple):
+    k: int = 100
+    efs: int = 200
+    heuristic: int = int(Heuristic.ADAPTIVE_LOCAL)
+    metric: str = "l2"
+    ub: float = UB_ONEHOP_S
+    lf: float = LENIENCY_FACTOR
+    two_hop_cap: int = 0          # 0 -> M_L (the paper's M)
+    max_iters: int = 0            # 0 -> unbounded (n is the true bound)
+
+
+class SearchStats(NamedTuple):
+    iters: jax.Array
+    t_dc: jax.Array               # total distance computations
+    s_dc: jax.Array               # selected (inserted) distance computations
+    upper_dc: jax.Array           # distance computations in the upper layer
+    picks: jax.Array              # int32[3]: times each branch was chosen
+
+
+class SearchResult(NamedTuple):
+    dists: jax.Array              # f32[k]
+    ids: jax.Array                # i32[k], -1 padded
+    stats: SearchStats
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+
+def _take_first(elig: jax.Array, values: jax.Array, width: int,
+                budget=None) -> jax.Array:
+    """Compact the first (up to ``budget``) eligible values, in order.
+
+    Returns int32[width] padded with -1. ``budget`` may be a traced scalar
+    (defaults to ``width``).
+    """
+    pos = jnp.cumsum(elig.astype(jnp.int32)) - 1
+    limit = jnp.minimum(budget, width) if budget is not None else width
+    take = elig & (pos < limit)
+    tgt = jnp.where(take, pos, width)  # dump slot `width` is sliced off
+    out = jnp.full((width + 1,), -1, dtype=jnp.int32)
+    out = out.at[tgt].set(jnp.where(take, values, -1), mode="drop")
+    return out[:width]
+
+
+def _dedupe_keep_first(ids: jax.Array) -> jax.Array:
+    """Replace repeated ids (keeping the first occurrence) with -1. O(W^2)."""
+    w = ids.shape[0]
+    i = jnp.arange(w)
+    eq_earlier = (ids[None, :] == ids[:, None]) & (i[None, :] < i[:, None])
+    dup = eq_earlier.any(axis=1) & (ids >= 0)
+    return jnp.where(dup, -1, ids)
+
+
+# ---------------------------------------------------------------------------
+# expansion branches (the Section 3 heuristic space)
+# ---------------------------------------------------------------------------
+# Every branch maps
+#   (nbrs[M], visited[W], sel_bits[W], q, vectors, lower_adj)
+# to (cand_ids[KW], cand_d[KW], visited'[W], t_add, s_add)
+# with KW = M + K2 fixed so the lax.switch branches have identical types.
+
+
+def _expand_onehop_s(nbrs, visited, sel_bits, q, vectors, lower, k2, metric):
+    m = nbrs.shape[0]
+    sel_new = bitset.test(sel_bits, nbrs) & ~bitset.test(visited, nbrs)
+    cand1 = jnp.where(sel_new, nbrs, -1)
+    d1 = gathered_dist(q, vectors, cand1, metric)
+    visited = bitset.set_bits(visited, cand1)
+    n1 = (cand1 >= 0).sum()
+    pad_ids = jnp.full((k2,), -1, dtype=jnp.int32)
+    pad_d = jnp.full((k2,), jnp.inf, dtype=d1.dtype)
+    return (jnp.concatenate([cand1, pad_ids]),
+            jnp.concatenate([d1, pad_d]),
+            visited, n1, n1)
+
+
+def _second_degree(parents_in_order, visited, sel_bits, q, vectors, lower,
+                   k2, budget, metric):
+    """Gather 2nd-degree neighborhoods in the given parent order, keep the
+    first ``budget`` selected+unvisited unique nodes (paper: "until M many
+    selected vectors are explored")."""
+    nb2 = lower[jnp.maximum(parents_in_order, 0)]            # [M, M]
+    parent_ok = (parents_in_order >= 0)[:, None]
+    flat = jnp.where(parent_ok, nb2, -1).reshape(-1)         # [M*M] in order
+    elig = (flat >= 0) & bitset.test(sel_bits, flat) & ~bitset.test(visited, flat)
+    w2 = 2 * k2
+    cand = _take_first(elig, flat, w2)                        # over-take ...
+    cand = _dedupe_keep_first(cand)                           # ... dedupe ...
+    cand = _take_first(cand >= 0, cand, k2, budget=budget)    # ... then cap
+    d2 = gathered_dist(q, vectors, cand, metric)
+    visited = bitset.set_bits(visited, cand)
+    return cand, d2, visited, (cand >= 0).sum()
+
+
+def _expand_directed(nbrs, visited, sel_bits, q, vectors, lower, k2, metric):
+    """2 hops, parents ordered by distance to v_Q. Pays distance to every
+    unvisited 1st-degree neighbor (selected or not) for the ordering."""
+    valid = nbrs >= 0
+    d_all = gathered_dist(q, vectors, nbrs, metric)           # ordering cost
+    new1 = valid & ~bitset.test(visited, nbrs)
+    t_order = new1.sum()                                      # t-dc overhead
+    sel1 = new1 & bitset.test(sel_bits, nbrs)
+    cand1 = jnp.where(sel1, nbrs, -1)
+    d1 = jnp.where(sel1, d_all, jnp.inf)
+    n1 = sel1.sum()
+    # cache/mark everything whose distance we computed
+    visited = bitset.set_bits(visited, jnp.where(new1, nbrs, -1))
+    order = jnp.argsort(jnp.where(valid, d_all, jnp.inf))
+    parents = nbrs[order]
+    budget = jnp.maximum(k2 - n1, 0)
+    cand2, d2, visited, n2 = _second_degree(
+        parents, visited, sel_bits, q, vectors, lower, k2, budget, metric)
+    return (jnp.concatenate([cand1, cand2]),
+            jnp.concatenate([d1, d2]),
+            visited, t_order + n2, n1 + n2)
+
+
+def _expand_blind(nbrs, visited, sel_bits, q, vectors, lower, k2, metric):
+    """2 hops, parents in scan order; no ordering overhead (t-dc == s-dc).
+
+    This is the paper's *improved* ACORN heuristic: all 1st-degree selected
+    neighbors are explored before any 2nd-degree neighborhood.
+    """
+    sel1 = bitset.test(sel_bits, nbrs) & ~bitset.test(visited, nbrs)
+    cand1 = jnp.where(sel1, nbrs, -1)
+    d1 = gathered_dist(q, vectors, cand1, metric)
+    n1 = sel1.sum()
+    visited = bitset.set_bits(visited, cand1)
+    budget = jnp.maximum(k2 - n1, 0)
+    cand2, d2, visited, n2 = _second_degree(
+        nbrs, visited, sel_bits, q, vectors, lower, k2, budget, metric)
+    return (jnp.concatenate([cand1, cand2]),
+            jnp.concatenate([d1, d2]),
+            visited, n1 + n2, n1 + n2)
+
+
+_BRANCHES = (_expand_onehop_s, _expand_directed, _expand_blind)
+
+
+# ---------------------------------------------------------------------------
+# upper layer: greedy descent to find the lower-level entry point
+# ---------------------------------------------------------------------------
+
+
+def greedy_upper(graph: HnswGraph, q: jax.Array, metric: str):
+    """Greedy walk on G_U (efs=1, unfiltered). Returns (entry_id, dc)."""
+
+    def cond(c):
+        return c[3]
+
+    def body(c):
+        pos, d, dc, _ = c
+        nbr_pos = graph.upper[pos]                     # [M_U] positions
+        valid = nbr_pos >= 0
+        nbr_ids = jnp.where(valid, graph.upper_ids[jnp.maximum(nbr_pos, 0)], -1)
+        nd = gathered_dist(q, graph.vectors, nbr_ids, metric)
+        j = jnp.argmin(nd)
+        best = nd[j]
+        improved = best < d
+        return (jnp.where(improved, nbr_pos[j], pos),
+                jnp.where(improved, best, d),
+                dc + valid.sum(),
+                improved)
+
+    pos0 = graph.entry_pos
+    d0 = point_dist(q, graph.vectors[graph.upper_ids[pos0]], metric)
+    pos, _, dc, _ = lax.while_loop(cond, body, (pos0, d0, jnp.int32(1), jnp.bool_(True)))
+    return graph.upper_ids[pos], dc
+
+
+# ---------------------------------------------------------------------------
+# the beam search
+# ---------------------------------------------------------------------------
+
+
+class _BeamState(NamedTuple):
+    d: jax.Array          # f32[efs] ascending is NOT maintained; merged via top_k
+    ids: jax.Array        # i32[efs]
+    exp: jax.Array        # bool[efs]
+    sel: jax.Array        # bool[efs]
+    visited: jax.Array    # u32[W]
+    it: jax.Array
+    t_dc: jax.Array
+    s_dc: jax.Array
+    picks: jax.Array      # i32[3]
+
+
+def _frontier_min(st: _BeamState):
+    d_un = jnp.where((~st.exp) & (st.ids >= 0), st.d, jnp.inf)
+    j = jnp.argmin(d_un)
+    return j, d_un[j]
+
+
+def _r_max(st: _BeamState, efs: int):
+    live = st.sel & (st.ids >= 0) & jnp.isfinite(st.d)
+    n_sel = live.sum()
+    r = jnp.where(live, st.d, -jnp.inf).max()
+    return jnp.where(n_sel >= efs, r, jnp.inf)
+
+
+def beam_search_lower(
+    graph: HnswGraph,
+    q: jax.Array,
+    sel_bits: jax.Array,
+    seeds: jax.Array,
+    params: SearchParams,
+    sigma_g=None,
+) -> tuple[jax.Array, jax.Array, SearchStats]:
+    """Search G_L. Returns the full beam (dists[efs], ids[efs]) sorted
+    ascending with unselected/invalid slots pushed to +inf, plus stats.
+
+    ``seeds``: int32[n_seeds] entry node ids (from greedy_upper, or node 0).
+    ``sigma_g``: global selectivity |S|/|V| (traced ok); required for
+    ADAPTIVE_GLOBAL, used as metadata otherwise.
+    """
+    efs = params.efs
+    metric = params.metric
+    mode = int(params.heuristic)
+    m_l = graph.m_l
+    k2 = params.two_hop_cap or m_l
+    max_iters = params.max_iters or graph.n
+
+    vectors, lower = graph.vectors, graph.lower
+
+    if mode == int(Heuristic.ONEHOP_A):
+        # unfiltered original HNSW == onehop-s with the full mask
+        sel_bits = bitset.full_mask(graph.n)
+        mode = int(Heuristic.ONEHOP_S)
+
+    if mode == int(Heuristic.ADAPTIVE_GLOBAL):
+        if sigma_g is None:
+            sigma_g = bitset.count(sel_bits) / graph.n
+        global_branch = adaptive_rule(sigma_g, m_l, params.ub, params.lf)
+    else:
+        global_branch = jnp.int32(mode if mode <= 2 else 0)
+
+    # --- init beam with seeds -------------------------------------------
+    n_seeds = seeds.shape[0]
+    seed_d = gathered_dist(q, vectors, seeds, metric)
+    seed_sel = bitset.test(sel_bits, seeds)
+    pad = efs - n_seeds
+    st = _BeamState(
+        d=jnp.concatenate([seed_d, jnp.full((pad,), jnp.inf, seed_d.dtype)]),
+        ids=jnp.concatenate([seeds, jnp.full((pad,), -1, jnp.int32)]),
+        exp=jnp.zeros((efs,), bool),
+        sel=jnp.concatenate([seed_sel, jnp.zeros((pad,), bool)]),
+        visited=bitset.set_bits(
+            jnp.zeros((bitset.n_words(graph.n),), jnp.uint32), seeds),
+        it=jnp.int32(0),
+        # seed/entry distances are accounted under upper_dc by the caller;
+        # t_dc/s_dc measure the heuristic's exploration only, so the
+        # paper's "blind: t-dc == s-dc" identity holds exactly
+        t_dc=jnp.int32(0),
+        s_dc=jnp.int32(0),
+        picks=jnp.zeros((3,), jnp.int32),
+    )
+
+    def cond(st: _BeamState):
+        _, d_min = _frontier_min(st)
+        keep_going = (d_min < jnp.inf) & (d_min <= _r_max(st, efs))
+        return keep_going & (st.it < max_iters)
+
+    def body(st: _BeamState) -> _BeamState:
+        j, _ = _frontier_min(st)
+        c_min = st.ids[j]
+        nbrs = lower[c_min]                                   # int32[M_L]
+
+        if mode == int(Heuristic.ADAPTIVE_LOCAL):
+            deg = (nbrs >= 0).sum()
+            n_sel_nbrs = bitset.count_members(sel_bits, nbrs)
+            sigma_l = n_sel_nbrs / jnp.maximum(deg, 1)
+            branch = adaptive_rule(sigma_l, m_l, params.ub, params.lf)
+        else:
+            branch = global_branch
+
+        cand_ids, cand_d, visited, t_add, s_add = lax.switch(
+            branch,
+            [functools.partial(f, k2=k2, metric=metric) for f in _BRANCHES],
+            nbrs, st.visited, sel_bits, q, vectors, lower,
+        )
+
+        # retire the expanded slot; unselected slots are dropped entirely
+        # (they are neither frontier nor results once expanded)
+        exp = st.exp.at[j].set(True)
+        d = st.d.at[j].set(jnp.where(st.sel[j], st.d[j], jnp.inf))
+
+        all_d = jnp.concatenate([d, jnp.where(cand_ids >= 0, cand_d, jnp.inf)])
+        all_id = jnp.concatenate([st.ids, cand_ids])
+        all_exp = jnp.concatenate([exp, jnp.zeros_like(cand_ids, dtype=bool)])
+        all_sel = jnp.concatenate([st.sel, cand_ids >= 0])
+
+        neg, order = lax.top_k(-all_d, efs)
+        return _BeamState(
+            d=-neg,
+            ids=all_id[order],
+            exp=all_exp[order],
+            sel=all_sel[order],
+            visited=visited,
+            it=st.it + 1,
+            t_dc=st.t_dc + t_add.astype(jnp.int32),
+            s_dc=st.s_dc + s_add.astype(jnp.int32),
+            picks=st.picks.at[branch].add(1),
+        )
+
+    st = lax.while_loop(cond, body, st)
+
+    # results: selected slots only, ascending
+    res_d = jnp.where(st.sel & (st.ids >= 0), st.d, jnp.inf)
+    neg, order = lax.top_k(-res_d, efs)
+    out_d = -neg
+    out_id = jnp.where(jnp.isfinite(out_d), st.ids[order], -1)
+    stats = SearchStats(iters=st.it, t_dc=st.t_dc, s_dc=st.s_dc,
+                        upper_dc=jnp.int32(0), picks=st.picks)
+    return out_d, out_id, stats
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def search(graph: HnswGraph, q: jax.Array, sel_bits: jax.Array,
+           params: SearchParams, sigma_g=None) -> SearchResult:
+    """Full 2-level filtered search for one query (paper's QUERY_HNSW_INDEX).
+
+    Upper layer is searched unfiltered with k=1 (greedy) to find the entry
+    point; the lower layer runs the configured heuristic.
+    """
+    entry, upper_dc = greedy_upper(graph, q, params.metric)
+    beam_d, beam_id, stats = beam_search_lower(
+        graph, q, sel_bits, entry[None], params, sigma_g=sigma_g)
+    k = params.k
+    res = SearchResult(
+        dists=beam_d[:k],
+        ids=beam_id[:k],
+        # +1: the entry vector's own distance at the lower level
+        stats=stats._replace(upper_dc=upper_dc.astype(jnp.int32) + 1),
+    )
+    return res
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def search_batch(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                 params: SearchParams, sigma_g=None) -> SearchResult:
+    """vmap throughput path (branch-union cost per iteration; see module doc)."""
+    return jax.vmap(lambda q: search(graph, q, sel_bits, params, sigma_g))(Q)

@@ -1,0 +1,90 @@
+"""Activation sharding constraints (context-scoped, no-op by default).
+
+XLA SPMD propagation from params+inputs alone can lose the batch sharding
+of activations inside scanned layers and fall back to gathering -- observed
+in the dry-run baseline as ~80GB/chip of per-layer all-gathers
+(experiments/perf_log.md it-2). Model code pins the canonical layouts via
+``constrain(x, "dp", None, "tp")`` using *role* names:
+
+  dp -> ("pod", "data") (whichever exist on the mesh)   batch-ish dims
+  tp -> "model"                                          tensor-parallel dims
+
+Outside an ``activation_sharding(mesh)`` context (unit tests, single-CPU
+benches) ``constrain`` is the identity, so models stay mesh-agnostic.
+Constraints on dims not divisible by the axis size are skipped.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_POLICY: Optional["Policy"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    mesh: Mesh
+    seq_parallel: bool = True
+
+    def resolve(self, role):
+        if role is None:
+            return None, 1
+        if role == "dp":
+            axes = tuple(a for a in self.mesh.axis_names
+                         if a in ("pod", "data"))
+            size = math.prod(self.mesh.shape[a] for a in axes)
+            return (axes if len(axes) > 1 else axes[0]), size
+        if role == "tp":
+            return "model", self.mesh.shape["model"]
+        if role == "sp":
+            # sequence-parallel residual stream (Megatron-SP style): the
+            # scan carry (and its saved-activation stack) shards its
+            # sequence dim over the model axis; each layer re-gathers.
+            if self.seq_parallel:
+                return "model", self.mesh.shape["model"]
+            return None, 1
+        if role == "all":
+            axes = tuple(self.mesh.axis_names)
+            return axes, math.prod(self.mesh.shape[a] for a in axes)
+        raise ValueError(role)
+
+
+def axis_size(role: str) -> int:
+    """Size of a role's axis group under the active policy (1 if none)."""
+    if _POLICY is None:
+        return 1
+    return _POLICY.resolve(role)[1]
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, seq_parallel: bool = True):
+    global _POLICY
+    prev = _POLICY
+    _POLICY = Policy(mesh, seq_parallel=seq_parallel)
+    try:
+        yield
+    finally:
+        _POLICY = prev
+
+
+def constrain(x: jax.Array, *roles):
+    """Apply a sharding constraint by role names; identity when no policy
+    is active or when any constrained dim is not divisible."""
+    if _POLICY is None:
+        return x
+    assert len(roles) == x.ndim, (roles, x.shape)
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        axes, size = _POLICY.resolve(role)
+        if role is not None and dim % size != 0:
+            axes = None   # skip non-divisible constraints (e.g. 24 heads/16)
+        spec.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_POLICY.mesh, P(*spec)))

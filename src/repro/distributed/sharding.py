@@ -1,0 +1,240 @@
+"""Per-architecture sharding policies for the production mesh.
+
+Mesh axes: ("pod", "data", "model") multi-pod / ("data", "model") single
+pod. Policies (DESIGN.md Section 4):
+
+  LM train    FSDP over (pod x data) on the d_model dim of every weight,
+              TP over model on heads / d_ff / vocab, EP over model for MoE
+              experts; batch over (pod x data); vocab-parallel logits.
+  LM decode   batch over (pod x data); KV cache sharded by kv-head over
+              model when divisible (kv=16 archs) else by sequence
+              (flash-decode-style distributed softmax falls out of XLA's
+              sharded-reduction handling); long_500k (batch=1) shards the
+              sequence over every axis.
+  GNN         node tensors sharded over (pod x data); edge tensors over all
+              axes (edge-parallel message passing); params replicated.
+  RecSys      embedding tables row-sharded over model (the distributed
+              embedding engine); batch over (pod x data); retrieval
+              candidates sharded over model with distributed top-k.
+
+Only params + step inputs are annotated; XLA SPMD propagates the rest.
+Non-divisible dims (e.g. granite's 24 heads on a 16-way model axis, odd
+vocab sizes) rely on GSPMD's padded uneven sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import GNNConfig, LMConfig, RecsysConfig, ShapeSpec
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop sharding from dims the mesh axes don't divide (jit in_shardings
+    require exact divisibility; padding non-divisible payloads is the data
+    layer's job -- e.g. granite's 49155 vocab stays replicated)."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        group = axes if isinstance(axes, tuple) else (axes,)
+        size = int(np.prod([mesh.shape[a] for a in group]))
+        out.append(axes if dim % size == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def lm_param_spec(path: str, shape: tuple, dp, model_size: int = 16) -> P:
+    if "embed" in path:                       # [V, D]
+        return P("model", dp)
+    if "lm_head" in path:                     # [D, V]
+        return P(dp, "model")
+    if "router" in path:                      # [L, D, E]
+        return P(None, dp, None)
+    if "shared" in path or ("mlp" in path and len(shape) == 3):
+        if path.endswith("wi"):               # [L, D, 2F]
+            return P(None, dp, "model")
+        if path.endswith("wo"):               # [L, F, D]
+            return P(None, "model", dp)
+    if "mlp" in path and len(shape) == 4:     # MoE experts
+        if shape[1] % model_size:             # E doesn't divide the model
+            # axis (granite: 40/16): shard the matmul dims over both axes
+            # instead -- replicated experts would cost params+grads x16
+            if path.endswith("wi"):           # [L, E, D, 2Fe]
+                return P(None, None, dp, "model")
+            if path.endswith("wo"):           # [L, E, Fe, D]
+                return P(None, None, "model", dp)
+        if path.endswith("wi"):               # [L, E, D, 2Fe]
+            return P(None, "model", dp, None)
+        if path.endswith("wo"):               # [L, E, Fe, D]
+            return P(None, "model", None, dp)
+    if "attn" in path and len(shape) == 3:
+        if path.endswith("wo"):               # [L, H*hd, D]
+            return P(None, "model", dp)
+        return P(None, dp, "model")           # wq/wk/wv [L, D, X]
+    if "attn" in path and len(shape) == 2 and not path.endswith("scale"):
+        return P(None, "model")               # biases [L, X]
+    return P(*([None] * len(shape)))          # norms etc: replicated
+
+
+def recsys_param_spec(path: str, shape: tuple, dp) -> P:
+    # row-shard every big [V, D] embedding table over model; the dense
+    # towers/GRU/transformer params are small and replicate
+    if len(shape) == 2 and shape[0] >= 4096:
+        return P("model", None)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg, params_spec: Any, mesh: Mesh) -> Any:
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        if isinstance(cfg, LMConfig):
+            spec = lm_param_spec(p, leaf.shape, dp, mesh.shape["model"])
+        elif isinstance(cfg, RecsysConfig):
+            spec = recsys_param_spec(p, leaf.shape, dp)
+        else:
+            spec = P(*([None] * len(leaf.shape)))  # GNN: replicate
+        return sanitize(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_spec)
+
+
+def opt_specs(param_spec_tree: Any, opt_state_spec: Any) -> Any:
+    """Optimizer-state specs derived from param specs.
+
+    AdamW m/v mirror the param; Adafactor vr drops the last dim's axis and
+    vc drops the second-to-last (factored stats follow their dims)."""
+    flat_params, _ = jax.tree_util.tree_flatten(param_spec_tree)
+
+    def build(sub, pspec_tree):
+        # m / v / per_param subtrees share the params' structure
+        def per_leaf(path, leaf):
+            p = _path_str(path)
+            # find matching param spec by aligning tree structures below
+            return leaf
+        return sub
+
+    # walk the opt-state pytree; anything whose shape matches a param gets
+    # that param's spec; vr/vc get reduced specs; scalars are replicated.
+    params_by_struct = {}
+
+    def assign(opt_leaf_path, opt_leaf):
+        p = _path_str(opt_leaf_path)
+        return opt_leaf
+
+    # simpler: structural recursion below
+    def mirror(opt_tree, param_tree):
+        if isinstance(opt_tree, dict):
+            if set(opt_tree) == {"vr", "vc"}:
+                ps = param_tree  # a P for the param
+                return {"vr": P(*ps[:-1]), "vc": P(*(ps[:-2] + ps[-1:]))}
+            if set(opt_tree) == {"v"} and isinstance(param_tree, P):
+                return {"v": param_tree}
+            return {k: mirror(v, param_tree[k] if isinstance(param_tree, dict)
+                              and k in param_tree else param_tree)
+                    for k, v in opt_tree.items()}
+        if isinstance(opt_tree, (tuple, list)):
+            t = type(opt_tree)
+            if isinstance(param_tree, (tuple, list)):
+                return t(mirror(o, q) for o, q in zip(opt_tree, param_tree))
+            return t(mirror(o, param_tree) for o in opt_tree)
+        if isinstance(param_tree, P):
+            if hasattr(opt_tree, "shape") and len(opt_tree.shape) == 0:
+                return P()
+            return param_tree
+        return P()
+
+    def top(opt_state_spec, param_spec_tree):
+        out = {}
+        for k, v in opt_state_spec.items():
+            if k == "count":
+                out[k] = P()
+            elif k in ("m", "v", "per_param"):
+                out[k] = mirror(v, param_spec_tree)
+            else:
+                out[k] = jax.tree.map(lambda _: P(), v)
+        return out
+
+    return top(opt_state_spec, param_spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg, shape: ShapeSpec, specs: dict, mesh: Mesh) -> dict:
+    raw = _batch_specs_raw(cfg, shape, specs, mesh)
+    return jax.tree.map(
+        lambda p, s: sanitize(p, s.shape, mesh), raw, dict(specs),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_specs_raw(cfg, shape: ShapeSpec, specs: dict, mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    model_size = mesh.shape["model"]
+
+    if isinstance(cfg, LMConfig):
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": P(dp, None)}
+        # decode: cache [L, B, S, KV, hd] + token [B]
+        b = shape["global_batch"]
+        if b == 1:
+            cache_kv = P(None, None, dp + ("model",), None, None)
+            token = P(None)
+        elif cfg.n_kv_heads % model_size == 0:
+            cache_kv = P(None, dp, None, "model", None)
+            token = P(dp)
+        else:
+            cache_kv = P(None, dp, "model", None, None)
+            token = P(dp)
+        from repro.models.transformer import KVCache
+        return {"cache": KVCache(k=cache_kv, v=cache_kv, length=P()),
+                "token": token}
+
+    if isinstance(cfg, GNNConfig):
+        all_axes = dp + ("model",)
+        out = {}
+        for name, s in specs.items():
+            if name.startswith("edge"):
+                out[name] = P(all_axes, *([None] * (len(s.shape) - 1)))
+            else:
+                out[name] = P(dp, *([None] * (len(s.shape) - 1)))
+        return out
+
+    if isinstance(cfg, RecsysConfig):
+        out = {}
+        for name, s in specs.items():
+            if name == "candidates":
+                out[name] = P("model")
+            else:
+                out[name] = P(dp, *([None] * (len(s.shape) - 1)))
+        return out
+
+    raise TypeError(type(cfg))
+
+
+def to_named(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

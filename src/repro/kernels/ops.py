@@ -1,0 +1,108 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Pad-and-dispatch layer: arbitrary shapes are padded up to MXU-aligned tile
+multiples, the kernel runs, and results are sliced back. On hosts without
+a TPU the wrappers route to the pure-jnp oracles (``ref.py``) so the whole
+framework runs anywhere; the kernels themselves stay validated in
+interpret mode by tests/test_kernels_*.py. Set ``REPRO_FORCE_PALLAS=1`` to
+force interpret-mode kernels on CPU (slow; used by the kernel benchmarks).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.distance_matrix import distance_matrix_pallas
+from repro.kernels.gather_distance import gather_distance_pallas
+from repro.kernels.quantized import quantized_distance_pallas
+from repro.kernels.segment_sum import csr_segment_sum_pallas, plan_tiles
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _force_pallas() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "0") == "1"
+
+
+def _use_pallas() -> bool:
+    return _on_tpu() or _force_pallas()
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+
+
+def distance_matrix(Q, X, metric: str = "l2", bq: int = 128, bn: int = 128,
+                    bd: int = 128):
+    """All-pairs distances with automatic padding. f32[b, n]."""
+    if not _use_pallas():
+        return ref.distance_matrix(Q, X, metric)
+    b, n = Q.shape[0], X.shape[0]
+    bq = min(bq, max(8, 1 << (b - 1).bit_length()))
+    Qp = _pad_to(_pad_to(Q, 1, bd), 0, bq)
+    Xp = _pad_to(_pad_to(X, 1, bd), 0, bn)
+    out = distance_matrix_pallas(Qp, Xp, metric, bq=bq, bn=bn,
+                                 bd=min(bd, Qp.shape[1]),
+                                 interpret=not _on_tpu())
+    return out[:b, :n]
+
+
+def gather_distance(q, vectors, ids, metric: str = "l2"):
+    """Fused gather+distance: dist(q, vectors[ids]); ids<0 -> inf. f32[k]."""
+    if not _use_pallas():
+        return ref.gather_distance(q, vectors, ids, metric)
+    d = vectors.shape[1]
+    vp = _pad_to(vectors, 1, 128)
+    qp = _pad_to(q, 0, 128)
+    return gather_distance_pallas(qp, vp, ids, metric,
+                                  interpret=not _on_tpu())
+
+
+def quantized_distance_matrix(Q, codes, scale, metric: str = "l2",
+                              bq: int = 128, bn: int = 128, bd: int = 128):
+    """Distances against int8 codes with per-vector scales. f32[b, n]."""
+    if not _use_pallas():
+        return ref.quantized_distance_matrix(Q, codes, scale, metric)
+    b, n = Q.shape[0], codes.shape[0]
+    bq = min(bq, max(8, 1 << (b - 1).bit_length()))
+    Qp = _pad_to(_pad_to(Q, 1, bd), 0, bq)
+    Cp = _pad_to(_pad_to(codes, 1, bd), 0, bn)
+    Sp = _pad_to(scale, 0, bn)
+    out = quantized_distance_pallas(Qp, Cp, Sp, metric, bq=bq, bn=bn,
+                                    bd=min(bd, Qp.shape[1]),
+                                    interpret=not _on_tpu())
+    return out[:b, :n]
+
+
+def csr_segment_sum(messages, dst_sorted, n: int, bn: int = 128,
+                    be: int = 256):
+    """Sorted segment sum -> f32[n, d]. messages[E,d], dst_sorted[E]
+    ascending; -1 padding allowed anywhere only if pre-sorted as if it were
+    +inf (callers usually produce it at the end)."""
+    if not _use_pallas():
+        return ref.csr_segment_sum(messages, dst_sorted, n)
+    from repro.kernels.segment_sum import PAD_SENTINEL
+    mp = _pad_to(messages, 0, be)
+    dp = _pad_to(dst_sorted, 0, be, value=PAD_SENTINEL)
+    dp = jnp.where(dp < 0, PAD_SENTINEL, dp)
+    first, t_max = plan_tiles(np.asarray(dp), n, bn, be, mp.shape[0])
+    out = csr_segment_sum_pallas(mp, dp, jnp.asarray(first), n, bn=bn, be=be,
+                                 t_max=t_max, interpret=not _on_tpu())
+    return out[:n]

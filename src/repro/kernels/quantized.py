@@ -1,0 +1,84 @@
+"""Int8 quantized distance kernel (DiskANN-regime search, Section 5.8).
+
+Vectors are stored as int8 codes with a per-vector symmetric scale
+(x_i ~= scale_i * codes_i). The kernel streams 4x less HBM traffic than
+the f32 distance matrix -- on a memory-bound shard (big n, small batch)
+that is a ~4x roofline win; search quality is recovered by exact re-ranking
+(repro.core.quantize.rerank), exactly like DiskANN's in-memory quantized
+search + re-rank design that the paper benchmarks against.
+
+Same schedule as distance_matrix: d innermost, f32 VMEM accumulator; scale
+and the codes' self-dot are applied on the last d-step:
+
+  ||q - s*c||^2 = ||q||^2 - 2 s (q.c) + s^2 (c.c)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, c_ref, s_ref, out_ref, dot_acc, cc_acc, qq_acc,
+            *, metric: str, n_d: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        dot_acc[...] = jnp.zeros_like(dot_acc)
+        cc_acc[...] = jnp.zeros_like(cc_acc)
+        qq_acc[...] = jnp.zeros_like(qq_acc)
+
+    q = q_ref[...].astype(jnp.float32)                   # [bq, bd]
+    c = c_ref[...].astype(jnp.float32)                   # [bn, bd] int8 codes
+    dot_acc[...] += jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    cc_acc[...] += jnp.sum(c * c, axis=1, keepdims=True)  # [bn, 1]
+    qq_acc[...] += jnp.sum(q * q, axis=1, keepdims=True)  # [bq, 1]
+
+    @pl.when(k == n_d - 1)
+    def _done():
+        s = s_ref[...].astype(jnp.float32)               # [1, bn]
+        sdot = dot_acc[...] * s                          # [bq, bn]
+        if metric == "l2":
+            out_ref[...] = qq_acc[...] + (s * s) * cc_acc[...].T - 2.0 * sdot
+        elif metric == "cos":
+            out_ref[...] = 1.0 - sdot
+        else:  # dot
+            out_ref[...] = -sdot
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "bq", "bn", "bd", "interpret"))
+def quantized_distance_pallas(Q: jax.Array, codes: jax.Array,
+                              scale: jax.Array, metric: str = "l2",
+                              bq: int = 128, bn: int = 128, bd: int = 128,
+                              interpret: bool = False) -> jax.Array:
+    """Q[b,d] f32/bf16, codes[n,d] int8, scale[n] f32 -> f32[b,n]."""
+    b, d = Q.shape
+    n, d2 = codes.shape
+    assert d == d2 and scale.shape == (n,)
+    assert b % bq == 0 and n % bn == 0 and d % bd == 0
+    n_d = d // bd
+    grid = (b // bq, n // bn, n_d)
+    return pl.pallas_call(
+        functools.partial(_kernel, metric=metric, n_d=n_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32),
+                        pltpu.VMEM((bn, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(Q, codes, scale[None, :])

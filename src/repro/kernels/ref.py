@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+These are small, obviously-correct implementations; the kernel tests sweep
+shapes/dtypes and assert_allclose kernels (interpret mode) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distance_matrix(Q: jax.Array, X: jax.Array, metric: str) -> jax.Array:
+    """f32[b,n] distances; see repro.core.distances.dist_matrix."""
+    Qf = Q.astype(jnp.float32)
+    Xf = X.astype(jnp.float32)
+    dots = Qf @ Xf.T
+    if metric == "l2":
+        return (jnp.sum(Qf * Qf, -1)[:, None] + jnp.sum(Xf * Xf, -1)[None, :]
+                - 2.0 * dots)
+    if metric == "cos":
+        return 1.0 - dots
+    if metric == "dot":
+        return -dots
+    raise ValueError(metric)
+
+
+def gather_distance(q: jax.Array, vectors: jax.Array, ids: jax.Array,
+                    metric: str) -> jax.Array:
+    """f32[k]: dist(q, vectors[ids]); ids < 0 -> +inf."""
+    rows = vectors[jnp.maximum(ids, 0)].astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        d = jnp.sum((rows - qf) ** 2, axis=-1)
+    elif metric == "cos":
+        d = 1.0 - rows @ qf
+    elif metric == "dot":
+        d = -(rows @ qf)
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def quantized_distance_matrix(Q: jax.Array, codes: jax.Array,
+                              scale: jax.Array, metric: str) -> jax.Array:
+    """Distances against int8-quantized vectors x_i ~= scale_i * codes_i."""
+    X = codes.astype(jnp.float32) * scale[:, None].astype(jnp.float32)
+    return distance_matrix(Q, X, metric)
+
+
+def csr_segment_sum(messages: jax.Array, dst_sorted: jax.Array,
+                    n: int) -> jax.Array:
+    """out[v] = sum of messages whose (sorted, padded=-1) destination is v."""
+    safe = jnp.where(dst_sorted >= 0, dst_sorted, n)
+    contrib = jnp.where((dst_sorted >= 0)[:, None], messages, 0)
+    return jax.ops.segment_sum(contrib.astype(jnp.float32), safe,
+                               num_segments=n + 1)[:n]

@@ -1,0 +1,112 @@
+"""CSR-sorted segment sum as one-hot MXU matmuls.
+
+The message-passing / EmbeddingBag hot path: given per-edge messages sorted
+by destination and the sorted destination ids, produce per-node sums.
+JAX has no native EmbeddingBag or CSR SpMM -- this kernel IS that substrate
+on TPU (taxonomy B.3/B.6).
+
+Schedule: grid = (node blocks, edge tiles per block). A host-side
+preprocessing step (ops.py) computes, per node block, the first edge tile
+that can touch it; the kernel visits ``t_max`` consecutive edge tiles from
+there, builds the (bn, be) one-hot dst matrix with broadcasted_iota and
+accumulates ``onehot @ messages`` on the MXU. Because edges are sorted by
+destination, each node block's edges occupy a contiguous tile range, so
+``t_max = max over blocks of (range length)``; tiles outside a block's true
+range contribute zero via the one-hot mask (masked, not branched).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: padding destination id: sorts after every real node id and can never
+#: alias into a node block (callers replace -1 with this before sorting)
+PAD_SENTINEL = 0x3FFFFFFF
+
+
+def _kernel(first_tile_ref, msg_ref, dst_ref, out_ref, acc_ref,
+            *, bn: int, t_max: int):
+    i = pl.program_id(0)          # node block
+    t = pl.program_id(1)          # relative edge tile
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base = i * bn
+    dst = dst_ref[...].reshape(-1)          # [be] sorted dst ids (padding =
+    local = dst - base                      #  PAD_SENTINEL, sorts last and
+    be = dst.shape[0]                       #  never matches a local row)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bn, be), 0)
+    onehot = jnp.where((local[None, :] == rows) & (dst[None, :] >= 0),
+                       1.0, 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, msg_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(t == t_max - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "bn", "be", "t_max", "interpret"))
+def csr_segment_sum_pallas(messages: jax.Array, dst_sorted: jax.Array,
+                           first_tile: jax.Array, n: int, bn: int = 128,
+                           be: int = 256, t_max: int = 4,
+                           interpret: bool = False) -> jax.Array:
+    """messages[E,d] (dst-sorted, -1 padded), dst_sorted[E] int32,
+    first_tile[n_blocks] int32 -> f32[n_pad, d] with n_pad = blocks * bn.
+
+    ``first_tile[i]`` = index of the first edge tile containing an edge for
+    node block i (clamped so first_tile + t_max covers the block's range).
+    """
+    e, d = messages.shape
+    assert e % be == 0, (e, be)
+    n_blocks = -(-n // bn)
+    grid = (n_blocks, t_max)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bn=bn, t_max=t_max),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((be, d), lambda i, t, ft: (ft[i] + t, 0)),
+                pl.BlockSpec((1, be), lambda i, t, ft: (0, ft[i] + t)),
+            ],
+            out_specs=pl.BlockSpec((bn, d), lambda i, t, ft: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((bn, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * bn, d), jnp.float32),
+        interpret=interpret,
+    )(first_tile, messages, dst_sorted[None, :])
+    return out
+
+
+def plan_tiles(dst_sorted, n: int, bn: int, be: int, e_pad: int):
+    """Host-side tile plan: per node block, the first edge tile index and
+    the global t_max. Returns (first_tile int32[n_blocks], t_max int).
+
+    dst_sorted: int32[E], sorted ascending; padding encoded as PAD_SENTINEL
+    (NOT -1 -- -1 would sort first and break the contiguous-range property).
+    """
+    import numpy as np
+    dst = np.asarray(dst_sorted)
+    n_blocks = -(-n // bn)
+    n_tiles = e_pad // be
+    # first/last edge index per node block via searchsorted
+    starts = np.searchsorted(dst, np.arange(n_blocks) * bn, side="left")
+    ends = np.searchsorted(dst, np.minimum((np.arange(n_blocks) + 1) * bn,
+                                           n) - 1, side="right")
+    first = np.minimum(starts // be, n_tiles - 1)
+    last = np.maximum(np.ceil(ends / be).astype(np.int64) - 1, first)
+    t_max = int((last - first + 1).max()) if n_blocks else 1
+    # clamp so first + t_max stays in range
+    first = np.minimum(first, n_tiles - t_max)
+    first = np.maximum(first, 0)
+    return first.astype(np.int32), t_max

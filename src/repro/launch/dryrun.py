@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_disable_hlo_passes=while-loop-expensive-invariant-code-motion,while-loop-invariant-code-motion"
+
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). The placeholder device count builds the production
+# mesh; the disabled passes hoist whole-stack bf16->f32 converts out of the
+# layer scans, trading tens of GiB of HBM for negligible elementwise
+# recompute -- the wrong trade at these sizes (perf_log it-8: kimi train
+# 51.1 -> 32.4 GiB/chip). Everything below is ordinary.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) cell, lower + compile the cell's
+step function on the production mesh -- 16x16 (single pod, 256 chips) and
+2x16x16 (multi-pod, 512 chips) -- and record memory/cost/roofline analysis.
+Failures (sharding mismatch, compile OOM, unsupported collective) are bugs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 placeholder devices, got {len(jax.devices())}")
+
+    from repro.launch.dryrun_lib import all_cells, run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    if args.all:
+        cells = all_cells()
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for aid, sname in cells:
+        for mname, mesh in meshes:
+            path = outdir / f"{aid}__{sname}__{mname}.json"
+            if path.exists() and not args.force:
+                rec = json.loads(path.read_text())
+                print(f"[cached] {rec['cell']}: {rec['status']}")
+                if rec["status"] == "fail":
+                    failures += 1
+                continue
+            t0 = time.perf_counter()
+            rec = run_cell(aid, sname, mesh, mname)
+            rec["wall_s"] = round(time.perf_counter() - t0, 2)
+            path.write_text(json.dumps(rec, indent=2))
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" bottleneck={r['bottleneck']}"
+                         f" tC={r['t_compute_s']:.4f}s tM={r['t_memory_s']:.4f}s"
+                         f" tN={r['t_collective_s']:.4f}s"
+                         f" mem/chip={rec['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+            elif status == "fail":
+                failures += 1
+                extra = " " + rec["error"][:200]
+            print(f"[{status}] {aid}/{sname}/{mname}"
+                  f" ({rec.get('wall_s', 0):.0f}s){extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

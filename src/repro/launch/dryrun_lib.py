@@ -1,0 +1,169 @@
+"""Dry-run implementation (imported by dryrun.py AFTER XLA_FLAGS is set).
+
+One cell = (architecture x input shape x mesh). For each cell we build the
+step function the shape kind dictates, attach the sharding policy, then
+``jit(...).lower(**abstract inputs).compile()`` -- success proves the
+distribution config is coherent; the compiled artifact feeds the roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import (ArchDef, GNNConfig, LMConfig, RecsysConfig,
+                               ShapeSpec, get_arch, list_archs)
+from repro.distributed import sharding as shd
+from repro.launch import roofline as rl
+from repro.models import api as mapi
+
+
+def _named(tree, mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def gnn_model_flops(cfg: GNNConfig, shape: ShapeSpec) -> float:
+    n, e = mapi._gnn_block_sizes(shape)
+    dh = cfg.d_hidden
+    mlp2 = lambda din: din * dh + dh * dh  # 2-layer MLP MACs per row
+    per_layer = e * mlp2(3 * dh) + n * mlp2(2 * dh)
+    enc = n * mlp2(shape.get("d_feat", cfg.in_node_dim)) + e * mlp2(cfg.in_edge_dim)
+    dec = n * mlp2(dh)
+    macs = cfg.n_layers * per_layer + enc + dec
+    return 6.0 * macs  # fwd+bwd ~= 3x fwd, 2 flops/MAC
+
+
+def recsys_model_flops(cfg: RecsysConfig, shape: ShapeSpec) -> float:
+    b = shape.get("batch", 1)
+    dims = [cfg.n_sparse * cfg.embed_dim + cfg.n_dense] + list(cfg.mlp_dims) + [1]
+    if cfg.model == "dien":
+        dims[0] += cfg.gru_dim + cfg.embed_dim
+        gru = cfg.seq_len * 2 * 3 * (cfg.embed_dim + cfg.gru_dim) * cfg.gru_dim
+    else:
+        gru = 0
+    if cfg.model == "bst":
+        dims[0] += (cfg.seq_len + 1) * cfg.embed_dim
+    macs = sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1)) + gru
+    mult = 6.0 if shape.kind == "recsys_train" else 2.0
+    flops = mult * b * macs
+    if shape.kind == "recsys_retrieval":
+        flops += 2.0 * b * shape["n_candidates"] * cfg.embed_dim
+    return flops
+
+
+def model_flops(cfg, shape: ShapeSpec) -> float:
+    cfg = mapi.resolve_config(cfg, shape)
+    if isinstance(cfg, LMConfig):
+        return rl.lm_model_flops(cfg, shape)
+    if isinstance(cfg, GNNConfig):
+        return gnn_model_flops(cfg, shape)
+    return recsys_model_flops(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: ArchDef, shape: ShapeSpec, mesh):
+    """Returns (jitted_fn, lower_args: tuple) ready for .lower()."""
+    cfg = mapi.resolve_config(arch.config, shape)
+    specs = mapi.input_specs(cfg, shape)
+    params_spec = mapi.abstract_params(cfg)
+    p_sh = _named(shd.param_specs(cfg, params_spec, mesh), mesh)
+    b_spec_tree = shd.batch_specs(cfg, shape, specs, mesh)
+    b_sh = _named(b_spec_tree, mesh)
+
+    if shape.kind in ("train", "graph_full", "graph_minibatch",
+                      "graph_batched", "recsys_train"):
+        step, opt = mapi.make_train_step(cfg)
+        opt_spec = jax.eval_shape(opt.init, params_spec)
+        o_sh = _named(shd.opt_specs(shd.param_specs(cfg, params_spec, mesh),
+                                    opt_spec), mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh,
+                                    _named(jax.tree.map(lambda _: P(),
+                                                        {"loss": 0, "ppl": 0}
+                                                        if isinstance(cfg, LMConfig)
+                                                        else {"loss": 0}), mesh)),
+                     # params/opt buffers are donated (updated in place) --
+                     # without donation a full second copy of the params
+                     # lives across the update (8 GiB/chip on kimi)
+                     donate_argnums=(0, 1))
+        return fn, (params_spec, opt_spec, specs)
+
+    if shape.kind == "prefill":
+        fn = jax.jit(mapi.make_prefill_step(cfg), in_shardings=(p_sh, b_sh["tokens"]))
+        return fn, (params_spec, specs["tokens"])
+
+    if shape.kind == "decode":
+        fn = jax.jit(mapi.make_decode_step(cfg),
+                     in_shardings=(p_sh, b_sh["cache"], b_sh["token"]),
+                     out_shardings=(b_sh["cache"], None),
+                     donate_argnums=(1,))   # KV cache updated in place
+        return fn, (params_spec, specs["cache"], specs["token"])
+
+    if shape.kind == "recsys_serve":
+        fn = jax.jit(mapi.make_serve_step(cfg), in_shardings=(p_sh, b_sh))
+        return fn, (params_spec, specs)
+
+    if shape.kind == "recsys_retrieval":
+        fn = jax.jit(mapi.make_retrieval_step(cfg), in_shardings=(p_sh, b_sh))
+        return fn, (params_spec, specs)
+
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str) -> dict:
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    cell = f"{arch_id}/{shape_name}/{mesh_name}"
+    if shape.skip_reason:
+        return {"cell": cell, "status": "skip", "reason": shape.skip_reason}
+    t0 = time.perf_counter()
+    try:
+        from repro.distributed.autoshard import activation_sharding
+        with activation_sharding(mesh):
+            fn, args = build_cell(arch, shape, mesh)
+            lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem_d[f] = int(getattr(mem, f, 0))
+        chips = int(np.prod(list(mesh.shape.values())))
+        roof = rl.analyze(cell, compiled, chips,
+                          model_flops=model_flops(arch.config, shape))
+        return {
+            "cell": cell, "status": "ok",
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "memory_analysis": mem_d,
+            "roofline": roof.to_dict(),
+        }
+    except Exception as e:  # noqa: BLE001 -- dry-run failures are findings
+        return {"cell": cell, "status": "fail",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+                "elapsed_s": round(time.perf_counter() - t0, 2)}
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for aid in list_archs():
+        for s in get_arch(aid).shapes:
+            out.append((aid, s.name))
+    return out

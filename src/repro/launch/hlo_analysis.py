@@ -1,0 +1,280 @@
+"""Trip-count-aware cost analysis of post-SPMD optimized HLO.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body
+ONCE -- for scanned-layer models that underreports flops/bytes by the
+layer count (verified: an 8-step scan reports exactly 1/8; see
+EXPERIMENTS.md Methodology). This module re-derives per-chip costs from
+``compiled.as_text()``:
+
+  * parse computations + instructions (symbol table of result shapes),
+  * build the call multigraph: while bodies carry
+    backend_config known_trip_count, fusions/calls multiply by call sites,
+  * flops  = sum over dot/convolution instructions of
+             2 * |result| * contraction_size * multiplicity,
+  * bytes  = sum of (operand + result) buffer bytes of materializing
+             instructions * multiplicity (an HBM-traffic model: fusion
+             internals don't materialize),
+  * collective bytes per kind, with multiplicity.
+
+Shapes in post-SPMD HLO are per-partition, so every figure is per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+#: ops whose results are elementwise-fusable glue; everything else is
+#: treated as materializing a buffer for the HBM-traffic model
+_NON_MATERIAL = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    return [(d, [int(x) for x in dims.split(",")] if dims else [])
+            for d, dims in _SHAPE_RE.findall(shape_str)]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dtype, 0)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    symbols: dict[str, str]        # instr name -> result shape str
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OP_CALL = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _matched_paren(s: str, start: int) -> int:
+    """Index of the ')' matching s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def _parse_instr(line: str) -> Optional[tuple[str, str, str, list[str]]]:
+    """(name, shape, op, operands) -- tolerant of /*index=N*/ comments and
+    nested tuple shapes."""
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):                       # tuple-shaped result
+        close = _matched_paren(rest, 0)
+        shape = rest[:close + 1]
+        rest = rest[close + 1:]
+    else:
+        sm = re.match(r"([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", rest)
+        if not sm:
+            return None
+        shape = sm.group(1)
+        rest = rest[sm.end():]
+    om = _OP_CALL.match(rest)
+    if not om:
+        return None
+    op = om.group(1)
+    astart = om.end() - 1
+    aend = _matched_paren(rest, astart)
+    operands = re.findall(r"%([\w\.\-]+)", rest[astart + 1:aend])
+    return name, shape, op, operands
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr(line)
+        if parsed:
+            name, shape, op, operands = parsed
+            cur.instrs.append(Instr(name, shape, op, operands, line))
+            cur.symbols[name] = shape
+    return comps
+
+
+def _trip_count(line: str) -> int:
+    m = re.search(r'"known_trip_count":\s*{\s*"n":\s*"?(\d+)"?', line)
+    return int(m.group(1)) if m else 1
+
+
+def _called(line: str) -> list[tuple[str, int]]:
+    """(computation, trip_count) pairs invoked by this instruction."""
+    out = []
+    m = re.search(r"body=%?([\w\.\-]+)", line)
+    if m:
+        out.append((m.group(1), _trip_count(line)))
+    m = re.search(r"condition=%?([\w\.\-]+)", line)
+    if m:
+        out.append((m.group(1), _trip_count(line)))
+    m = re.search(r"calls=%?([\w\.\-]+)", line)
+    if m:
+        out.append((m.group(1), 1))
+    for m in re.finditer(r"to_apply=%?([\w\.\-]+)", line):
+        out.append((m.group(1), 1))
+    for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)%?([\w\.\-]+)", line):
+        out.append((m.group(1), 1))
+    return out
+
+
+def multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name:
+            entry = name
+    if entry is None:  # fall back: computation not referenced by any other
+        referenced = {c for comp in comps.values() for i in comp.instrs
+                      for c, _ in _called(i.line)}
+        roots = [n for n in comps if n not in referenced]
+        entry = roots[-1] if roots else next(iter(comps))
+    mult: dict[str, float] = {n: 0.0 for n in comps}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] += m
+        for instr in comps[name].instrs:
+            for callee, trips in _called(instr.line):
+                visit(callee, m * trips)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    result_elems = 0
+    for _, dims in _shape_dims(instr.shape):
+        n = 1
+        for d in dims:
+            n *= d
+        result_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    contract = 1
+    if m and instr.operands:
+        lhs_shape = comp.symbols.get(instr.operands[0])
+        if lhs_shape:
+            dims = _shape_dims(lhs_shape)[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * result_elems * contract
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    coll_breakdown: dict = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def largest_buffers(text: str, top: int = 20) -> list[tuple[int, str, str]]:
+    """(bytes, computation, instruction-line-prefix) for the biggest result
+    buffers -- the memory-debugging view behind the hillclimb hypotheses."""
+    comps = parse_hlo(text)
+    mult = multiplicities(comps)
+    out = []
+    for comp in comps.values():
+        if mult.get(comp.name, 0.0) == 0.0:
+            continue
+        for instr in comp.instrs:
+            if instr.op in _NON_MATERIAL:
+                continue
+            b = _shape_bytes(instr.shape)
+            if b > (1 << 20):
+                out.append((b, comp.name, instr.line.strip()[:160]))
+    out.sort(reverse=True)
+    # dedupe identical shapes from the same computation family
+    seen = set()
+    uniq = []
+    for b, c, l in out:
+        key = (b, l.split("=")[1][:60] if "=" in l else l[:60])
+        if key in seen:
+            continue
+        seen.add(key)
+        uniq.append((b, c, l))
+        if len(uniq) >= top:
+            break
+    return uniq
+
+
+def analyze_text(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    mult = multiplicities(comps)
+    out = HloCost(coll_breakdown={k: 0.0 for k in COLLECTIVES})
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        for instr in comp.instrs:
+            if instr.op == "while":
+                out.n_while += 1
+                out.max_trip = max(out.max_trip, _trip_count(instr.line))
+            if instr.op in ("dot", "convolution"):
+                out.flops += m * _dot_flops(instr, comp)
+            kind = instr.op
+            base = kind.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not kind.endswith("-done"):
+                b = _shape_bytes(instr.shape)
+                out.collective_bytes += m * b
+                out.coll_breakdown[base] += m * b
+            if instr.op not in _NON_MATERIAL and not kind.endswith("-done"):
+                rw = _shape_bytes(instr.shape)
+                for op_name in instr.operands:
+                    rw += _shape_bytes(comp.symbols.get(op_name, ""))
+                out.bytes_accessed += m * rw
+    return out

@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON records.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import pathlib
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def load(dirname: str):
+    recs = []
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        recs.append(json.loads(pathlib.Path(f).read_text()))
+    return recs
+
+
+def render(recs, mesh_filter: str) -> str:
+    rows = []
+    head = ("| cell | status | tC (s) | tM (s) | tN (s) | bottleneck | "
+            "useful | roofline frac | mem/chip GiB | peak coll op |")
+    sep = "|" + "---|" * 10
+    rows.append(head)
+    rows.append(sep)
+    for r in recs:
+        if mesh_filter not in r["cell"]:
+            continue
+        cell = r["cell"].replace(f"/{mesh_filter}", "")
+        if r["status"] == "skip":
+            rows.append(f"| {cell} | SKIP (documented) | | | | | | | | |")
+            continue
+        if r["status"] == "fail":
+            rows.append(f"| {cell} | FAIL | | | | | | | | |")
+            continue
+        roof = r["roofline"]
+        coll = roof.get("coll_breakdown", {})
+        peak_op = max(coll, key=coll.get) if any(coll.values()) else "-"
+        rows.append(
+            f"| {cell} | ok | {roof['t_compute_s']:.4f} "
+            f"| {roof['t_memory_s']:.4f} | {roof['t_collective_s']:.4f} "
+            f"| {roof['bottleneck']} | {roof['useful_flops_fraction']:.3f} "
+            f"| {roof['roofline_fraction']:.4f} "
+            f"| {fmt_bytes(r['memory_analysis'].get('temp_size_in_bytes', 0))} "
+            f"| {peak_op} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
+        n_ok = sum(1 for r in recs if mesh in r["cell"] and r["status"] == "ok")
+        n_skip = sum(1 for r in recs if mesh in r["cell"]
+                     and r["status"] == "skip")
+        n_fail = sum(1 for r in recs if mesh in r["cell"]
+                     and r["status"] == "fail")
+        print(f"\n### {mesh}  (ok={n_ok} skip={n_skip} fail={n_fail})\n")
+        print(render(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` reports per-partition (per-chip) flops/bytes
+for an SPMD module, so HLO_FLOPs = flops x chips. Collective bytes are not
+in cost_analysis: we parse the post-SPMD optimized HLO and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute; HLO shapes are per-partition, so the global
+collective_bytes = per-chip sum x chips, making the roofline term equal to
+per-chip collective bytes / link bandwidth (single-link convention per the
+assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+from repro.common.hardware import TARGET, ChipSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string like 'bf16[8,128]' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_per_chip(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind (per-partition bytes)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result shape appears between '=' and the op name
+        for kind in _COLLECTIVES:
+            # match "= <shape> kind(" with optional -start/-done suffixes
+            m = re.search(rf"=\s+(\(.*?\)|\S+)\s+{kind}(?:-start|-done)?\(",
+                          ls)
+            if m:
+                if f"{kind}-done" in ls:
+                    break  # counted at -start; -done repeats the shape
+                out[kind] += _shape_bytes(m.group(1))
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict[str, int]
+    model_flops: float = 0.0          # 6*N*D (dense) / 6*N_active*D (MoE)
+    peak_memory_per_chip: float = 0.0
+    xla_cost: dict | None = None      # raw cost_analysis (see analyze())
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / TARGET.peak_bf16_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / TARGET.hbm_bandwidth
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / TARGET.ici_link_bandwidth
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute roofline if the dominant term is
+        perfectly overlapped: t_compute / max(all terms)."""
+        return self.t_compute / self.bound_time if self.bound_time else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "xla_cost": self.xla_cost,
+            "name": self.name, "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "peak_memory_per_chip": self.peak_memory_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(name: str, compiled, chips: int, model_flops: float = 0.0
+            ) -> Roofline:
+    """Headline figures come from the trip-count-aware HLO analyzer
+    (repro.launch.hlo_analysis); XLA's cost_analysis is attached as
+    ``xla_cost_*`` for reference (it counts while bodies once -- see
+    EXPERIMENTS.md Methodology)."""
+    from repro.launch import hlo_analysis
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    hc = hlo_analysis.analyze_text(hlo)
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        peak = float(getattr(mem, "temp_size_in_bytes", 0) +
+                     getattr(mem, "argument_size_in_bytes", 0) +
+                     getattr(mem, "output_size_in_bytes", 0) -
+                     getattr(mem, "alias_size_in_bytes", 0))
+    r = Roofline(name=name, chips=chips, flops_per_chip=hc.flops,
+                 bytes_per_chip=hc.bytes_accessed,
+                 coll_bytes_per_chip=hc.collective_bytes,
+                 coll_breakdown={k: int(v) for k, v in
+                                 hc.coll_breakdown.items()},
+                 model_flops=model_flops, peak_memory_per_chip=peak)
+    r.xla_cost = {"flops": float(cost.get("flops", 0.0)),
+                  "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    return r
+
+
+def lm_model_flops(cfg, shape) -> float:
+    """6*N*D with N = active params; decode counts one token/step, plus
+    attention KV dot cost which dominates decode."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape["seq_len"] * shape["global_batch"]
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape["seq_len"] * shape["global_batch"]
+        # forward only
+        return 2.0 * n_active * tokens
+    if shape.kind == "decode":
+        b, s = shape["global_batch"], shape["seq_len"]
+        dense = 2.0 * n_active * b
+        attn = (2.0 * 2.0 * cfg.n_layers * b * s
+                * cfg.n_kv_heads * cfg.head_dim * cfg.q_per_kv)
+        return dense + attn
+    return 0.0

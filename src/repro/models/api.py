@@ -1,0 +1,210 @@
+"""Family-dispatch model API: init / loss / step functions + input specs.
+
+Everything the launcher, dry-run and tests need to drive any of the 10
+assigned architectures uniformly:
+
+    api = model_api(arch.config)
+    params = api.init(key)                       (or jax.eval_shape for dry-run)
+    step = make_train_step(cfg)                  (params, opt, batch) -> ...
+    specs = input_specs(cfg, shape)              ShapeDtypeStructs per cell
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import (ArchDef, GNNConfig, LMConfig, RecsysConfig,
+                               ShapeSpec)
+from repro.models import gnn, recsys, transformer
+from repro.training.optimizer import make_optimizer
+
+
+class ModelAPI(NamedTuple):
+    init: Callable
+    loss: Callable                       # (params, batch) -> (loss, metrics)
+    family: str
+
+
+def model_api(cfg) -> ModelAPI:
+    if isinstance(cfg, LMConfig):
+        return ModelAPI(init=functools.partial(transformer.init_lm, cfg),
+                        loss=functools.partial(transformer.lm_loss, cfg),
+                        family="lm")
+    if isinstance(cfg, GNNConfig):
+        return ModelAPI(init=functools.partial(gnn.init_gnn, cfg),
+                        loss=functools.partial(gnn.gnn_loss, cfg),
+                        family="gnn")
+    if isinstance(cfg, RecsysConfig):
+        return ModelAPI(init=functools.partial(recsys.init_recsys, cfg),
+                        loss=functools.partial(recsys.recsys_loss, cfg),
+                        family="recsys")
+    raise TypeError(type(cfg))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg, lr: float | None = None):
+    api = model_api(cfg)
+    opt = make_optimizer(getattr(cfg, "optimizer", "adamw"), lr)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss, has_aux=True)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_eval_step(cfg):
+    api = model_api(cfg)
+
+    def eval_step(params, batch):
+        return api.loss(params, batch)[1]
+
+    return eval_step
+
+
+def make_decode_step(cfg: LMConfig):
+    def decode(params, cache, token):
+        return transformer.decode_step(cfg, params, cache, token)
+    return decode
+
+
+def make_prefill_step(cfg: LMConfig):
+    def pre(params, tokens):
+        return transformer.prefill(cfg, params, tokens)
+    return pre
+
+
+def make_serve_step(cfg: RecsysConfig):
+    def serve(params, batch):
+        return recsys.recsys_forward(cfg, params, batch)
+    return serve
+
+
+def make_retrieval_step(cfg: RecsysConfig, k: int = 100):
+    def retrieve(params, batch):
+        scores = recsys.retrieval_scores(cfg, params, batch)
+        vals, idx = jax.lax.top_k(scores, k)
+        return vals, jnp.take(batch["candidates"], idx)
+    return retrieve
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+_i32 = jnp.int32
+_f32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pad512(x: int) -> int:
+    """Pad flat node/edge counts to a multiple of 512 so every mesh axis
+    combination divides them (padding is -1-masked in the model)."""
+    return -(-x // 512) * 512
+
+
+def _gnn_block_sizes(shape: ShapeSpec) -> tuple[int, int]:
+    """(n_nodes_pad, n_edges_pad) for each GNN shape kind."""
+    if shape.kind == "graph_full":
+        return _pad512(shape["n_nodes"]), _pad512(shape["n_edges"])
+    if shape.kind == "graph_minibatch":
+        b = shape["batch_nodes"]
+        f1, f2 = shape.get("fanout1", 15), shape.get("fanout2", 10)
+        n = b * (1 + f1 + f1 * f2)
+        e = b * (f1 + f1 * f2)
+        return _pad512(n), _pad512(e)
+    if shape.kind == "graph_batched":
+        g = shape["batch"]
+        return _pad512(g * shape["n_nodes"]), _pad512(g * shape["n_edges"])
+    raise ValueError(shape.kind)
+
+
+def resolve_config(cfg, shape: ShapeSpec):
+    """Shape-dependent config fields (GNN input feature width comes from
+    the dataset, i.e. the shape)."""
+    import dataclasses
+    if isinstance(cfg, GNNConfig):
+        return dataclasses.replace(
+            cfg, in_node_dim=shape.get("d_feat", cfg.in_node_dim))
+    return cfg
+
+
+def input_specs(cfg, shape: ShapeSpec) -> dict[str, Any]:
+    """Step-input ShapeDtypeStructs for one (arch, shape) cell.
+
+    For decode shapes the dict includes the KV cache spec; the dry-run
+    treats every entry as a step input.
+    """
+    if isinstance(cfg, LMConfig):
+        if shape.kind == "train":
+            return {"tokens": _sds((shape["global_batch"], shape["seq_len"]),
+                                   _i32)}
+        if shape.kind == "prefill":
+            return {"tokens": _sds((shape["global_batch"], shape["seq_len"]),
+                                   _i32)}
+        if shape.kind == "decode":
+            b, s = shape["global_batch"], shape["seq_len"]
+            cdt = jnp.dtype(cfg.compute_dtype)
+            kv_shape = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim)
+            return {
+                "cache": transformer.KVCache(
+                    k=_sds(kv_shape, cdt), v=_sds(kv_shape, cdt),
+                    length=_sds((), _i32)),
+                "token": _sds((b,), _i32),
+            }
+        raise ValueError(f"LM has no shape kind {shape.kind}")
+
+    if isinstance(cfg, GNNConfig):
+        n, e = _gnn_block_sizes(shape)
+        d_feat = shape.get("d_feat", cfg.in_node_dim)
+        return {
+            "node_feats": _sds((n, d_feat), _f32),
+            "edge_src": _sds((e,), _i32),
+            "edge_dst": _sds((e,), _i32),
+            "edge_feats": _sds((e, cfg.in_edge_dim), _f32),
+            "node_targets": _sds((n, cfg.out_dim), _f32),
+            "node_mask": _sds((n,), jnp.bool_),
+        }
+
+    if isinstance(cfg, RecsysConfig):
+        hot = max(cfg.multi_hot_sizes) if cfg.multi_hot_sizes else 1
+        b = shape.get("batch", 1)
+        base = {
+            "dense": _sds((b, cfg.n_dense), _f32),
+            "sparse": _sds((b, cfg.n_sparse, hot), _i32),
+        }
+        if cfg.seq_len:
+            base["seq"] = _sds((b, cfg.seq_len), _i32)
+            base["target_item"] = _sds((b,), _i32)
+        if shape.kind == "recsys_train":
+            base["labels"] = _sds((b,), _f32)
+        if shape.kind == "recsys_retrieval":
+            base["candidates"] = _sds((shape["n_candidates"],), _i32)
+        return base
+
+    raise TypeError(type(cfg))
+
+
+def abstract_params(cfg) -> Any:
+    """Parameter ShapeDtypeStructs without allocating (for lowering)."""
+    api = model_api(cfg)
+    return jax.eval_shape(api.init, jax.random.key(0))
+
+
+def abstract_opt_state(cfg, params_spec) -> Any:
+    opt = make_optimizer(getattr(cfg, "optimizer", "adamw"))
+    return jax.eval_shape(opt.init, params_spec)

@@ -1,0 +1,127 @@
+"""Halo-partitioned message passing (hillclimb #2, beyond-paper).
+
+Baseline edge-parallel message passing replicates node states and
+all-reduces the full [N, d_hidden] aggregate every layer -- collective
+bytes scale with N regardless of partition quality. Mesh-like graphs
+(MeshGraphNet's native domain) partition with small boundaries, so the
+production layout is owner-computes:
+
+  * nodes are split into P partitions (one per chip across every mesh
+    axis); each chip owns its nodes' states and all edges whose dst it
+    owns;
+  * per layer, each chip sends only the boundary ("halo") rows its
+    neighbors need: send buffer [P, S, d] -> all_to_all -> received halo;
+    comm per layer = P*S*d per chip instead of N*d.
+
+Shapes are uniform (S = halo slots per partition pair, -1 padded), so the
+same program serves any partitioning; partition quality only changes S.
+For a 2D mesh graph S/n_local ~ 4/sqrt(n_local) (boundary/area); the
+dry-run uses halo_per_pair from the config. Host-side partitioning for
+real runs lives in repro/data/graph_partition.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import GNNConfig
+from repro.models.gnn import _mlp, init_gnn
+
+
+def partitioned_input_specs(cfg: GNNConfig, shape, n_parts: int,
+                            halo_per_pair: int = 16) -> dict:
+    """ShapeDtypeStructs for the partitioned layout (leading P dim)."""
+    from repro.models.api import _gnn_block_sizes
+    n, e = _gnn_block_sizes(shape)
+    nl = -(-n // n_parts)
+    el = -(-e // n_parts)
+    d_feat = shape.get("d_feat", cfg.in_node_dim)
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "node_feats": sds((n_parts, nl, d_feat), f32),
+        "edge_src": sds((n_parts, el), i32),     # 0..nl+P*S-1 (ext index)
+        "edge_dst": sds((n_parts, el), i32),     # 0..nl-1, -1 pad
+        "edge_feats": sds((n_parts, el, cfg.in_edge_dim), f32),
+        "send_idx": sds((n_parts, n_parts, halo_per_pair), i32),
+        "node_targets": sds((n_parts, nl, cfg.out_dim), f32),
+        "node_mask": sds((n_parts, nl), jnp.bool_),
+    }
+
+
+def partitioned_loss(cfg: GNNConfig, mesh: Mesh):
+    """Returns loss_fn(params, batch) running owner-computes message
+    passing under shard_map over every mesh axis."""
+    axes = tuple(mesh.axis_names)
+
+    def local(params, nf, es, ed, ef, send_idx, targets, mask):
+        # local views: [1, nl, ...] -> squeeze the partition dim
+        nf, es, ed, ef = nf[0], es[0], ed[0], ef[0]
+        send_idx, targets, mask = send_idx[0], targets[0], mask[0]
+        nl = nf.shape[0]
+        cdt = jnp.dtype(cfg.compute_dtype)
+        e_ok = (ed >= 0)
+        d_safe = jnp.where(e_ok, ed, nl)
+
+        h = _mlp(params["node_enc"], nf.astype(cdt))
+        e = _mlp(params["edge_enc"], ef.astype(cdt))
+
+        def block(carry, p):
+            h, e = carry
+            # ---- halo exchange: send my boundary rows to each peer ----
+            send = jnp.where((send_idx >= 0)[..., None],
+                             h[jnp.maximum(send_idx, 0)], 0)  # [P, S, dh]
+            recv = lax.all_to_all(send, axes, split_axis=0, concat_axis=0,
+                                  tiled=False)                # [P, S, dh]
+            h_ext = jnp.concatenate([h, recv.reshape(-1, h.shape[-1])], 0)
+            msg_in = jnp.concatenate(
+                [e, h_ext[jnp.maximum(es, 0)],
+                 h[jnp.maximum(ed, 0)]], axis=-1)
+            e = e + _mlp(p["edge_mlp"], msg_in)
+            agg = jax.ops.segment_sum(jnp.where(e_ok[:, None], e, 0),
+                                      d_safe, num_segments=nl + 1)[:nl]
+            h = h + _mlp(p["node_mlp"],
+                         jnp.concatenate([h, agg.astype(cdt)], axis=-1))
+            return (h, e), None
+
+        blocks = {"edge_mlp": params["edge_mlp"],
+                  "node_mlp": params["node_mlp"]}
+        step = block
+        if cfg.remat:
+            step = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable)
+        (h, e), _ = lax.scan(step, (h, e), blocks)
+        pred = _mlp(params["decoder"], h).astype(jnp.float32)
+        w = mask.astype(jnp.float32)[:, None]
+        se = ((pred - targets.astype(jnp.float32)) ** 2 * w).sum()
+        cnt = w.sum() * pred.shape[-1]
+        # global mean across partitions
+        se = lax.psum(se, axes)
+        cnt = lax.psum(cnt, axes)
+        return se / jnp.maximum(cnt, 1.0)
+
+    pd = P(axes)
+
+    def loss_fn(params, batch):
+        loss = jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(),
+                      P(axes, None, None), P(axes, None), P(axes, None),
+                      P(axes, None, None), P(axes, None, None),
+                      P(axes, None, None), P(axes, None)),
+            out_specs=P(),
+            check_vma=False,
+        )(params, batch["node_feats"], batch["edge_src"], batch["edge_dst"],
+          batch["edge_feats"], batch["send_idx"], batch["node_targets"],
+          batch["node_mask"])
+        return loss, {"loss": loss}
+
+    return loss_fn

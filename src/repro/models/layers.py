@@ -1,0 +1,273 @@
+"""Shared neural-net layers (functional, param-pytree style).
+
+No external NN library: params are plain dict pytrees, layers are
+(init, apply) function pairs. Layer params for transformer stacks carry a
+leading ``L`` axis and are consumed with ``lax.scan`` so the lowered HLO
+stays compact even for 61-layer trillion-parameter configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Params = Any
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim, dtype, layers=None):
+    shape = (dim,) if layers is None else (layers, dim)
+    return {"scale": jnp.zeros(shape, dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    """RMSNorm with (1 + scale) parameterization (gemma convention)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(dim, dtype, layers=None):
+    shape = (dim,) if layers is None else (layers, dim)
+    return {"scale": jnp.ones(shape, dtype=dtype),
+            "bias": jnp.zeros(shape, dtype=dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    ang = ang[..., :, None, :]                                # [..., S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_mask(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+                   window) -> jax.Array:
+    """[..., Sq, Skv] boolean. ``window`` may be a traced scalar (layers
+    with unrestricted attention pass a huge sentinel)."""
+    diff = q_pos[..., :, None] - kv_pos[..., None, :]
+    mask = diff < window
+    if causal:
+        mask &= diff >= 0
+    return mask
+
+
+def mha(q, k, v, mask, *, logit_cap: float = 0.0, scale: float | None = None):
+    """q: [B,Sq,H,hd], k/v: [B,Skv,KV,hd] (GQA: H = KV * groups).
+    mask: bool [B, Sq, Skv] (broadcast over heads)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, groups, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, logit_cap)
+    logits = jnp.where(mask[:, None, None, :, :],
+                       logits.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def chunked_mha(q, k, v, q_pos, kv_pos, *, causal: bool, window,
+                logit_cap: float = 0.0, chunk: int = 512,
+                scale: float | None = None):
+    """Online-softmax (flash-style) attention over KV chunks.
+
+    Memory: O(Sq * chunk) scores instead of O(Sq * Skv); used for long
+    prefill where materializing [Sq, Skv] would not fit. Pure JAX (the TPU
+    kernel schedule is the same loop; XLA pipelines the chunk scan).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale_ = scale if scale is not None else 1.0 / np.sqrt(hd)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qg = (q.reshape(b, sq, kvh, groups, hd) * scale_)
+
+    def step(carry, xs):
+        m, num, den = carry
+        kc, vc, pc = xs                       # [b,chunk,kvh,hd], [b,chunk]
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, kc,
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, logit_cap)
+        valid = pc[:, None, None, None, :] >= 0
+        diff = q_pos[:, None, None, :, None] - pc[:, None, None, None, :]
+        mask = valid & (diff < window)
+        if causal:
+            mask &= diff >= 0
+        logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(kc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        num = num * alpha[..., None] + pv.astype(jnp.float32)
+        den = den * alpha + p.sum(axis=-1)
+        return (m_new, num, den), None
+
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    m0 = jnp.full((b, kvh, groups, sq), -jnp.inf, jnp.float32)
+    num0 = jnp.zeros((b, kvh, groups, sq, hd), jnp.float32)
+    den0 = jnp.zeros((b, kvh, groups, sq), jnp.float32)
+    # checkpoint each chunk step: the backward recomputes the [.., sq, ck]
+    # probability matrices instead of the scan-transpose stacking them for
+    # every chunk (the flash-attention backward; perf_log it-7)
+    step_ckpt = jax.checkpoint(
+        step, policy=jax.checkpoint_policies.nothing_saveable)
+    (m, num, den), _ = lax.scan(step_ckpt, (m0, num0, den0), (kc, vc, pc))
+    out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def gated_mlp_init(key, d, f, dtype, layers=None, activation="swiglu"):
+    pre = () if layers is None else (layers,)
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, pre + (d, 2 * f), dtype),
+        "wo": dense_init(k2, pre + (f, d), dtype),
+    }
+
+
+def gated_mlp(params, x, activation: str = "swiglu"):
+    from repro.distributed.autoshard import constrain
+    gate_up = jnp.einsum("...d,df->...f", x, params["wi"])
+    if gate_up.ndim == 3:
+        gate_up = constrain(gate_up, "dp", None, "tp")
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    if activation == "swiglu":
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    elif activation == "geglu":
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(activation)
+    return jnp.einsum("...f,fd->...d", act * up, params["wo"])
+
+
+def mlp_stack_init(key, dims, dtype, bias=True):
+    """Plain MLP: dims = [in, h1, ..., out]."""
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, k in enumerate(ks):
+        p = {"w": dense_init(k, (dims[i], dims[i + 1]), dtype)}
+        if bias:
+            p["b"] = jnp.zeros((dims[i + 1],), dtype)
+        layers.append(p)
+    return {"layers": tuple(layers)}
+
+
+def mlp_stack(params, x, act=jax.nn.relu, final_act=False):
+    n = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        x = x @ p["w"]
+        if "b" in p:
+            x = x + p["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# embedding bags (RecSys substrate: JAX has no nn.EmbeddingBag)
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mode: str = "sum"):
+    """table [V, D]; ids [B, hot] with -1 padding -> [B, D].
+
+    Implemented as gather + segment-reduce (taxonomy B.6): the flattened
+    lookup reduces by bag id. On TPU the same contract is served by the
+    csr_segment_sum kernel for large bags.
+    """
+    b, hot = ids.shape
+    flat = ids.reshape(-1)
+    rows = jnp.where((flat >= 0)[:, None],
+                     jnp.take(table, jnp.maximum(flat, 0), axis=0), 0)
+    seg = jnp.repeat(jnp.arange(b), hot)
+    out = jax.ops.segment_sum(rows, seg, num_segments=b)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum((flat >= 0).astype(rows.dtype), seg,
+                                  num_segments=b)
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array):
+    """Single-hot lookup with -1 -> zeros."""
+    safe = jnp.maximum(ids, 0)
+    out = jnp.take(table, safe, axis=0)
+    return jnp.where((ids >= 0)[..., None], out, 0)

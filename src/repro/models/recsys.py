@@ -1,0 +1,218 @@
+"""RecSys ranking models: Wide&Deep, DeepFM, DIEN, BST.
+
+Shared substrate: huge per-field embedding tables (row-sharded over the
+mesh in production, see repro.distributed.sharding) + EmbeddingBag for
+multi-hot fields (gather + segment-sum -- JAX has no nn.EmbeddingBag; this
+is the same primitive as the csr_segment_sum kernel), a feature-interaction
+op per model, and a small MLP tower:
+
+  wide-deep  interaction = concat  (+ linear "wide" path over sparse ids)
+  deepfm     interaction = FM: 0.5 * ((sum v)^2 - sum v^2)
+  dien       interaction = GRU over behavior seq + AUGRU attention to target
+  bst        interaction = transformer block over [behavior seq; target]
+
+Batches: {"dense": f32[B, n_dense], "sparse": int32[B, n_sparse, hot]
+(-1 pad), "seq": int32[B, T] (dien/bst), "target_item": int32[B],
+"labels": f32[B]} -- CTR binary target.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config.base import RecsysConfig
+from repro.distributed.autoshard import constrain
+from repro.models import layers as L
+
+
+def _field_tables(cfg: RecsysConfig, key, dim) -> tuple:
+    ks = jax.random.split(key, cfg.n_sparse)
+    dt = jnp.dtype(cfg.param_dtype)
+    return tuple(L.embed_init(ks[i], (cfg.field_vocabs[i], dim), dt)
+                 for i in range(cfg.n_sparse))
+
+
+def init_recsys(cfg: RecsysConfig, key: jax.Array) -> Any:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.embed_dim
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {"tables": _field_tables(cfg, keys[0], d)}
+
+    mlp_in = cfg.n_sparse * d + cfg.n_dense
+    if cfg.model == "wide_deep":
+        params["wide"] = _field_tables(cfg, keys[1], 1)
+        params["wide_dense"] = L.dense_init(keys[2], (cfg.n_dense, 1), dt)
+    elif cfg.model == "deepfm":
+        params["fm_linear"] = _field_tables(cfg, keys[1], 1)
+    elif cfg.model == "dien":
+        params["item_table"] = L.embed_init(keys[1], (cfg.item_vocab, d), dt)
+        g = cfg.gru_dim
+        params["gru"] = _gru_init(keys[2], d, g, dt)
+        params["augru"] = _gru_init(keys[3], g, g, dt)
+        params["attn"] = L.dense_init(keys[4], (g + d, 1), dt)
+        mlp_in += g + d
+    elif cfg.model == "bst":
+        params["item_table"] = L.embed_init(keys[1], (cfg.item_vocab, d), dt)
+        params["pos_embed"] = L.embed_init(keys[2], (cfg.seq_len + 1, d), dt)
+        hd = d // cfg.n_heads
+        k = jax.random.split(keys[3], 4)
+        params["blocks"] = {
+            "wq": L.dense_init(k[0], (cfg.n_blocks, d, d), dt),
+            "wk": L.dense_init(k[1], (cfg.n_blocks, d, d), dt),
+            "wv": L.dense_init(k[2], (cfg.n_blocks, d, d), dt),
+            "wo": L.dense_init(k[3], (cfg.n_blocks, d, d), dt),
+            "ln1": L.layernorm_init(d, dt, layers=cfg.n_blocks),
+            "ffn": L.gated_mlp_init(keys[5], d, 4 * d, dt, layers=cfg.n_blocks),
+            "ln2": L.layernorm_init(d, dt, layers=cfg.n_blocks),
+        }
+        mlp_in += (cfg.seq_len + 1) * d
+    else:
+        raise ValueError(cfg.model)
+
+    dims = [mlp_in] + list(cfg.mlp_dims) + [1]
+    params["mlp"] = L.mlp_stack_init(keys[6], dims, dt)
+    return params
+
+
+def _gru_init(key, d_in, d_h, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wx": L.dense_init(k1, (d_in, 3 * d_h), dt),
+            "wh": L.dense_init(k2, (d_h, 3 * d_h), dt),
+            "b": jnp.zeros((3 * d_h,), dt)}
+
+
+def _gru_cell(p, h, x, att=None):
+    """Standard GRU; ``att`` (AUGRU) scales the update gate by the
+    attention score (DIEN's attentional update gate)."""
+    gx = x @ p["wx"] + p["b"]
+    gh = h @ p["wh"]
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    if att is not None:
+        z = z * att[:, None]
+    return (1.0 - z) * n + z * h
+
+
+def _sparse_embeddings(cfg: RecsysConfig, tables, sparse) -> jax.Array:
+    """sparse int32[B, F, hot] -> [B, F, D] via per-field EmbeddingBag."""
+    outs = []
+    for f in range(cfg.n_sparse):
+        hot = cfg.multi_hot_sizes[f] if cfg.multi_hot_sizes else 1
+        ids = sparse[:, f, :hot]
+        if hot == 1:
+            outs.append(L.embedding_lookup(tables[f], ids[:, 0]))
+        else:
+            outs.append(L.embedding_bag(tables[f], ids, mode="sum"))
+    return jnp.stack(outs, axis=1)
+
+
+def recsys_forward(cfg: RecsysConfig, params, batch) -> jax.Array:
+    """-> CTR logits f32[B]."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    dense = batch["dense"].astype(cdt)
+    sparse = batch["sparse"]
+    b = dense.shape[0]
+    emb = constrain(_sparse_embeddings(cfg, params["tables"], sparse),
+                    "dp", None, None).astype(cdt)
+    flat = emb.reshape(b, -1)
+    feats = [flat, dense]
+    extra_logit = 0.0
+
+    if cfg.model == "wide_deep":
+        wide = _sparse_embeddings(cfg, params["wide"], sparse)  # [B, F, 1]
+        extra_logit = (wide.sum(axis=(1, 2)) +
+                       (dense @ params["wide_dense"].astype(cdt))[:, 0])
+    elif cfg.model == "deepfm":
+        sum_v = emb.sum(axis=1)
+        fm = 0.5 * (sum_v * sum_v - (emb * emb).sum(axis=1)).sum(axis=-1)
+        lin = _sparse_embeddings(cfg, params["fm_linear"], sparse)
+        extra_logit = fm + lin.sum(axis=(1, 2))
+    elif cfg.model == "dien":
+        seq = batch["seq"]                                    # [B, T]
+        tgt = batch["target_item"]                            # [B]
+        xe = L.embedding_lookup(params["item_table"], seq).astype(cdt)
+        te = L.embedding_lookup(params["item_table"], tgt).astype(cdt)
+        g = cfg.gru_dim
+
+        def step1(h, x):
+            h = _gru_cell(params["gru"], h, x).astype(cdt)
+            return h, h
+        h0 = jnp.zeros((b, g), cdt)
+        _, hs = lax.scan(step1, h0, xe.transpose(1, 0, 2))    # [T, B, g]
+
+        att_in = jnp.concatenate(
+            [hs, jnp.broadcast_to(te[None], (hs.shape[0], b, te.shape[-1]))],
+            axis=-1)
+        scores = jax.nn.softmax(
+            (att_in @ params["attn"].astype(cdt))[..., 0], axis=0)  # [T, B]
+
+        def step2(h, xs):
+            x, a = xs
+            h = _gru_cell(params["augru"], h, x, att=a).astype(cdt)
+            return h, None
+        hT, _ = lax.scan(step2, jnp.zeros((b, g), cdt), (hs, scores))
+        feats += [hT, te]
+    elif cfg.model == "bst":
+        seq = batch["seq"]
+        tgt = batch["target_item"]
+        xe = L.embedding_lookup(params["item_table"],
+                                jnp.concatenate([seq, tgt[:, None]], axis=1))
+        t1 = cfg.seq_len + 1
+        x = xe.astype(cdt) + params["pos_embed"][None, :t1].astype(cdt)
+        hd = cfg.embed_dim // cfg.n_heads
+        mask = jnp.ones((b, t1, t1), bool)
+
+        def block(x, p):
+            h = L.layernorm(p["ln1"], x)
+            q = (h @ p["wq"]).reshape(b, t1, cfg.n_heads, hd)
+            k = (h @ p["wk"]).reshape(b, t1, cfg.n_heads, hd)
+            v = (h @ p["wv"]).reshape(b, t1, cfg.n_heads, hd)
+            a = (L.mha(q, k, v, mask).reshape(b, t1, -1) @ p["wo"]).astype(cdt)
+            x = x + a
+            h = L.layernorm(p["ln2"], x)
+            return x + L.gated_mlp(p["ffn"], h, "swiglu").astype(cdt), None
+
+        x, _ = lax.scan(block, x, params["blocks"])
+        feats += [x.reshape(b, -1)]
+
+    z = constrain(jnp.concatenate(feats, axis=-1), "dp", None)
+    logit = L.mlp_stack(params["mlp"], z)[:, 0]
+    return (logit + extra_logit).astype(jnp.float32)
+
+
+def recsys_loss(cfg: RecsysConfig, params, batch) -> tuple[jax.Array, dict]:
+    logits = recsys_forward(cfg, params, batch)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"loss": loss}
+
+
+def retrieval_scores(cfg: RecsysConfig, params, batch) -> jax.Array:
+    """retrieval_cand: score one user query against n_candidates items.
+
+    The query tower reuses the ranking features to produce a query embedding
+    in item space; scoring = max-inner-product over the candidate item
+    embeddings -- the NaviX brute-force / distance-kernel path
+    (repro.kernels.ops.distance_matrix with metric="dot") followed by top-k.
+    """
+    from repro.kernels import ops
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cand = batch["candidates"]                     # int32[n_cand]
+    table = params.get("item_table", params["tables"][0])
+    cand_emb = constrain(L.embedding_lookup(table, cand), "tp",
+                         None).astype(cdt)
+    dense = batch["dense"].astype(cdt)
+    emb = _sparse_embeddings(cfg, params["tables"], batch["sparse"])
+    q = emb.mean(axis=1).astype(cdt) + 0.0 * dense.sum(axis=-1, keepdims=True)
+    d = constrain(ops.distance_matrix(q, cand_emb, metric="dot"),
+                  None, "tp")                              # [B, n_cand]
+    return -d                                               # similarity

@@ -1,0 +1,423 @@
+"""Decoder-only transformer LM family.
+
+Covers all five assigned LM architectures from one config surface:
+GQA/MQA + RoPE (+ optional QKV bias: qwen1.5), GeGLU/SwiGLU, tied
+embeddings with optional sqrt(d) scaling (gemma), alternating
+local(sliding-window)/global attention + attn/final logit soft-capping +
+sandwich norms (gemma2), and token-choice top-k MoE with shared experts and
+capacity-bounded sort-based dispatch (kimi-k2, granite).
+
+Layers are scanned (stacked params, leading L axis) so the lowered HLO is
+layer-count independent. Per-layer heterogeneity (local vs global
+attention) rides through the scan as a traced per-layer window array.
+
+Three entry points per the shape kinds:
+  lm_loss      -- training forward + next-token cross entropy
+  prefill      -- build a KV cache from a prompt (chunked flash-style attn)
+  decode_step  -- one token with a KV cache of length S (the decode_* and
+                  long_* dry-run cells)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config.base import LMConfig, MoEConfig
+from repro.distributed.autoshard import axis_size, constrain
+from repro.models import layers as L
+
+NEG_INF = -1e30
+GLOBAL_WINDOW = 1 << 30   # "no window" sentinel for global-attention layers
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(cfg: LMConfig, key: jax.Array) -> Any:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, h, kv, hd, nl = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.n_layers)
+    keys = jax.random.split(key, 12)
+    attn = {
+        "wq": L.dense_init(keys[0], (nl, d, h * hd), dt),
+        "wk": L.dense_init(keys[1], (nl, d, kv * hd), dt),
+        "wv": L.dense_init(keys[2], (nl, d, kv * hd), dt),
+        "wo": L.dense_init(keys[3], (nl, h * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((nl, h * hd), dt)
+        attn["bk"] = jnp.zeros((nl, kv * hd), dt)
+        attn["bv"] = jnp.zeros((nl, kv * hd), dt)
+
+    if cfg.moe is None:
+        mlp = L.gated_mlp_init(keys[4], d, cfg.d_ff, dt, layers=nl)
+    else:
+        e = cfg.moe
+        k1, k2, k3, k4 = jax.random.split(keys[4], 4)
+        mlp = {
+            "router": L.dense_init(k1, (nl, d, e.n_experts), jnp.float32),
+            "wi": L.dense_init(k2, (nl, e.n_experts, d, 2 * e.d_ff_expert), dt),
+            "wo": L.dense_init(k3, (nl, e.n_experts, e.d_ff_expert, d), dt),
+        }
+        if e.n_shared_experts:
+            mlp["shared"] = L.gated_mlp_init(
+                k4, d, e.n_shared_experts * e.d_ff_expert, dt, layers=nl)
+
+    block = {
+        "attn_norm": L.rmsnorm_init(d, dt, layers=nl),
+        "mlp_norm": L.rmsnorm_init(d, dt, layers=nl),
+        "attn": attn,
+        "mlp": mlp,
+    }
+    if cfg.post_norms:
+        block["attn_post_norm"] = L.rmsnorm_init(d, dt, layers=nl)
+        block["mlp_post_norm"] = L.rmsnorm_init(d, dt, layers=nl)
+
+    params = {
+        "embed": L.embed_init(keys[5], (cfg.vocab_size, d), dt),
+        "blocks": block,
+        "final_norm": L.rmsnorm_init(d, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[6], (d, cfg.vocab_size), dt)
+    return params
+
+
+def layer_windows(cfg: LMConfig) -> jax.Array:
+    """Per-layer sliding-window sizes (GLOBAL_WINDOW = unrestricted).
+
+    gemma2 alternates local (even layers, window 4096) and global."""
+    if cfg.attn_pattern == "local_global":
+        w = [cfg.local_window if i % 2 == 0 else GLOBAL_WINDOW
+             for i in range(cfg.n_layers)]
+    else:
+        w = [GLOBAL_WINDOW] * cfg.n_layers
+    return jnp.asarray(w, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, capacity-bounded sort-based dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_apply(p, x: jax.Array, moe: MoEConfig, activation: str) -> jax.Array:
+    """x: [T, d] -> [T, d]. Token-choice top-k, sort-based dispatch into
+    [E, C] slots; tokens beyond capacity are dropped (GShard, cf=1.25).
+
+    Dispatch is *grouped by data shard* (G = dp size): each group routes
+    only its local tokens with a per-group capacity, so every dispatch
+    tensor keeps a leading dp-sharded dim and dispatch/combine never leave
+    the shard. Without grouping, the combine scatter materializes an
+    unshardable global [T+1, d] buffer replicated per chip + per-layer
+    all-reduce (28 GiB each on kimi; perf_log it-5). Per-group routing is
+    exactly the semantics of per-shard expert parallelism in production
+    MoE systems.
+    """
+    t, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    g = axis_size("dp")
+    if t % g:
+        g = 1
+    tl = t // g                                  # tokens per group
+    cap = int(np.ceil(tl * k / e * moe.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)
+    xg = constrain(x.reshape(g, tl, d), "dp", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    top_vals, top_idx = lax.top_k(logits, k)                 # [G, Tl, k]
+    gates = jax.nn.softmax(top_vals, axis=-1)
+
+    e_flat = top_idx.reshape(g, tl * k)
+    t_flat = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)[None], (g, tl * k))
+    g_flat = gates.reshape(g, tl * k)
+    order = jnp.argsort(e_flat, axis=-1)
+    se = jnp.take_along_axis(e_flat, order, -1)
+    st = jnp.take_along_axis(t_flat, order, -1)
+    sg = jnp.take_along_axis(g_flat, order, -1)
+    idx = jnp.broadcast_to(jnp.arange(tl * k, dtype=jnp.int32)[None],
+                           (g, tl * k))
+    newseg = jnp.concatenate(
+        [jnp.ones((g, 1), bool), se[:, 1:] != se[:, :-1]], axis=-1)
+    seg_first = lax.cummax(jnp.where(newseg, idx, 0), axis=1)
+    rank = idx - seg_first
+    keep = rank < cap
+
+    def build_tables(se_g, rank_g, keep_g, st_g, sg_g):
+        tok = jnp.full((e, cap), -1, jnp.int32).at[
+            jnp.where(keep_g, se_g, e), jnp.where(keep_g, rank_g, 0)
+        ].set(jnp.where(keep_g, st_g, -1), mode="drop")
+        gate = jnp.zeros((e, cap), jnp.float32).at[
+            jnp.where(keep_g, se_g, e), jnp.where(keep_g, rank_g, 0)
+        ].set(jnp.where(keep_g, sg_g, 0.0), mode="drop")
+        return tok, gate
+
+    slot_tok, slot_gate = jax.vmap(build_tables)(se, rank, keep, st, sg)
+
+    # gather: each (dp-group, expert-shard) chip reads from its replicated
+    # local xg slice -- no cross-shard movement
+    xe = jax.vmap(lambda xl, tok: jnp.where(
+        (tok >= 0)[..., None], xl[jnp.maximum(tok, 0)], 0))(xg, slot_tok)
+    # experts over model (EP), groups over data. When E doesn't divide the
+    # model axis (granite: 40/16), shard capacity over model instead.
+    ec = ("dp", "tp") if e % max(axis_size("tp"), 1) == 0 else ("dp", None, "tp")
+    spec = (ec + (None,) * (4 - len(ec)))[:3] + (None,)
+    xe = constrain(xe, *spec)                                # [G, E, C, d]
+    gate_up = constrain(jnp.einsum("gecd,edf->gecf", xe, p["wi"]), *spec)
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    if activation == "swiglu":
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    else:
+        act = jax.nn.gelu(gate.astype(jnp.float32),
+                          approximate=True).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", act * up, p["wo"])     # [G, E, C, d]
+    ye = constrain(ye, *spec)
+    ye = ye * slot_gate[..., None].astype(ye.dtype)
+
+    out = jax.vmap(lambda y, tok: jnp.zeros((tl + 1, d), y.dtype).at[
+        jnp.where(tok >= 0, tok, tl).reshape(-1)
+    ].add(y.reshape(-1, d), mode="drop")[:tl])(ye, slot_tok)
+    out = constrain(out, "dp", None, None).reshape(t, d)
+    if "shared" in p:
+        out = out + L.gated_mlp(p["shared"], x, activation)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# transformer blocks (scanned)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: LMConfig, p, x, positions):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(b, s, h, hd), "dp", None, "tp", None)
+    k = constrain(k.reshape(b, s, kv, hd), "dp", None, "tp", None)
+    v = constrain(v.reshape(b, s, kv, hd), "dp", None, "tp", None)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _block_train(cfg: LMConfig, p, x, positions, window, chunked: bool):
+    """One layer, full-sequence causal attention.
+
+    The residual carry is sequence-sharded over the model axis ("sp") so
+    the per-layer saved-activation stack is 1/TP the size; q/k/v/mlp
+    anchors re-gather the sequence where needed (Megatron-SP layout)."""
+    x = constrain(x, "dp", "sp", None)
+    h = L.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    q, k, v = _qkv(cfg, p["attn"], h, positions)
+    if chunked:
+        attn = L.chunked_mha(q, k, v, positions, positions, causal=True,
+                             window=window, logit_cap=cfg.attn_logit_softcap)
+    else:
+        diff = positions[:, :, None] - positions[:, None, :]
+        mask = (diff >= 0) & (diff < window)
+        attn = L.mha(q, k, v, mask, logit_cap=cfg.attn_logit_softcap)
+    attn = jnp.einsum("bshe,hed->bsd",
+                      attn.reshape(*attn.shape[:2], cfg.n_heads, cfg.head_dim),
+                      p["attn"]["wo"].reshape(cfg.n_heads, cfg.head_dim, -1))
+    if cfg.post_norms:
+        attn = L.rmsnorm(p["attn_post_norm"], attn, cfg.norm_eps)
+    x = x + attn
+
+    h = L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.moe is None:
+        m = L.gated_mlp(p["mlp"], h, cfg.activation)
+    else:
+        b, s, d = h.shape
+        m = moe_apply(p["mlp"], h.reshape(b * s, d), cfg.moe,
+                      cfg.activation).reshape(b, s, d)
+    if cfg.post_norms:
+        m = L.rmsnorm(p["mlp_post_norm"], m, cfg.norm_eps)
+    return x + m
+
+
+def lm_forward(cfg: LMConfig, params, tokens: jax.Array,
+               chunked: bool | None = None) -> jax.Array:
+    """tokens [B, S] -> logits [B, S, V] (f32)."""
+    b, s = tokens.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    # online-softmax chunked attention whenever scores would dominate HBM
+    chunked = (s >= 2048) if chunked is None else chunked
+    x = constrain(L.embedding_lookup(params["embed"], tokens).astype(cdt),
+                  "dp", None, None)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        p, w = xs
+        x = _block_train(cfg, p, x, positions, w, chunked)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, (params["blocks"], windows))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))
+    logits = constrain(logits, "dp", None, "tp")
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits.astype(jnp.float32)
+
+
+def lm_loss(cfg: LMConfig, params, batch) -> tuple[jax.Array, dict]:
+    """Next-token cross entropy. batch: {"tokens": int32[B, S]}.
+
+    Vocab-parallel-friendly: the target logit is extracted with a masked
+    reduction (fuses; psum over vocab shards) instead of take_along_axis
+    (which would gather across the sharded vocab dim), and the logsumexp
+    reduces the sharded vocab axis directly -- no [B,S,V] log-softmax array
+    is ever materialized (perf_log.md it-1)."""
+    tokens = batch["tokens"]
+    logits = lm_forward(cfg, params, tokens)[:, :-1]          # [B, S-1, V]
+    targets = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = (targets[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, 1, v), 2))
+    tgt_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = (lse - tgt_logit).mean()
+    return loss, {"loss": loss, "ppl": jnp.exp(loss)}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # [L, B, S_max, KV, hd]
+    v: jax.Array       # [L, B, S_max, KV, hd]
+    length: jax.Array  # int32 scalar: tokens already cached
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> KVCache:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, cdt), v=jnp.zeros(shape, cdt),
+                   length=jnp.int32(0))
+
+
+def decode_step(cfg: LMConfig, params, cache: KVCache,
+                token: jax.Array) -> tuple[KVCache, jax.Array]:
+    """One-token decode. token: int32[B] -> (cache', logits f32[B, V]).
+
+    Attention runs over the full cached prefix (masked beyond ``length``;
+    local layers additionally masked to their sliding window)."""
+    b = token.shape[0]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    pos = cache.length                                      # scalar
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = L.embedding_lookup(params["embed"], token[:, None]).astype(cdt)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    windows = layer_windows(cfg)
+    s_max = cache.k.shape[2]
+    kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32), (b, s_max))
+
+    def body(x, xs):
+        p, w, ck, cv = xs
+        h = L.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+        q, k1, v1 = _qkv(cfg, p["attn"], h, positions)
+        ck = lax.dynamic_update_slice(ck, k1.astype(ck.dtype), (0, pos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v1.astype(cv.dtype), (0, pos, 0, 0))
+        diff = pos - kv_pos                                  # [b, s_max]
+        mask = ((kv_pos <= pos) & (diff < w))[:, None, :]    # [b, 1, s_max]
+        attn = L.mha(q, ck, cv, mask, logit_cap=cfg.attn_logit_softcap)
+        attn = jnp.einsum("bshe,hed->bsd",
+                          attn.reshape(b, 1, cfg.n_heads, cfg.head_dim),
+                          p["attn"]["wo"].reshape(cfg.n_heads, cfg.head_dim, -1))
+        if cfg.post_norms:
+            attn = L.rmsnorm(p["attn_post_norm"], attn, cfg.norm_eps)
+        x = x + attn
+        h = L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        if cfg.moe is None:
+            m = L.gated_mlp(p["mlp"], h, cfg.activation)
+        else:
+            m = moe_apply(p["mlp"], h.reshape(b, -1), cfg.moe,
+                          cfg.activation).reshape(b, 1, -1)
+        if cfg.post_norms:
+            m = L.rmsnorm(p["mlp_post_norm"], m, cfg.norm_eps)
+        return x + m, (ck, cv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["blocks"], windows,
+                                     cache.k, cache.v))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))
+    logits = L.softcap(logits, cfg.final_logit_softcap)[:, 0]
+    return KVCache(k=nk, v=nv, length=pos + 1), logits.astype(jnp.float32)
+
+
+def prefill(cfg: LMConfig, params, tokens: jax.Array,
+            max_len: int | None = None) -> tuple[KVCache, jax.Array]:
+    """Prompt -> KV cache + last-position logits. tokens int32[B, S]."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = L.embedding_lookup(params["embed"], tokens).astype(cdt)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = layer_windows(cfg)
+    chunked = s >= 8192
+
+    def body(x, xs):
+        p, w = xs
+        h = L.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+        q, k1, v1 = _qkv(cfg, p["attn"], h, positions)
+        if chunked:
+            attn = L.chunked_mha(q, k1, v1, positions, positions, causal=True,
+                                 window=w, logit_cap=cfg.attn_logit_softcap)
+        else:
+            diff = positions[:, :, None] - positions[:, None, :]
+            mask = (diff >= 0) & (diff < w)
+            attn = L.mha(q, k1, v1, mask, logit_cap=cfg.attn_logit_softcap)
+        attn = jnp.einsum("bshe,hed->bsd",
+                          attn.reshape(b, s, cfg.n_heads, cfg.head_dim),
+                          p["attn"]["wo"].reshape(cfg.n_heads, cfg.head_dim, -1))
+        if cfg.post_norms:
+            attn = L.rmsnorm(p["attn_post_norm"], attn, cfg.norm_eps)
+        x = x + attn
+        h = L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        if cfg.moe is None:
+            m = L.gated_mlp(p["mlp"], h, cfg.activation)
+        else:
+            m = moe_apply(p["mlp"], h.reshape(b * s, -1), cfg.moe,
+                          cfg.activation).reshape(b, s, -1)
+        if cfg.post_norms:
+            m = L.rmsnorm(p["mlp_post_norm"], m, cfg.norm_eps)
+        x = x + m
+        kpad = jnp.zeros((b, max_len - s) + k1.shape[2:], k1.dtype)
+        return x, (jnp.concatenate([k1, kpad], axis=1),
+                   jnp.concatenate([v1.astype(k1.dtype), kpad], axis=1))
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ck, cv) = lax.scan(body, x, (params["blocks"], windows))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cdt))
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return (KVCache(k=ck, v=cv, length=jnp.int32(s)),
+            logits.astype(jnp.float32))

@@ -1,0 +1,167 @@
+"""Selection-subquery operators -> node semimasks.
+
+The paper evaluates predicate-agnostic queries by running an arbitrary
+selection subquery Q_S first (filters, joins) and passing the resulting
+selected set S to the kNN operator as a node semimask via sideways
+information passing. This module is the Q_S evaluator: a small typed
+operator tree over the columnar GraphStore producing a boolean mask over
+one node table.
+
+Operators mirror the paper's workloads:
+  NodeScan          MATCH (c:Chunk)                    -> all true
+  Filter            WHERE c.cid < X / range / eq / isin
+  HopJoin           MATCH (p)-[:R]->(c) WHERE mask(p)  -> semi-join (1 hop)
+  (chain HopJoin twice for the 2-hop graph-RAG workload of Section 5.7.1)
+  And / Or / Not    boolean combinators
+
+``evaluate`` runs on the host (numpy) -- this is the prefiltering phase
+whose cost Table 7 accounts separately -- and the resulting mask is packed
+to a device bitset for the search operator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.storage.columnar import GraphStore
+
+Plan = Union["NodeScan", "Filter", "HopJoin", "And", "Or", "Not"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeScan:
+    table: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    child: Plan
+    column: str
+    op: str                    # "<", "<=", ">", ">=", "==", "range", "isin"
+    value: object = None
+    lo: object = None
+    hi: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class HopJoin:
+    """Semi-join: select dst-table nodes reachable from selected src nodes
+    via rel (direction 'fwd': src->dst edges; 'bwd' follows edges backwards)."""
+    child: Plan                # plan over the rel's source side
+    rel: str
+    direction: str = "fwd"
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    left: Plan
+    right: Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    left: Plan
+    right: Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class Not:
+    child: Plan
+
+
+@dataclasses.dataclass
+class QueryResult:
+    table: str
+    mask: np.ndarray           # bool[n]
+    seconds: float             # prefiltering time (Table 7)
+
+    @property
+    def selectivity(self) -> float:
+        return float(self.mask.mean())
+
+
+def output_table(plan: Plan, store: GraphStore) -> str:
+    if isinstance(plan, NodeScan):
+        return plan.table
+    if isinstance(plan, Filter):
+        return output_table(plan.child, store)
+    if isinstance(plan, HopJoin):
+        rel = store.rel(plan.rel)
+        return rel.dst_table if plan.direction == "fwd" else rel.src_table
+    if isinstance(plan, (And, Or)):
+        lt = output_table(plan.left, store)
+        rt = output_table(plan.right, store)
+        if lt != rt:
+            raise ValueError(f"boolean combinator over different tables: {lt} vs {rt}")
+        return lt
+    if isinstance(plan, Not):
+        return output_table(plan.child, store)
+    raise TypeError(plan)
+
+
+def _eval(plan: Plan, store: GraphStore) -> np.ndarray:
+    if isinstance(plan, NodeScan):
+        return np.ones(store.node(plan.table).n, dtype=bool)
+    if isinstance(plan, Filter):
+        mask = _eval(plan.child, store)
+        col = store.node(output_table(plan.child, store)).column(plan.column)
+        if plan.op == "<":
+            pred = col < plan.value
+        elif plan.op == "<=":
+            pred = col <= plan.value
+        elif plan.op == ">":
+            pred = col > plan.value
+        elif plan.op == ">=":
+            pred = col >= plan.value
+        elif plan.op == "==":
+            pred = col == plan.value
+        elif plan.op == "range":
+            pred = (col >= plan.lo) & (col < plan.hi)
+        elif plan.op == "isin":
+            pred = np.isin(col, np.asarray(plan.value))
+        else:
+            raise ValueError(f"unknown filter op {plan.op!r}")
+        return mask & pred
+    if isinstance(plan, HopJoin):
+        rel = store.rel(plan.rel)
+        src_mask = _eval(plan.child, store)
+        csr = rel.fwd if plan.direction == "fwd" else rel.bwd
+        n_out = store.node(rel.dst_table if plan.direction == "fwd"
+                           else rel.src_table).n
+        out = np.zeros(n_out, dtype=bool)
+        sel = np.flatnonzero(src_mask)
+        # expand CSR ranges of the selected sources (vectorized)
+        starts, ends = csr.offsets[sel], csr.offsets[sel + 1]
+        total = int((ends - starts).sum())
+        if total:
+            idx = np.repeat(starts, ends - starts) + _ranges(ends - starts)
+            out[csr.targets[idx]] = True
+        return out
+    if isinstance(plan, And):
+        return _eval(plan.left, store) & _eval(plan.right, store)
+    if isinstance(plan, Or):
+        return _eval(plan.left, store) | _eval(plan.right, store)
+    if isinstance(plan, Not):
+        return ~_eval(plan.child, store)
+    raise TypeError(plan)
+
+
+def _ranges(lengths: np.ndarray) -> np.ndarray:
+    """[0..l0-1, 0..l1-1, ...] for per-source offsets into CSR ranges."""
+    csum = np.cumsum(lengths)
+    out = np.arange(csum[-1])
+    out -= np.repeat(csum - lengths, lengths)
+    return out
+
+
+def evaluate(plan: Plan, store: GraphStore) -> QueryResult:
+    """Run Q_S; returns the node semimask + prefiltering wall time."""
+    t0 = time.perf_counter()
+    table = output_table(plan, store)
+    mask = _eval(plan, store)
+    return QueryResult(table=table, mask=mask,
+                       seconds=time.perf_counter() - t0)

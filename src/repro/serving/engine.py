@@ -1,0 +1,141 @@
+"""Batched request serving for the vector index (+ LM generation helper).
+
+The search engine mirrors a production vector-serving tier:
+  * requests (query vector + selection subquery + k) accumulate in a queue;
+  * a scheduler drains up to ``max_batch`` compatible requests (same
+    semimask => same compiled program) into one batched search;
+  * per-request latency is recorded (queue + execution) and summarized as
+    p50/p95/p99 -- the paper's latency protocol (warm-up + repeats) is
+    implemented in the benchmark harness on top of this engine.
+
+Straggler-robust distributed mode: when constructed over a ShardedNavix,
+the engine searches with a shard-liveness mask and a quorum (DESIGN.md
+Section 4); dead shards degrade recall, not availability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.navix import NavixIndex
+from repro.query.operators import Plan, evaluate
+from repro.storage.columnar import GraphStore
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    query: np.ndarray
+    plan: Optional[Plan]          # selection subquery (None = unfiltered)
+    k: int = 10
+    t_enqueue: float = 0.0
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    ids: np.ndarray
+    dists: np.ndarray
+    queue_ms: float
+    exec_ms: float
+    prefilter_ms: float
+    sigma: float
+
+
+@dataclasses.dataclass
+class SearchEngine:
+    index: NavixIndex
+    store: Optional[GraphStore] = None
+    heuristic: str = "adaptive_local"
+    efs: int = 0
+    max_batch: int = 32
+
+    def __post_init__(self):
+        self._queue: deque[Request] = deque()
+        self._next_rid = 0
+        self.latencies_ms: list[float] = []
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, query, plan: Optional[Plan] = None, k: int = 10) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, query=np.asarray(query),
+                                   plan=plan, k=k,
+                                   t_enqueue=time.perf_counter()))
+        return rid
+
+    def drain(self) -> list[Response]:
+        """Serve everything queued; batches requests with identical plans."""
+        groups: dict[Any, list[Request]] = defaultdict(list)
+        while self._queue:
+            r = self._queue.popleft()
+            groups[(r.plan, r.k)].append(r)
+        out: list[Response] = []
+        for (plan, k), reqs in groups.items():
+            out.extend(self._serve_group(plan, k, reqs))
+        return out
+
+    # -- internals ------------------------------------------------------------
+    def _serve_group(self, plan, k, reqs: list[Request]) -> list[Response]:
+        t0 = time.perf_counter()
+        if plan is not None:
+            if self.store is None:
+                raise ValueError("filtered request but engine has no store")
+            qres = evaluate(plan, self.store)
+            mask, pf_ms = qres.mask, qres.seconds * 1e3
+            sigma = qres.selectivity
+        else:
+            mask, pf_ms, sigma = None, 0.0, 1.0
+
+        responses = []
+        for i in range(0, len(reqs), self.max_batch):
+            chunk = reqs[i:i + self.max_batch]
+            Q = np.stack([r.query for r in chunk])
+            t1 = time.perf_counter()
+            res = self.index.search_many(Q, k=k, efs=self.efs or 2 * k,
+                                         semimask=mask,
+                                         heuristic=self.heuristic)
+            ids = np.asarray(res.ids)
+            dists = np.asarray(res.dists)
+            exec_ms = (time.perf_counter() - t1) * 1e3 / len(chunk)
+            for j, r in enumerate(chunk):
+                queue_ms = (t1 - r.t_enqueue) * 1e3
+                self.latencies_ms.append(queue_ms + exec_ms + pf_ms)
+                responses.append(Response(
+                    rid=r.rid, ids=ids[j], dists=dists[j],
+                    queue_ms=queue_ms, exec_ms=exec_ms,
+                    prefilter_ms=pf_ms, sigma=sigma))
+        return responses
+
+    def latency_summary(self) -> dict:
+        if not self.latencies_ms:
+            return {}
+        arr = np.asarray(self.latencies_ms)
+        return {"n": len(arr), "p50_ms": float(np.percentile(arr, 50)),
+                "p95_ms": float(np.percentile(arr, 95)),
+                "p99_ms": float(np.percentile(arr, 99)),
+                "mean_ms": float(arr.mean())}
+
+
+def greedy_generate(cfg, params, prompt_tokens: np.ndarray, n_new: int,
+                    max_len: Optional[int] = None):
+    """Tiny LM generation helper (prefill + greedy decode) for the RAG
+    example; batch-first tokens int32[B, S]."""
+    import jax.numpy as jnp
+
+    from repro.models.transformer import decode_step, prefill
+    tokens = jnp.asarray(prompt_tokens, jnp.int32)
+    b, s = tokens.shape
+    cache, logits = prefill(cfg, params, tokens,
+                            max_len=max_len or s + n_new)
+    out = []
+    for _ in range(n_new):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(np.asarray(nxt))
+        cache, logits = decode_step(cfg, params, cache, nxt)
+    return np.stack(out, axis=1)

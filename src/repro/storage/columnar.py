@@ -1,0 +1,111 @@
+"""Columnar graph store -- the GDBMS substrate the index is native to.
+
+Mirrors the parts of Kuzu that NaviX leverages (paper Section 2.3):
+node tables are columnar property vectors; relationship tables are CSR
+structures (forward + backward); the vector index's lower level is itself
+stored as a relationship table (fixed-degree adjacency in device memory +
+a CSR view here). Selection subqueries (repro.query) run against this store
+and emit node semimasks.
+
+Host-side state is numpy (this is the "disk" side); device payloads
+(vector columns) are materialized to jax arrays on demand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class NodeTable:
+    name: str
+    n: int
+    columns: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def add_column(self, name: str, values: np.ndarray) -> None:
+        values = np.asarray(values)
+        if values.shape[0] != self.n:
+            raise ValueError(f"column {name}: {values.shape[0]} rows != {self.n}")
+        self.columns[name] = values
+
+    def column(self, name: str) -> np.ndarray:
+        return self.columns[name]
+
+
+@dataclasses.dataclass
+class CSR:
+    offsets: np.ndarray      # int64[n_src + 1]
+    targets: np.ndarray      # int64[n_edges]
+
+    @property
+    def n_src(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.targets)
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.targets[self.offsets[u]:self.offsets[u + 1]]
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+
+def csr_from_edges(src: np.ndarray, dst: np.ndarray, n_src: int) -> CSR:
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s = src[order], dst[order]
+    counts = np.bincount(src_s, minlength=n_src)
+    offsets = np.zeros(n_src + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return CSR(offsets=offsets, targets=dst_s.astype(np.int64))
+
+
+@dataclasses.dataclass
+class RelTable:
+    name: str
+    src_table: str
+    dst_table: str
+    fwd: CSR                 # src -> dst
+    bwd: CSR                 # dst -> src
+
+    @property
+    def n_edges(self) -> int:
+        return self.fwd.n_edges
+
+
+@dataclasses.dataclass
+class GraphStore:
+    nodes: dict[str, NodeTable] = dataclasses.field(default_factory=dict)
+    rels: dict[str, RelTable] = dataclasses.field(default_factory=dict)
+
+    def add_node_table(self, name: str, n: int,
+                       columns: Mapping[str, np.ndarray] | None = None) -> NodeTable:
+        t = NodeTable(name=name, n=n)
+        for cname, col in (columns or {}).items():
+            t.add_column(cname, col)
+        self.nodes[name] = t
+        return t
+
+    def add_rel_table(self, name: str, src_table: str, dst_table: str,
+                      src: np.ndarray, dst: np.ndarray) -> RelTable:
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        n_src = self.nodes[src_table].n
+        n_dst = self.nodes[dst_table].n
+        if src.size and (src.max() >= n_src or dst.max() >= n_dst):
+            raise ValueError(f"rel {name}: edge endpoint out of range")
+        rel = RelTable(name=name, src_table=src_table, dst_table=dst_table,
+                       fwd=csr_from_edges(src, dst, n_src),
+                       bwd=csr_from_edges(dst, src, n_dst))
+        self.rels[name] = rel
+        return rel
+
+    def node(self, name: str) -> NodeTable:
+        return self.nodes[name]
+
+    def rel(self, name: str) -> RelTable:
+        return self.rels[name]

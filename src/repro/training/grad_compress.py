@@ -1,0 +1,99 @@
+"""Gradient compression for DP all-reduce with error feedback.
+
+At 1000+ nodes the cross-pod gradient all-reduce is the dominant collective
+(DESIGN.md Section 4). Two standard compressors, both with error-feedback
+residual accumulation (Seide et al. 2014 / Karimireddy et al. 2019) so
+compression error does not bias convergence:
+
+  int8    per-tensor symmetric int8 quantization (4x bytes reduction vs f32,
+          2x vs bf16)
+  topk    keep the largest-|g| fraction per tensor (sparsity), the rest is
+          carried in the residual
+
+compress(g) -> wire format, decompress restores dense; in training the
+pair wraps the gradient between value_and_grad and the optimizer -- on a
+real slice the wire format is what crosses the pod interconnect
+(all-reduce of int8 partial sums / sparse gathers).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressorState(NamedTuple):
+    residual: Any
+
+
+def init_state(params: Any) -> CompressorState:
+    return CompressorState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+# ---------------------------------------------------------------------------
+
+
+def _int8_compress(g: jax.Array):
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_decompress(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_compress(g: jax.Array, frac: float):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def _topk_decompress(vals, idx, shape):
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    return flat.at[idx].set(vals).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+
+
+def compress_grads(grads: Any, state: CompressorState, method: str = "int8",
+                   topk_frac: float = 0.01):
+    """Returns (decompressed_grads, new_state, wire_bytes, dense_bytes).
+
+    The decompressed gradients are what the optimizer consumes (exactly
+    what every replica would hold after the compressed all-reduce); the
+    residual keeps what compression dropped (error feedback)."""
+    dense_bytes = 0
+    wire_bytes = 0
+    new_resid = []
+    out = []
+    flat, tdef = jax.tree.flatten(grads)
+    rflat = tdef.flatten_up_to(state.residual)
+    for g, r in zip(flat, rflat):
+        gf = g.astype(jnp.float32) + r
+        dense_bytes += g.size * 4
+        if method == "int8":
+            q, scale = _int8_compress(gf)
+            dec = _int8_decompress(q, scale)
+            wire_bytes += q.size * 1 + 4
+        elif method == "topk":
+            vals, idx = _topk_compress(gf, topk_frac)
+            dec = _topk_decompress(vals, idx, gf.shape)
+            wire_bytes += vals.size * 4 + idx.size * 4
+        elif method == "none":
+            dec = gf
+            wire_bytes += g.size * 4
+        else:
+            raise ValueError(method)
+        new_resid.append(gf - dec)
+        out.append(dec.astype(g.dtype))
+    return (tdef.unflatten(out),
+            CompressorState(residual=tdef.unflatten(new_resid)),
+            wire_bytes, dense_bytes)

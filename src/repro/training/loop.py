@@ -1,0 +1,140 @@
+"""Fault-tolerant training loop.
+
+Production behaviors, all exercised by tests:
+  * periodic sharded checkpoints (atomic COMMIT, checksum-verified),
+  * automatic resume from the latest complete checkpoint -- including onto
+    a different mesh (elastic restart),
+  * per-step wall-time monitoring with a straggler detector (steps slower
+    than ``straggler_factor`` x the running median are logged and counted;
+    on a real slice this feeds the controller's replace-node policy),
+  * optional gradient compression (int8 / topk with error feedback)
+    between backward and optimizer,
+  * failure injection hook for tests (raise mid-run, resume, bit-identical
+    continuation modulo compression state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.models.api import model_api
+from repro.training.grad_compress import CompressorState, compress_grads, init_state
+from repro.training.optimizer import make_optimizer
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "checkpoints"
+    lr: float | None = None
+    grad_compression: str = "none"        # none | int8 | topk
+    topk_frac: float = 0.01
+    straggler_factor: float = 3.0
+    keep_last: int = 3
+
+
+@dataclasses.dataclass
+class LoopState:
+    step: int
+    params: Any
+    opt_state: Any
+    compressor: CompressorState
+    metrics_history: list = dataclasses.field(default_factory=list)
+    straggler_steps: list = dataclasses.field(default_factory=list)
+
+
+def make_compressed_train_step(cfg, loop_cfg: LoopConfig):
+    api = model_api(cfg)
+    opt = make_optimizer(getattr(cfg, "optimizer", "adamw"), loop_cfg.lr)
+
+    def step(params, opt_state, comp_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss, has_aux=True)(params, batch)
+        if loop_cfg.grad_compression != "none":
+            grads, comp_state, wire, dense = compress_grads(
+                grads, comp_state, loop_cfg.grad_compression,
+                loop_cfg.topk_frac)
+            metrics = dict(metrics)
+            metrics["wire_bytes"] = wire
+            metrics["compression_ratio"] = dense / max(wire, 1)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, comp_state, metrics
+
+    return jax.jit(step), opt
+
+
+def train(cfg, data_iter: Iterator[dict], loop_cfg: LoopConfig,
+          init_key=None, fail_at_step: Optional[int] = None,
+          shardings: Any = None, verbose: bool = False) -> LoopState:
+    """Run (or resume) training. ``fail_at_step`` raises RuntimeError right
+    before that step's checkpoint would be cut (tests simulate preemption).
+    """
+    api = model_api(cfg)
+    step_fn, opt = make_compressed_train_step(cfg, loop_cfg)
+
+    # ---- resume or init --------------------------------------------------
+    latest = store.latest_complete(loop_cfg.checkpoint_dir)
+    if latest is not None:
+        like = jax.eval_shape(api.init, jax.random.key(0))
+        full_like = {"params": like, "opt": jax.eval_shape(opt.init, like)}
+        full = store.load(latest, full_like, shardings)
+        params, opt_state = full["params"], full["opt"]
+        start = store.load_manifest(latest)["step"]
+    else:
+        params = api.init(init_key if init_key is not None
+                          else jax.random.key(0))
+        opt_state = opt.init(params)
+        start = 0
+
+    comp_state = init_state(params)
+    st = LoopState(step=start, params=params, opt_state=opt_state,
+                   compressor=comp_state)
+
+    times: list[float] = []
+    for step_idx in range(start, loop_cfg.total_steps):
+        if fail_at_step is not None and step_idx == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step_idx}")
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        st.params, st.opt_state, st.compressor, metrics = step_fn(
+            st.params, st.opt_state, st.compressor, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        # straggler detection against the running median
+        if len(times) >= 5:
+            med = statistics.median(times[-20:])
+            if dt > loop_cfg.straggler_factor * med:
+                st.straggler_steps.append((step_idx, dt, med))
+        times.append(dt)
+        st.metrics_history.append(
+            {k: float(v) for k, v in metrics.items()})
+        st.step = step_idx + 1
+        if verbose and step_idx % 10 == 0:
+            print(f"step {step_idx}: loss={float(metrics['loss']):.4f} "
+                  f"({dt*1000:.0f} ms)")
+        if st.step % loop_cfg.checkpoint_every == 0 or \
+                st.step == loop_cfg.total_steps:
+            store.save(loop_cfg.checkpoint_dir, st.step,
+                       {"params": st.params, "opt": st.opt_state},
+                       extra={"loss": float(metrics["loss"])})
+            _gc_checkpoints(loop_cfg)
+    return st
+
+
+def _gc_checkpoints(loop_cfg: LoopConfig) -> None:
+    import pathlib
+    import shutil
+    d = pathlib.Path(loop_cfg.checkpoint_dir)
+    steps = sorted(p for p in d.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and (p / "COMMIT").exists())
+    for p in steps[:-loop_cfg.keep_last]:
+        shutil.rmtree(p)

@@ -1,0 +1,134 @@
+"""Optimizers (from scratch -- no optax in this environment).
+
+AdamW for the small/medium archs; Adafactor (factored second moments,
+Shazeer & Stern 2018) for the trillion-parameter MoE dry-runs where Adam's
+2x fp32 state would not fit 16GB/chip even fully sharded (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+    name: str
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                             params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.copy, zeros),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+
+        def upd_one(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** cf)
+            vhat = v / (1 - b2 ** cf)
+            step = lr * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        def upd(g, m, v, p):
+            # chunk the f32 update math over the leading (layer/expert)
+            # axis of big stacked params -- whole-stack temporaries cost
+            # several x 8 GiB on the MoE configs (perf_log it-11)
+            if p.ndim >= 3 and p.shape[0] > 1 and p.size > (1 << 24):
+                return lax.map(lambda a: upd_one(*a), (g, m, v, p))
+            return upd_one(g, m, v, p)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        return (tdef.unflatten([o[0] for o in outs]),
+                {"m": tdef.unflatten([o[1] for o in outs]),
+                 "v": tdef.unflatten([o[2] for o in outs]),
+                 "count": c})
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moments: for a [..., r, c] param keep row/col stats
+    only -- O(r + c) state instead of O(r * c)."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def per_param(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"per_param": jax.tree.map(per_param, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** (-decay)
+
+        def upd_one(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * st["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., :, None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_st
+
+        def upd(g, st, p):
+            # big stacked (per-layer/per-expert) params: run the f32 update
+            # math one leading slice at a time so its temporaries are
+            # 1/L-sized (kimi: 10 GiB f32 temps -> 170 MiB; perf_log it-6)
+            if p.ndim >= 3 and p.shape[0] > 1 and _factored(p):
+                return lax.map(lambda args: upd_one(*args), (g, st, p))
+            return upd_one(g, st, p)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["per_param"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"per_param": new_state, "count": c}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def make_optimizer(name: str, lr: float | None = None) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr or 1e-3)
+    if name == "adafactor":
+        return adafactor(lr=lr or 1e-2)
+    raise ValueError(f"unknown optimizer {name!r}")

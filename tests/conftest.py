@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: tests run with the real single CPU device --
+XLA_FLAGS device-count overrides belong ONLY to the dry-run (and the
+subprocess-based distributed tests)."""
+
+import numpy as np
+import pytest
+
+from repro.core.navix import NavixConfig, NavixIndex
+from repro.data.synthetic import gaussian_mixture
+
+
+@pytest.fixture(scope="session")
+def clustered():
+    """Small clustered dataset -- cluster structure makes heuristic
+    crossovers (and recall) meaningful, like the paper's real datasets."""
+    X, labels, centers = gaussian_mixture(2500, 32, 10, seed=0)
+    return X, labels, centers
+
+
+@pytest.fixture(scope="session")
+def index(clustered):
+    X, _, _ = clustered
+    idx, stats = NavixIndex.create(
+        X, NavixConfig(m_u=8, ef_construction=64, metric="l2", seed=0))
+    assert stats.n == X.shape[0]
+    return idx
+
+
+@pytest.fixture(scope="session")
+def queries(clustered):
+    X, _, centers = clustered
+    rng = np.random.default_rng(7)
+    base = centers[rng.integers(0, len(centers), size=12)]
+    return (base + 0.3 * rng.normal(size=base.shape)).astype(np.float32)

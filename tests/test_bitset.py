@@ -1,0 +1,59 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset
+
+
+@given(st.integers(1, 300), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < 0.4
+    bits = bitset.pack(jnp.asarray(mask))
+    assert bits.dtype == jnp.uint32
+    back = np.asarray(bitset.unpack(bits, n))
+    np.testing.assert_array_equal(back, mask)
+    assert int(bitset.count(bits)) == int(mask.sum())
+
+
+def test_test_bits_with_padding():
+    mask = np.zeros(70, bool)
+    mask[[0, 31, 32, 63, 64, 69]] = True
+    bits = bitset.pack(jnp.asarray(mask))
+    ids = jnp.asarray([0, 1, 31, 32, 63, 64, 69, -1, -5], jnp.int32)
+    got = np.asarray(bitset.test(bits, ids))
+    np.testing.assert_array_equal(
+        got, [True, False, True, True, True, True, True, False, False])
+
+
+@given(st.integers(10, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_set_bits_matches_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    base = rng.random(n) < 0.3
+    new_ids = rng.choice(n, size=min(10, n), replace=False)
+    bits = bitset.pack(jnp.asarray(base))
+    # pad with -1s; duplicates with already-set are allowed (no-op)
+    ids = jnp.asarray(list(new_ids) + [-1, -1], jnp.int32)
+    out = bitset.set_bits(bits, ids)
+    expect = base.copy()
+    expect[new_ids] = True
+    np.testing.assert_array_equal(np.asarray(bitset.unpack(out, n)), expect)
+
+
+def test_count_members_sigma_l():
+    """The adaptive-local sigma_l numerator: membership counting only."""
+    mask = np.zeros(100, bool)
+    mask[:50] = True
+    bits = bitset.pack(jnp.asarray(mask))
+    nbrs = jnp.asarray([1, 2, 60, 70, -1, -1], jnp.int32)
+    assert int(bitset.count_members(bits, nbrs)) == 2
+
+
+def test_full_mask_tail_bits():
+    for n in (1, 31, 32, 33, 64, 100):
+        bits = bitset.full_mask(n)
+        assert int(bitset.count(bits)) == n

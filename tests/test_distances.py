@@ -1,0 +1,56 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.distances import (brute_force_topk, dist_matrix,
+                                  gathered_dist, normalize, point_dist)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["l2", "cos", "dot"]))
+@settings(max_examples=20, deadline=None)
+def test_dist_matrix_vs_numpy(seed, metric):
+    rng = np.random.default_rng(seed)
+    Q = rng.normal(size=(5, 16)).astype(np.float32)
+    X = rng.normal(size=(20, 16)).astype(np.float32)
+    if metric == "cos":
+        Q = np.asarray(normalize(jnp.asarray(Q)))
+        X = np.asarray(normalize(jnp.asarray(X)))
+    got = np.asarray(dist_matrix(jnp.asarray(Q), jnp.asarray(X), metric))
+    if metric == "l2":
+        exp = ((Q[:, None] - X[None]) ** 2).sum(-1)
+    elif metric == "cos":
+        exp = 1 - Q @ X.T
+    else:
+        exp = -(Q @ X.T)
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)
+
+
+def test_gathered_dist_padding():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(10, 8)).astype(np.float32))
+    q = X[3]
+    ids = jnp.asarray([3, 5, -1], jnp.int32)
+    d = np.asarray(gathered_dist(q, X, ids, "l2"))
+    assert d[0] == pytest.approx(0.0, abs=1e-5)
+    assert np.isinf(d[2])
+
+
+def test_brute_force_filtered():
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+    Q = X[:2]
+    mask = jnp.asarray(np.arange(50) % 2 == 0)
+    d, ids = brute_force_topk(Q, X, 5, "l2", mask=mask)
+    ids = np.asarray(ids)
+    assert (ids[ids >= 0] % 2 == 0).all()
+    assert ids[0, 0] == 0 and ids[1, 1] != 1  # 1 is filtered out
+
+
+def test_brute_force_fewer_than_k():
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.normal(size=(20, 4)).astype(np.float32))
+    mask = jnp.asarray(np.arange(20) < 3)
+    d, ids = brute_force_topk(X[:1], X, 10, "l2", mask=mask)
+    assert (np.asarray(ids)[0] >= 0).sum() == 3

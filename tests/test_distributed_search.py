@@ -1,0 +1,70 @@
+"""Distributed (sharded) search: runs in a subprocess with 8 placeholder
+devices so the main test process keeps its single real device."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from repro.core.distributed import ShardedNavix
+from repro.core.navix import NavixConfig
+from repro.core.distances import brute_force_topk
+import jax.numpy as jnp
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+from repro.data.synthetic import gaussian_mixture
+X, _, centers = gaussian_mixture(1600, 16, 8, seed=0)
+cfg = NavixConfig(m_u=8, ef_construction=48, metric="l2")
+sn = ShardedNavix.build(X, cfg, mesh)
+
+Q = (centers[:4] + 0.2 * rng.normal(size=(4, 16))).astype(np.float32)
+mask = rng.random(1600) < 0.4
+td, ti = brute_force_topk(jnp.asarray(Q), jnp.asarray(X), 10, "l2",
+                          mask=jnp.asarray(mask))
+d, ids = sn.search(Q, mask, k=10, efs=60)
+ids = np.asarray(ids); ti = np.asarray(ti)
+hits = sum(len(set(ids[i][ids[i]>=0].tolist()) & set(ti[i][ti[i]>=0].tolist()))
+           for i in range(4))
+recall = hits / max((ti >= 0).sum(), 1)
+
+# all results must be selected + globally valid
+sel_ok = bool(mask[ids[ids >= 0]].all())
+
+# quorum: kill one shard; search still succeeds with degraded recall
+alive = np.ones(4, bool); alive[2] = False
+d2, ids2 = sn.search(Q, mask, k=10, efs=60, alive=alive, quorum=3)
+shard = ids2[ids2 >= 0] // sn.n_local
+no_dead = bool((shard != 2).all())
+
+failed = False
+try:
+    sn.search(Q, mask, k=10, alive=np.array([True, False, False, False]),
+              quorum=3)
+except RuntimeError:
+    failed = True
+
+print(json.dumps({"recall": recall, "sel_ok": sel_ok,
+                  "no_dead": no_dead, "quorum_raises": failed}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_search_subprocess(tmp_path):
+    out = subprocess.run([sys.executable, "-c", SCRIPT], timeout=900,
+                         capture_output=True, text=True,
+                         cwd=pathlib.Path(__file__).parent.parent,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": str(tmp_path)})
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["recall"] >= 0.8, res
+    assert res["sel_ok"] and res["no_dead"] and res["quorum_raises"], res

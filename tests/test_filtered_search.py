@@ -1,0 +1,110 @@
+"""Filtered-search behavior: the paper's Section 3/5.2 claims at test scale."""
+
+import numpy as np
+import pytest
+
+HEURISTICS = ["onehop_s", "directed", "blind", "adaptive_g", "adaptive_local"]
+
+
+def _mask(n, sigma, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.random(n) < sigma
+
+
+def _recall_and_stats(index, queries, mask, heuristic, k=10, efs=80):
+    _, true_ids = index.brute_force(queries, k=k, semimask=mask)
+    got, t_dc, s_dc, picks = [], 0, 0, np.zeros(3)
+    for q in queries:
+        r = index.search(q, k=k, efs=efs, semimask=mask, heuristic=heuristic)
+        got.append(np.asarray(r.ids))
+        t_dc += int(r.stats.t_dc)
+        s_dc += int(r.stats.s_dc)
+        picks += np.asarray(r.stats.picks)
+    rec = index.recall(np.stack(got), np.asarray(true_ids))
+    return rec, t_dc / len(queries), s_dc / len(queries), picks
+
+
+def test_results_respect_semimask(index, queries):
+    mask = _mask(index.graph.n, 0.3)
+    for h in HEURISTICS:
+        r = index.search(queries[0], k=10, semimask=mask, heuristic=h)
+        ids = np.asarray(r.ids)
+        assert mask[ids[ids >= 0]].all(), f"{h} returned unselected ids"
+
+
+@pytest.mark.parametrize("sigma", [0.5, 0.2, 0.05])
+def test_two_hop_heuristics_recall(index, queries, sigma):
+    mask = _mask(index.graph.n, sigma)
+    for h in ("directed", "blind", "adaptive_local"):
+        rec, *_ = _recall_and_stats(index, queries, mask, h)
+        assert rec >= 0.85, f"{h} at sigma={sigma}: recall {rec}"
+
+
+def test_onehop_s_degrades_at_low_selectivity(index, queries):
+    """Figure 8: onehop-s recall collapses once the selected projection of
+    G_H disconnects."""
+    hi, *_ = _recall_and_stats(index, queries, _mask(index.graph.n, 0.9),
+                               "onehop_s")
+    lo, *_ = _recall_and_stats(index, queries, _mask(index.graph.n, 0.05),
+                               "onehop_s")
+    assert hi >= 0.9
+    assert lo < hi - 0.2, f"expected collapse: hi={hi} lo={lo}"
+
+
+def test_blind_tdc_equals_sdc(index, queries):
+    """Section 5.2: for blind, t-dc always equals s-dc."""
+    mask = _mask(index.graph.n, 0.2)
+    _, t_dc, s_dc, _ = _recall_and_stats(index, queries, mask, "blind")
+    assert t_dc == s_dc
+
+
+def test_directed_pays_ordering_overhead(index, queries):
+    """directed: t-dc >= s-dc, gap grows as selectivity falls."""
+    for sigma in (0.5, 0.1):
+        mask = _mask(index.graph.n, sigma)
+        _, t_dc, s_dc, _ = _recall_and_stats(index, queries, mask, "directed")
+        assert t_dc >= s_dc
+    mask_lo = _mask(index.graph.n, 0.05)
+    _, t_lo, s_lo, _ = _recall_and_stats(index, queries, mask_lo, "directed")
+    assert t_lo / max(s_lo, 1) > 1.2, "overhead should be large at low sigma"
+
+
+def test_adaptive_global_follows_rule(index, queries):
+    """adaptive-g commits to ONE branch per query set, chosen by sigma_g."""
+    for sigma, expected in ((0.9, 0), (0.2, 1), (0.004, 2)):
+        mask = _mask(index.graph.n, sigma)
+        *_, picks = _recall_and_stats(index, queries, mask, "adaptive_g")
+        assert picks.argmax() == expected, (sigma, picks)
+
+
+def test_adaptive_local_mixes_heuristics(index, clustered, queries):
+    """Figure 11: with correlated S, adaptive-local picks different
+    branches at different candidates."""
+    X, labels, _ = clustered
+    mask = np.isin(labels, [0, 1, 2])          # cluster-correlated subset
+    *_, picks = _recall_and_stats(index, queries, mask, "adaptive_local")
+    assert (picks > 0).sum() >= 2, f"expected a mix of branches: {picks}"
+
+
+def test_adaptive_local_competitive_dc(index, queries):
+    """adaptive-local should not use dramatically more selected-dc than the
+    best fixed heuristic (it approximates the envelope)."""
+    mask = _mask(index.graph.n, 0.15)
+    best = None
+    for h in ("onehop_s", "directed", "blind"):
+        rec, t_dc, *_ = _recall_and_stats(index, queries, mask, h)
+        if rec >= 0.85:
+            best = min(best, t_dc) if best else t_dc
+    rec_al, t_al, *_ = _recall_and_stats(index, queries, mask,
+                                         "adaptive_local")
+    assert rec_al >= 0.85
+    assert t_al <= 2.5 * best, (t_al, best)
+
+
+def test_empty_and_full_masks(index, queries):
+    empty = np.zeros(index.graph.n, bool)
+    r = index.search(queries[0], k=5, semimask=empty)
+    assert (np.asarray(r.ids) == -1).all()
+    full = np.ones(index.graph.n, bool)
+    r = index.search(queries[0], k=5, semimask=full)
+    assert (np.asarray(r.ids) >= 0).all()

@@ -1,0 +1,92 @@
+"""The trip-count-aware HLO cost analyzer (foundation of the roofline)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.launch import hlo_analysis as ha
+
+
+def _flops_of(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return ha.analyze_text(txt), txt
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return lax.scan(body, x, ws)[0]
+
+    x = jnp.zeros((64, 128))
+    ws = jnp.zeros((6, 128, 128))
+    cost, _ = _flops_of(scanned, x, ws)
+    expect = 2 * 6 * 64 * 128 * 128
+    assert abs(cost.flops - expect) / expect < 0.05, (cost.flops, expect)
+    assert cost.max_trip == 6
+
+
+def test_nested_scan_multiplies():
+    def inner(x, w):
+        return x @ w, None
+
+    def outer(x, ws):
+        def step(x, _):
+            return lax.scan(inner, x, ws)[0], None
+        return lax.scan(step, x, None, length=3)[0]
+
+    x = jnp.zeros((32, 64))
+    ws = jnp.zeros((4, 64, 64))
+    cost, _ = _flops_of(outer, x, ws)
+    expect = 2 * 3 * 4 * 32 * 64 * 64
+    assert abs(cost.flops - expect) / expect < 0.05
+
+
+def test_unrolled_matches_scan():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(ws.shape[0]):
+            x, _ = body(x, ws[i])
+        return x
+
+    x = jnp.zeros((64, 128))
+    ws = jnp.zeros((5, 128, 128))
+    c1, _ = _flops_of(scanned, x, ws)
+    c2, _ = _flops_of(unrolled, x, ws)
+    assert abs(c1.flops - c2.flops) / c2.flops < 0.05
+
+
+def test_collective_parsing_from_text():
+    txt = """
+ENTRY %main.1 (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  %ar = f32[16]{0} all-reduce(%p0), replica_groups={}, to_apply=%add.1
+  %ag = f32[64]{0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[16]{0} slice(%ag), slice={[0:16]}
+}
+"""
+    cost = ha.analyze_text(txt)
+    assert cost.coll_breakdown["all-reduce"] == 16 * 4
+    assert cost.coll_breakdown["all-gather"] == 64 * 4
+
+
+def test_shape_bytes_tuple_and_comments():
+    s = "(s32[], f32[64,64]{1,0}, /*index=5*/bf16[8,16]{1,0})"
+    assert ha._shape_bytes(s) == 4 + 64 * 64 * 4 + 8 * 16 * 2
+
+
+def test_instr_parser_handles_index_comments():
+    line = ("  %while.8 = (s32[], f32[64,64]{1,0}, /*index=5*/f32[8]{0}) "
+            "while(%tuple.5), condition=%c, body=%b, "
+            'backend_config={"known_trip_count":{"n":"24"}}')
+    name, shape, op, operands = ha._parse_instr(line)
+    assert name == "while.8" and op == "while"
+    assert ha._trip_count(line) == 24
+    assert ("b", 24) in ha._called(line)

@@ -1,0 +1,46 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import check_symmetric_fraction, degree_histogram
+
+
+def test_degrees_within_bounds(index):
+    g = index.graph
+    deg = np.asarray(g.lower_deg)
+    assert deg.max() <= g.m_l
+    assert deg.min() >= 1, "isolated node in lower level"
+    row_counts = (np.asarray(g.lower) >= 0).sum(axis=1)
+    np.testing.assert_array_equal(deg, row_counts)
+
+
+def test_no_self_or_duplicate_edges(index):
+    lower = np.asarray(index.graph.lower)
+    n = lower.shape[0]
+    for u in range(0, n, 97):
+        row = lower[u][lower[u] >= 0]
+        assert u not in row, f"self edge at {u}"
+        assert len(set(row.tolist())) == len(row), f"duplicate edge at {u}"
+        assert (row < n).all()
+
+
+def test_upper_layer_structure(index):
+    g = index.graph
+    uids = np.asarray(g.upper_ids)
+    assert len(uids) == len(set(uids.tolist()))
+    assert (uids >= 0).all() and (uids < g.n).all()
+    # upper adjacency points at valid positions
+    up = np.asarray(g.upper)
+    valid = up[up >= 0]
+    assert (valid < g.n_upper).all()
+    # roughly the configured sample rate
+    assert abs(g.n_upper / g.n - index.config.sample_rate) < 0.02
+
+
+def test_mostly_symmetric(index):
+    frac = check_symmetric_fraction(index.graph, sample=300)
+    assert frac > 0.5, f"edge symmetry too low: {frac}"
+
+
+def test_degree_histogram_sane(index):
+    h = degree_histogram(index.graph)
+    assert h.sum() == index.graph.n

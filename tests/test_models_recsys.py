@@ -1,0 +1,101 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import get_arch
+from repro.models import layers as L
+from repro.models import recsys as R
+from repro.models.api import make_retrieval_step, make_train_step, model_api
+
+RECSYS = ["wide-deep", "deepfm", "dien", "bst"]
+
+
+def make_batch(cfg, b, rng, labels=True):
+    hot = max(cfg.multi_hot_sizes) if cfg.multi_hot_sizes else 1
+    batch = {
+        "dense": jnp.asarray(rng.normal(size=(b, cfg.n_dense)), jnp.float32),
+        "sparse": jnp.asarray(np.stack(
+            [rng.integers(0, cfg.field_vocabs[f], size=(b, hot))
+             for f in range(cfg.n_sparse)], axis=1), jnp.int32),
+    }
+    if cfg.seq_len:
+        batch["seq"] = jnp.asarray(
+            rng.integers(0, cfg.item_vocab, size=(b, cfg.seq_len)), jnp.int32)
+        batch["target_item"] = jnp.asarray(
+            rng.integers(0, cfg.item_vocab, size=b), jnp.int32)
+    if labels:
+        batch["labels"] = jnp.asarray(rng.integers(0, 2, size=b), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", RECSYS)
+def test_train_step_reduces_loss(arch_id):
+    rng = np.random.default_rng(1)
+    cfg = get_arch(arch_id).smoke_config
+    api = model_api(cfg)
+    params = api.init(jax.random.key(0))
+    step, opt = make_train_step(cfg, lr=1e-2)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg, 64, rng)
+    jstep = jax.jit(step)
+    first = None
+    for _ in range(20):
+        params, opt_state, m = jstep(params, opt_state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first, (arch_id, first, float(m["loss"]))
+
+
+def test_embedding_bag_matches_oracle():
+    rng = np.random.default_rng(2)
+    table = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+    ids = np.array([[1, 2, -1], [5, 5, 7], [-1, -1, -1]], np.int32)
+    out = np.asarray(L.embedding_bag(table, jnp.asarray(ids), "sum"))
+    t = np.asarray(table)
+    np.testing.assert_allclose(out[0], t[1] + t[2], rtol=1e-6)
+    np.testing.assert_allclose(out[1], 2 * t[5] + t[7], rtol=1e-6)
+    np.testing.assert_allclose(out[2], 0)
+    mean = np.asarray(L.embedding_bag(table, jnp.asarray(ids), "mean"))
+    np.testing.assert_allclose(mean[0], (t[1] + t[2]) / 2, rtol=1e-6)
+
+
+def test_fm_interaction_identity():
+    """DeepFM's FM term: sum-square identity == explicit pairwise sum."""
+    rng = np.random.default_rng(3)
+    cfg = get_arch("deepfm").smoke_config
+    emb = rng.normal(size=(4, cfg.n_sparse, cfg.embed_dim)).astype(np.float32)
+    sum_v = emb.sum(axis=1)
+    fm_fast = 0.5 * (sum_v * sum_v - (emb * emb).sum(axis=1)).sum(axis=-1)
+    fm_slow = np.zeros(4)
+    for i in range(cfg.n_sparse):
+        for j in range(i + 1, cfg.n_sparse):
+            fm_slow += (emb[:, i] * emb[:, j]).sum(-1)
+    np.testing.assert_allclose(fm_fast, fm_slow, rtol=1e-4, atol=1e-5)
+
+
+def test_retrieval_scores_are_dot_products():
+    rng = np.random.default_rng(4)
+    cfg = get_arch("bst").smoke_config
+    params = model_api(cfg).init(jax.random.key(0))
+    batch = make_batch(cfg, 1, rng, labels=False)
+    batch["candidates"] = jnp.asarray(rng.integers(0, cfg.item_vocab,
+                                                   size=64), jnp.int32)
+    scores = np.asarray(R.retrieval_scores(cfg, params, batch))
+    assert scores.shape == (1, 64)
+    vals, ids = jax.jit(make_retrieval_step(cfg, k=10))(params, batch)
+    assert np.asarray(vals).shape == (1, 10)
+    # top-1 really is the argmax of the scores
+    assert np.asarray(ids)[0, 0] == np.asarray(batch["candidates"])[scores[0].argmax()]
+
+
+def test_dien_attention_shifts_with_target():
+    """DIEN: different target items must change the prediction (the AUGRU
+    attention actually conditions on the target)."""
+    rng = np.random.default_rng(5)
+    cfg = get_arch("dien").smoke_config
+    params = model_api(cfg).init(jax.random.key(0))
+    batch = make_batch(cfg, 4, rng, labels=False)
+    out1 = np.asarray(R.recsys_forward(cfg, params, batch))
+    batch2 = dict(batch, target_item=(batch["target_item"] + 7) % cfg.item_vocab)
+    out2 = np.asarray(R.recsys_forward(cfg, params, batch2))
+    assert np.abs(out1 - out2).max() > 1e-6

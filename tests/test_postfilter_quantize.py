@@ -1,0 +1,45 @@
+import numpy as np
+import pytest
+
+
+def test_postfilter_reaches_k(index, queries):
+    mask = np.random.default_rng(5).random(index.graph.n) < 0.5
+    d, ids, stats = index.search_postfilter(queries[0], k=10, semimask=mask)
+    assert (ids >= 0).sum() == 10
+    assert mask[ids].all()
+    assert stats.verifications >= 10
+
+
+def test_postfilter_degrades_with_selectivity(index, queries):
+    """Section 5.7: lower selectivity => more streamed tuples verified."""
+    rng = np.random.default_rng(6)
+    v_hi = v_lo = 0
+    for q in queries[:6]:
+        *_, s_hi = index.search_postfilter(q, k=10,
+                                           semimask=rng.random(index.graph.n) < 0.8)
+        *_, s_lo = index.search_postfilter(q, k=10,
+                                           semimask=rng.random(index.graph.n) < 0.05)
+        v_hi += s_hi.verifications
+        v_lo += s_lo.verifications
+    assert v_lo > 2 * v_hi, (v_lo, v_hi)
+
+
+def test_quantized_search_recall(index, queries):
+    """DiskANN-regime: int8 search + exact re-rank stays close to exact."""
+    _, true_ids = index.brute_force(queries, k=10)
+    got = []
+    for q in queries:
+        r = index.search_quantized(q, k=10, efs=80, heuristic="onehop_a")
+        got.append(np.asarray(r.ids))
+    rec = index.recall(np.stack(got), np.asarray(true_ids))
+    assert rec >= 0.85, rec
+
+
+def test_quantization_error_bounded(index):
+    from repro.core.quantize import dequantize, quantize
+    store = quantize(index.graph.vectors)
+    deq = np.asarray(dequantize(store))
+    orig = np.asarray(index.graph.vectors)
+    rel = np.abs(deq - orig).max() / np.abs(orig).max()
+    assert rel < 0.01
+    assert store.nbytes() < orig.nbytes / 3.5

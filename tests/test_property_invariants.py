@@ -1,0 +1,103 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.search import _dedupe_keep_first, _take_first
+
+
+@given(st.lists(st.integers(-1, 50), min_size=1, max_size=64),
+       st.integers(1, 32))
+@settings(max_examples=50, deadline=None)
+def test_take_first_semantics(vals, width):
+    vals = np.asarray(vals, np.int32)
+    elig = vals >= 0
+    out = np.asarray(_take_first(jnp.asarray(elig), jnp.asarray(vals), width))
+    expect = vals[elig][:width]
+    np.testing.assert_array_equal(out[: len(expect)], expect)
+    assert (out[len(expect):] == -1).all()
+
+
+@given(st.lists(st.integers(-1, 20), min_size=1, max_size=48))
+@settings(max_examples=50, deadline=None)
+def test_dedupe_keeps_first_occurrence(vals):
+    vals = np.asarray(vals, np.int32)
+    out = np.asarray(_dedupe_keep_first(jnp.asarray(vals)))
+    seen = set()
+    for v_in, v_out in zip(vals, out):
+        if v_in < 0 or v_in in seen:
+            assert v_out == -1
+        else:
+            assert v_out == v_in
+            seen.add(int(v_in))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(1, 10))
+@settings(max_examples=25, deadline=None)
+def test_sharded_topk_merge_equals_global(seed, n_shards, k):
+    """The distributed merge invariant: top-k of per-shard top-k lists ==
+    global top-k (as long as each shard returns >= k)."""
+    rng = np.random.default_rng(seed)
+    shards = [rng.random(30) for _ in range(n_shards)]
+    all_vals = np.concatenate(shards)
+    expect = np.sort(all_vals)[:k]
+    per_shard = np.concatenate([np.sort(s)[:k] for s in shards])
+    got = np.sort(per_shard)[:k]
+    np.testing.assert_allclose(got, expect)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_rng_prune_keeps_nearest(seed):
+    """Toussaint rule invariants: the nearest candidate is always kept;
+    kept set size <= m; every kept c is closer to v than to any earlier
+    kept candidate."""
+    from repro.core.build import rng_prune_mask
+    from repro.core.distances import dist_matrix
+    rng = np.random.default_rng(seed)
+    c = 20
+    X = rng.normal(size=(c, 8)).astype(np.float32)
+    v = rng.normal(size=8).astype(np.float32)
+    d = ((X - v) ** 2).sum(-1)
+    order = np.argsort(d)
+    X, d = X[order], d[order]
+    pd = np.asarray(dist_matrix(jnp.asarray(X), jnp.asarray(X), "l2"))
+    m = 8
+    keep = np.asarray(rng_prune_mask(jnp.asarray(d),
+                                     jnp.asarray(pd),
+                                     jnp.ones(c, bool), m))
+    assert keep[0]
+    assert keep.sum() <= m
+    kept_idx = np.flatnonzero(keep)
+    for pos, i in enumerate(kept_idx):
+        for j in kept_idx[:pos]:
+            assert d[i] < pd[i, j] + 1e-5
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 0.99))
+@settings(max_examples=20, deadline=None)
+def test_adaptive_rule_monotone(seed, sigma):
+    """Higher selectivity never moves the rule toward a 'lower' heuristic
+    (onehop-s < directed < blind in exploration aggressiveness)."""
+    from repro.core.heuristics import adaptive_rule
+    m = 32
+    a = int(adaptive_rule(sigma, m))
+    b = int(adaptive_rule(min(sigma * 1.5, 1.0), m))
+    assert b <= a
+
+
+def test_correlation_metric_extremes():
+    from repro.data.synthetic import correlation_ratio
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(500, 8)).astype(np.float32)
+    q = X[:4] + 0.01
+    mask_all = np.ones(500, bool)
+    assert abs(correlation_ratio(X, q, mask_all, k=20) - 1.0) < 1e-6
+    # S = exactly the queries' neighborhoods -> strongly positive
+    from repro.core.distances import brute_force_topk
+    _, ids = brute_force_topk(jnp.asarray(q), jnp.asarray(X), 20, "l2")
+    mask = np.zeros(500, bool)
+    mask[np.asarray(ids).ravel()] = True
+    assert correlation_ratio(X, q, mask, k=20) > 3.0

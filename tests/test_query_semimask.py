@@ -1,0 +1,86 @@
+import numpy as np
+import pytest
+
+from repro.data.synthetic import (correlation_ratio, make_queries,
+                                  make_wiki_like, person_chunk_plan,
+                                  two_hop_plan, uncorrelated_plan)
+from repro.query.operators import (And, Filter, HopJoin, NodeScan, Not, Or,
+                                   evaluate, output_table)
+
+
+@pytest.fixture(scope="module")
+def wiki():
+    return make_wiki_like(n_person=120, n_resource=300, d=24, seed=0)
+
+
+def test_scan_and_filter(wiki):
+    store = wiki.store
+    res = evaluate(Filter(NodeScan("Chunk"), "cID", "<", value=100), store)
+    assert res.mask.sum() == 100
+    assert res.table == "Chunk"
+    res2 = evaluate(Filter(NodeScan("Person"), "birth_date", "range",
+                           lo=0, hi=18250), store)
+    bd = store.node("Person").column("birth_date")
+    np.testing.assert_array_equal(res2.mask, (bd >= 0) & (bd < 18250))
+
+
+def test_hop_join_matches_oracle(wiki):
+    store = wiki.store
+    persons = Filter(NodeScan("Person"), "pID", "<", value=10)
+    plan = HopJoin(persons, "PersonChunk", "fwd")
+    res = evaluate(plan, store)
+    # oracle: chunks whose person id < 10
+    rel = store.rel("PersonChunk")
+    expect = np.zeros(store.node("Chunk").n, bool)
+    for p in range(10):
+        expect[rel.fwd.neighbors(p)] = True
+    np.testing.assert_array_equal(res.mask, expect)
+    assert output_table(plan, store) == "Chunk"
+
+
+def test_two_hop_graph_rag_plan(wiki):
+    store = wiki.store
+    res = evaluate(two_hop_plan(store, 0.5), store)
+    assert res.table == "Chunk"
+    assert 0 < res.mask.sum() < store.node("Chunk").n
+
+
+def test_boolean_combinators(wiki):
+    store = wiki.store
+    a = Filter(NodeScan("Chunk"), "cID", "<", value=200)
+    b = Filter(NodeScan("Chunk"), "cID", ">=", value=100)
+    both = evaluate(And(a, b), store).mask
+    assert both.sum() == 100
+    either = evaluate(Or(a, b), store).mask
+    assert either.all()
+    neither = evaluate(Not(Or(a, b)), store).mask
+    assert neither.sum() == 0
+
+
+def test_uncorrelated_workload_ce(wiki):
+    """Tables 4: id-range filters should have ce ~= 1."""
+    plan = uncorrelated_plan(0.3, wiki.n_chunks)
+    mask = evaluate(plan, wiki.store).mask
+    q = make_queries(wiki, 16, "uncorrelated", seed=5)
+    ce = correlation_ratio(wiki.embeddings, q, mask, k=50)
+    assert 0.7 < ce < 1.4, ce
+
+
+def test_correlated_workloads_ce(wiki):
+    """Table 5: person-chunk filters vs person/nonperson queries."""
+    mask = evaluate(person_chunk_plan(wiki.store, 1.0), wiki.store).mask
+    q_pos = make_queries(wiki, 16, "person", seed=6)
+    q_neg = make_queries(wiki, 16, "nonperson", seed=6)
+    ce_pos = correlation_ratio(wiki.embeddings, q_pos, mask, k=50)
+    ce_neg = correlation_ratio(wiki.embeddings, q_neg, mask, k=50)
+    assert ce_pos > 1.5, f"positive correlation too weak: {ce_pos}"
+    assert ce_neg < 0.5, f"negative correlation too weak: {ce_neg}"
+
+
+def test_selectivity_control(wiki):
+    """birth_date range width controls |S| roughly linearly."""
+    sig = []
+    for frac in (0.2, 0.5, 1.0):
+        mask = evaluate(person_chunk_plan(wiki.store, frac), wiki.store).mask
+        sig.append(mask.mean())
+    assert sig[0] < sig[1] < sig[2]

@@ -1,0 +1,45 @@
+import numpy as np
+import pytest
+
+
+def test_unfiltered_recall(index, queries):
+    _, true_ids = index.brute_force(queries, k=10)
+    got = []
+    for q in queries:
+        r = index.search(q, k=10, efs=80, heuristic="onehop_a")
+        got.append(np.asarray(r.ids))
+    rec = index.recall(np.stack(got), np.asarray(true_ids))
+    assert rec >= 0.9, f"unfiltered recall {rec}"
+
+
+def test_efs_monotonicity(index, queries):
+    """Larger efs => recall does not get (meaningfully) worse -- the
+    accuracy/latency knob of Section 2.1."""
+    _, true_ids = index.brute_force(queries, k=10)
+    recalls = []
+    for efs in (16, 64, 160):
+        got = [np.asarray(index.search(q, k=10, efs=efs,
+                                       heuristic="onehop_a").ids)
+               for q in queries]
+        recalls.append(index.recall(np.stack(got), np.asarray(true_ids)))
+    assert recalls[-1] >= recalls[0] - 0.02
+    assert recalls[-1] >= 0.9
+
+
+def test_results_sorted_and_unique(index, queries):
+    for q in queries[:4]:
+        r = index.search(q, k=20, efs=80, heuristic="onehop_a")
+        d = np.asarray(r.dists)
+        ids = np.asarray(r.ids)
+        valid = ids >= 0
+        dv = d[valid]
+        assert (np.diff(dv) >= -1e-6).all(), "results not sorted"
+        assert len(set(ids[valid].tolist())) == valid.sum(), "duplicates"
+
+
+def test_search_stats_counters(index, queries):
+    r = index.search(queries[0], k=10, efs=64, heuristic="onehop_a")
+    assert int(r.stats.t_dc) > 0
+    assert int(r.stats.t_dc) == int(r.stats.s_dc)  # unfiltered: all selected
+    assert int(r.stats.iters) > 0
+    assert int(r.stats.upper_dc) > 0

@@ -1,0 +1,47 @@
+import numpy as np
+import pytest
+
+from repro.query.operators import Filter, NodeScan
+from repro.serving.engine import SearchEngine
+from repro.storage.columnar import GraphStore
+
+
+@pytest.fixture()
+def engine(index):
+    store = GraphStore()
+    store.add_node_table("Chunk", index.graph.n,
+                         {"cID": np.arange(index.graph.n)})
+    return SearchEngine(index=index, store=store, efs=60)
+
+
+def test_batched_requests(engine, queries):
+    plan = Filter(NodeScan("Chunk"), "cID", "<", value=engine.index.graph.n // 2)
+    rids = [engine.submit(q, plan=plan, k=5) for q in queries]
+    rids += [engine.submit(queries[0], plan=None, k=5)]
+    responses = engine.drain()
+    assert len(responses) == len(rids)
+    by_rid = {r.rid: r for r in responses}
+    for rid in rids[:-1]:
+        r = by_rid[rid]
+        ids = r.ids[r.ids >= 0]
+        assert (ids < engine.index.graph.n // 2).all()
+        assert r.sigma == pytest.approx(0.5, abs=0.01)
+    summary = engine.latency_summary()
+    assert summary["n"] == len(rids)
+    assert summary["p99_ms"] >= summary["p50_ms"]
+
+
+def test_greedy_generate_shapes():
+    import jax
+    import numpy as np
+
+    from repro.config.base import get_arch
+    from repro.models.api import model_api
+    from repro.serving.engine import greedy_generate
+    cfg = get_arch("qwen1.5-0.5b").smoke_config
+    params = model_api(cfg).init(jax.random.key(0))
+    prompt = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                               size=(2, 8))
+    out = greedy_generate(cfg, params, prompt, n_new=4)
+    assert out.shape == (2, 4)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
