@@ -13,19 +13,20 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, measure, n_queries
-from benchmarks.datasets import wiki_dataset
-from repro.data.synthetic import make_queries, person_chunk_plan, uncorrelated_plan
-from repro.query.operators import evaluate
+from benchmarks.datasets import wiki_db
+from repro.api import Q
+from repro.data.synthetic import make_queries, person_chunk_plan
 
 
 def run() -> list[dict]:
-    idx, data = wiki_dataset()
+    db, idx, data = wiki_db()
     nq = n_queries()
     queries = make_queries(data, nq, "uncorrelated", seed=31)
     rows = []
     for sigma in (0.9, 0.5, 0.3, 0.1, 0.05, 0.01):
-        plan = uncorrelated_plan(sigma, data.n_chunks)
-        qres = evaluate(plan, data.store)
+        plan = (Q.match("Chunk")
+                 .where("cID", "<", int(data.n_chunks * sigma)).plan())
+        qres = db.prefilter(plan)
         mask = qres.mask
         # --- prefiltering: NaviX ---
         m = measure(idx, queries, mask, "adaptive_local")
@@ -66,7 +67,7 @@ def run() -> list[dict]:
 def run_split() -> list[dict]:
     """Table 7: prefilter vs vector-search share, uncorrelated (cheap id
     filter) vs negatively correlated (1-hop join) Q_S."""
-    idx, data = wiki_dataset()
+    db, idx, data = wiki_db()
     nq = n_queries()
     rows = []
     person_frac = data.chunk_is_person.mean()
@@ -74,7 +75,9 @@ def run_split() -> list[dict]:
                              ("negative_join", (0.229, 0.15, 0.099, 0.05))):
         for sigma in sigmas:
             if workload == "uncorrelated":
-                plan = uncorrelated_plan(sigma, data.n_chunks)
+                plan = (Q.match("Chunk")
+                         .where("cID", "<", int(data.n_chunks * sigma))
+                         .plan())
                 queries = make_queries(data, nq, "uncorrelated", seed=41)
             else:
                 plan = person_chunk_plan(data.store,
@@ -83,7 +86,7 @@ def run_split() -> list[dict]:
             # prefilter time: repeat the Q_S evaluation like a fresh query
             t0 = time.perf_counter()
             for _ in range(3):
-                qres = evaluate(plan, data.store)
+                qres = db.prefilter(plan)
             pf_ms = (time.perf_counter() - t0) / 3 * 1e3
             m = measure(idx, queries, qres.mask, "adaptive_local")
             total = pf_ms + m.ms_per_query

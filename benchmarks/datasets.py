@@ -48,3 +48,16 @@ def wiki_dataset():
                       metric="cos")
     idx = cached_index("wiki-like", data.embeddings, cfg)
     return idx, data
+
+
+@functools.lru_cache(maxsize=None)
+def wiki_db():
+    """wiki_dataset wrapped in a NavixDB: the (possibly disk-cached) index
+    is adopted into the catalog, so benchmark searches flow through the
+    shared compiled-program cache like production queries."""
+    from repro.api import NavixDB
+
+    idx, data = wiki_dataset()
+    db = NavixDB(data.store)
+    db.register_index("chunk_emb", idx, table="Chunk")
+    return db, idx, data

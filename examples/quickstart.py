@@ -1,11 +1,14 @@
-"""Quickstart: build a NaviX index, run filtered kNN with every heuristic.
+"""Quickstart: stand up a NavixDB, create an index (CREATE_HNSW_INDEX),
+and run declarative filtered kNN plans (QUERY_HNSW_INDEX) -- plus the
+per-heuristic drill-down through the compatibility layer.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core.navix import NavixConfig, NavixIndex
+from repro.api import NavixDB, Q
+from repro.core.navix import NavixConfig
 from repro.data.synthetic import gaussian_mixture
 
 
@@ -14,7 +17,12 @@ def main():
     X, labels, centers = gaussian_mixture(4000, 32, 12, seed=0)
     print(f"dataset: {X.shape[0]} vectors, dim {X.shape[1]}")
 
-    idx, stats = NavixIndex.create(X, NavixConfig(m_u=8, ef_construction=64))
+    db = NavixDB()
+    idx, stats = db.create_index(
+        "chunks", "Chunk", column="embedding", vectors=X,
+        config=NavixConfig(m_u=8, ef_construction=64))
+    db.store.node("Chunk").add_column("year",
+                                      2015 + (np.arange(4000) % 10))
     print(f"built 2-level HNSW in {stats.seconds:.1f}s "
           f"({stats.n} vectors, {stats.n_upper} upper, "
           f"{stats.search_dc} insert distance computations)")
@@ -22,15 +30,28 @@ def main():
     q = (centers[3] + 0.2 * np.random.default_rng(1).normal(size=32)
          ).astype(np.float32)
 
-    # unfiltered kNN
-    r = idx.search(q, k=5, heuristic="onehop_a")
-    print("\nunfiltered top-5:", np.asarray(r.ids),
-          "dc:", int(r.stats.t_dc))
+    # unfiltered kNN: MATCH (c:Chunk) -> knn
+    rs = db.execute(Q.match("Chunk").knn(q, k=5, heuristic="onehop_a"))
+    print("\nunfiltered top-5:", rs.ids, "dc:", int(rs.stats.t_dc))
 
-    # predicate-agnostic filtered search: S = an arbitrary 20% subset
+    # declarative filtered search: WHERE year >= 2020 -> knn -> project
+    plan = (Q.match("Chunk").where("year", ">=", 2020)
+             .knn(q, k=5).project("year"))
+    print("\nplan:\n" + db.explain(plan))
+    rs = db.execute(plan)
+    print(f"filtered (sigma={rs.sigma:.2f}): ids={rs.ids} "
+          f"years={rs.columns['year']}")
+    print("stage timings:",
+          {k: round(v, 2) for k, v in rs.timings.as_dict().items()})
+
+    # the same shape re-executes with zero new compilations
+    db.execute(plan, query=X[0])
+    print("program cache:", db.programs.info())
+
+    # heuristic drill-down (paper Table 1) via the compatibility layer
     mask = np.random.default_rng(2).random(4000) < 0.2
     _, exact = idx.brute_force(q, k=5, semimask=mask)
-    print(f"\nfiltered search (sigma={mask.mean():.2f}), exact:",
+    print(f"\nheuristics at sigma={mask.mean():.2f}, exact:",
           np.asarray(exact)[0])
     for h in ("onehop_s", "directed", "blind", "adaptive_g",
               "adaptive_local"):

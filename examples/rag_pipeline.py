@@ -1,11 +1,12 @@
-"""Graph-RAG pipeline: filtered retrieval feeding a (tiny) LM's decode loop
--- the paper's motivating application (Section 1): "100 nearest chunks of
-v_Q among chunks mentioning person X", then generate with the retrieved
-context.
+"""Graph-RAG pipeline: declarative filtered retrieval feeding a (tiny) LM's
+decode loop -- the paper's motivating application (Section 1): "100 nearest
+chunks of v_Q among chunks mentioning person X", then generate with the
+retrieved context.
 
 The LM is an untrained smoke-size qwen config (the framework trains real
-ones; here the point is the serving integration), the retrieval is the
-full NaviX stack: selection subquery -> semimask -> adaptive-local search.
+ones; here the point is the serving integration); the retrieval is one
+NavixDB plan -- selection subquery -> KnnSearch -> projection -- with no
+manual mask threading.
 
     PYTHONPATH=src python examples/rag_pipeline.py
 """
@@ -13,31 +14,41 @@ full NaviX stack: selection subquery -> semimask -> adaptive-local search.
 import jax
 import numpy as np
 
+from repro.api import NavixDB, Q
 from repro.config.base import get_arch
-from repro.core.navix import NavixConfig, NavixIndex
-from repro.data.synthetic import make_queries, make_wiki_like, person_chunk_plan
+from repro.core.navix import NavixConfig
+from repro.data.synthetic import make_queries, make_wiki_like
 from repro.models.api import model_api
-from repro.query.operators import evaluate
 from repro.serving.engine import greedy_generate
 
 
 def main():
-    print("== graph store + index ==")
+    print("== graph store + index catalog ==")
     data = make_wiki_like(n_person=200, n_resource=800, d=48, seed=1)
-    idx, _ = NavixIndex.create(
-        data.embeddings, NavixConfig(m_u=8, ef_construction=64, metric="cos"))
+    db = NavixDB(data.store)
+    db.create_index(
+        "chunk_emb", "Chunk", column="embedding", vectors=data.embeddings,
+        config=NavixConfig(m_u=8, ef_construction=64, metric="cos"))
 
-    # "question about a person" -> embed -> retrieve among person chunks
+    # "question about a person" -> embed -> retrieve among person chunks,
+    # all as one declarative plan
     q = make_queries(data, 1, "person", seed=3)[0]
-    plan = person_chunk_plan(data.store, 1.0)   # chunks of any person
-    qres = evaluate(plan, data.store)
-    print(f"selection subquery: {qres.mask.sum()} of {data.n_chunks} chunks "
-          f"(sigma={qres.selectivity:.2f}), {qres.seconds*1e3:.2f}ms")
+    plan = (Q.match("Person")
+             .where("birth_date", "range", lo=0, hi=36500)
+             .hop("PersonChunk", "fwd")
+             .knn(q, k=8, heuristic="adaptive_local")
+             .project("cID", "is_person"))
+    print(db.explain(plan))
 
-    res = idx.search(q, k=8, semimask=qres.mask, heuristic="adaptive_local")
-    ids = np.asarray(res.ids)
-    print(f"retrieved chunks: {ids} (t_dc={int(res.stats.t_dc)})")
-    assert qres.mask[ids[ids >= 0]].all(), "retrieval leaked unselected chunks"
+    rs = db.execute(plan)
+    ids = rs.ids
+    print(f"selection subquery: {int(rs.mask.sum())} of {data.n_chunks} "
+          f"chunks (sigma={rs.sigma:.2f}), "
+          f"{rs.timings.prefilter_ms:.2f}ms prefilter")
+    print(f"retrieved chunks: {ids} (t_dc={int(rs.stats.t_dc)}, "
+          f"search {rs.timings.search_ms:.1f}ms)")
+    assert rs.mask[ids[ids >= 0]].all(), "retrieval leaked unselected chunks"
+    assert rs.columns["is_person"][ids >= 0].all()
 
     print("\n== generation with retrieved context ==")
     cfg = get_arch("qwen1.5-0.5b").smoke_config
@@ -47,7 +58,7 @@ def main():
     context = rng.integers(0, cfg.vocab_size, size=(1, 24))
     out = greedy_generate(cfg, params, context, n_new=8)
     print("generated token ids:", out[0])
-    print("\n(RAG loop complete: Q_S -> semimask -> filtered kNN -> LM)")
+    print("\n(RAG loop complete: one NavixDB plan -> filtered kNN -> LM)")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
-"""RecSys retrieval serving: score one user against a million-scale
-candidate set -- the retrieval_cand production shape, powered by the
-NaviX brute-force path (distance kernel + top-k) AND the HNSW index,
-comparing cost.
+"""RecSys retrieval serving: score one user against a large candidate set
+-- the retrieval_cand production shape, powered by the NaviX brute-force
+path (distance kernel + top-k) AND a NavixDB item index, comparing cost.
+The filtered variant ("in-stock items only") is one declarative plan over
+the item table, no manual mask threading.
 
     PYTHONPATH=src python examples/recsys_retrieval.py
 """
@@ -12,8 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import NavixDB, Q
 from repro.config.base import get_arch
-from repro.core.navix import NavixConfig, NavixIndex
+from repro.core.navix import NavixConfig
 from repro.kernels import ops
 from repro.models.api import model_api
 
@@ -38,25 +40,30 @@ def main():
     print(f"exact MIPS over {n_cand} candidates: {t_exact*1e3:.1f}ms "
           f"top-10 = {top}")
 
-    # --- ANN: NaviX index over the candidates ---------------------------
-    idx, stats = NavixIndex.create(
-        cand, NavixConfig(m_u=8, ef_construction=64, metric="dot"))
+    # --- ANN: NavixDB item catalog over the candidates -------------------
+    db = NavixDB()
+    _, stats = db.create_index(
+        "items", "Item", column="embedding", vectors=cand,
+        config=NavixConfig(m_u=8, ef_construction=64, metric="dot"))
+    db.store.node("Item").add_column("in_stock", rng.random(n_cand) < 0.25)
     print(f"index build: {stats.seconds:.1f}s")
-    idx.search(user[0], k=10, efs=100, heuristic="onehop_a")  # warm-up
+
+    plan = Q.match("Item").knn(user[0], k=10, efs=100, heuristic="onehop_a")
+    db.execute(plan)                                   # warm-up compile
     t0 = time.perf_counter()
-    r = idx.search(user[0], k=10, efs=100, heuristic="onehop_a")
+    rs = db.execute(plan)
     t_ann = time.perf_counter() - t0
-    hits = len(set(np.asarray(r.ids).tolist()) & set(top.tolist()))
+    hits = len(set(rs.ids.tolist()) & set(top.tolist()))
     print(f"NaviX ANN: {t_ann*1e3:.1f}ms, recall@10={hits/10:.2f}, "
-          f"dc={int(r.stats.t_dc)} ({int(r.stats.t_dc)/n_cand:.1%} of brute)")
+          f"dc={int(rs.stats.t_dc)} ({int(rs.stats.t_dc)/n_cand:.1%} of "
+          f"brute), cache={db.programs.info()}")
 
     # --- filtered retrieval: only 'in-stock' candidates ------------------
-    in_stock = rng.random(n_cand) < 0.25
-    rf = idx.search(user[0], k=10, efs=100, semimask=in_stock,
-                    heuristic="adaptive_local")
-    ids = np.asarray(rf.ids)
-    print(f"filtered (sigma=0.25): ids={ids[:5]}..., all selected: "
-          f"{bool(in_stock[ids[ids>=0]].all())}")
+    rf = db.execute(Q.match("Item").where("in_stock", "==", True)
+                     .knn(user[0], k=10, efs=100).project("in_stock"))
+    ids = rf.ids
+    print(f"filtered (sigma={rf.sigma:.2f}): ids={ids[:5]}..., "
+          f"all in stock: {bool(rf.columns['in_stock'][ids >= 0].all())}")
 
 
 if __name__ == "__main__":

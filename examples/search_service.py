@@ -2,9 +2,11 @@
 graph store serving batched requests (the paper's kind of system is a
 serving system, so the end-to-end driver serves batched requests).
 
-Flow per request: selection subquery (Cypher-analogue operator tree) ->
-semimask via sideways information passing -> adaptive-local kNN -> results;
-latency percentiles reported like a production tier.
+Requests carry declarative plan templates (built with ``repro.api.Q``,
+query vector bound per request by the engine); the engine groups by plan,
+runs each group's prefilter once through NavixDB, and serves the batch
+through the shared compiled-program cache. Latency percentiles are
+reported like a production tier.
 
     PYTHONPATH=src python examples/search_service.py [--requests 60]
 """
@@ -13,11 +15,9 @@ import argparse
 
 import numpy as np
 
-from repro.core.navix import NavixConfig, NavixIndex
-from repro.data.synthetic import (make_queries, make_wiki_like,
-                                  person_chunk_plan, two_hop_plan,
-                                  uncorrelated_plan)
-from repro.query.operators import evaluate
+from repro.api import NavixDB, Q
+from repro.core.navix import NavixConfig
+from repro.data.synthetic import make_queries, make_wiki_like
 from repro.serving.engine import SearchEngine
 
 
@@ -26,19 +26,30 @@ def main():
     ap.add_argument("--requests", type=int, default=60)
     args = ap.parse_args()
 
-    print("== building the Wiki-like graph + index ==")
+    print("== building the Wiki-like graph + index catalog ==")
     data = make_wiki_like(n_person=300, n_resource=1200, d=48, seed=0)
-    idx, stats = NavixIndex.create(
-        data.embeddings, NavixConfig(m_u=8, ef_construction=64, metric="cos"))
+    db = NavixDB(data.store)
+    _, stats = db.create_index(
+        "chunk_emb", "Chunk", column="embedding", vectors=data.embeddings,
+        config=NavixConfig(m_u=8, ef_construction=64, metric="cos"))
     print(f"chunks={data.n_chunks} build={stats.seconds:.1f}s")
 
-    engine = SearchEngine(index=idx, store=data.store, efs=80)
+    engine = SearchEngine(db=db, efs=80)
 
-    # a mix of production-ish request types
+    # a mix of production-ish request types, as declarative plan templates
     plans = {
-        "id_filter": uncorrelated_plan(0.3, data.n_chunks),
-        "person_join": person_chunk_plan(data.store, 0.5),
-        "graph_rag_2hop": two_hop_plan(data.store, 0.5),
+        "id_filter": Q.match("Chunk")
+                      .where("cID", "<", int(0.3 * data.n_chunks))
+                      .knn(k=10, efs=80),
+        "person_join": Q.match("Person")
+                        .where("birth_date", "range", lo=0, hi=18250)
+                        .hop("PersonChunk", "fwd")
+                        .knn(k=10, efs=80),
+        "graph_rag_2hop": Q.match("Person")
+                           .where("birth_date", "range", lo=0, hi=18250)
+                           .hop("WikiLink", "fwd")
+                           .hop("ResourceChunk", "fwd")
+                           .knn(k=10, efs=80),
         "unfiltered": None,
     }
     rng = np.random.default_rng(0)
@@ -54,8 +65,9 @@ def main():
     print(f"answered {len(responses)} requests ({ok} non-empty)")
     for r in responses[:3]:
         print(f"  rid={r.rid} sigma={r.sigma:.2f} ids={r.ids[:5]}"
-              f" prefilter={r.prefilter_ms:.2f}ms exec={r.exec_ms:.1f}ms")
+              f" prefilter={r.prefilter_ms:.3f}ms exec={r.exec_ms:.1f}ms")
     print("latency summary:", engine.latency_summary())
+    print("program cache:", db.programs.info())
 
 
 if __name__ == "__main__":

@@ -5,8 +5,9 @@ Reproduction (and beyond-paper optimization) of:
    Predicate-Agnostic Search Performance" (Sehgal & Salihoglu, 2025).
 
 Public API entry points:
-  repro.core.navix      -- NavixIndex: build / (filtered) search
-  repro.query           -- selection subqueries -> semimasks
+  repro.api             -- NavixDB: store + index catalog + plan execution
+  repro.core.navix      -- NavixIndex: per-index build / search (compat)
+  repro.query           -- plan algebra (selection subqueries + KnnSearch)
   repro.configs         -- assigned architecture registry (--arch <id>)
   repro.launch          -- mesh / dryrun / train / serve
 """

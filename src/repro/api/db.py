@@ -1,0 +1,315 @@
+"""NavixDB -- the unified query facade (the paper's "native" claim as API).
+
+The paper's point (Sections 2.3, 4) is that QUERY_HNSW_INDEX is just
+another operator inside the GDBMS query processor: the selection subquery
+runs first, its selected set S reaches the kNN operator as a node semimask
+via sideways information passing, and everything composes with joins,
+projections and limits. ``NavixDB`` is that processor:
+
+    db = NavixDB(store)
+    db.create_index("chunk_emb", "Chunk", column="embedding",
+                    config=NavixConfig(metric="cos"))      # CREATE_HNSW_INDEX
+    rs = db.execute(
+        Q.match("Person").where("birth_date", "range", lo=0, hi=18250)
+         .hop("PersonChunk", "fwd")
+         .knn(qvec, k=10).project("cID"))                  # QUERY_HNSW_INDEX
+    rs.ids, rs.dists, rs.columns["cID"], rs.timings.prefilter_ms
+
+One ``execute`` runs the whole pipeline -- prefilter -> semimask packing ->
+adaptive-local search (through the compiled-program cache) -> projection --
+and returns a typed :class:`ResultSet` with the paper's Table 7 per-stage
+timing split. The legacy path ``NavixIndex.search(..., semimask=...)``
+remains as a thin compatibility layer and shares the same program cache
+once the index is registered in a catalog.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.api.plan_compile import ProgramCache
+from repro.core.build import BuildStats
+from repro.core.navix import NavixConfig, NavixIndex
+from repro.query.operators import (KnnSearch, Plan, QueryResult,
+                                   evaluate, output_table, split_pipeline)
+from repro.storage.columnar import GraphStore
+
+
+@dataclasses.dataclass
+class StageTimings:
+    """Per-stage wall times of one execute() (Table 7 accounting)."""
+    prefilter_ms: float = 0.0      # Q_S evaluation (host, numpy)
+    pack_ms: float = 0.0           # mask -> device bitset (SIP handoff)
+    search_ms: float = 0.0         # kNN operator (device)
+    project_ms: float = 0.0        # projection / row materialization
+
+    @property
+    def total_ms(self) -> float:
+        return (self.prefilter_ms + self.pack_ms + self.search_ms
+                + self.project_ms)
+
+    def as_dict(self) -> dict:
+        return {"prefilter_ms": self.prefilter_ms, "pack_ms": self.pack_ms,
+                "search_ms": self.search_ms, "project_ms": self.project_ms,
+                "total_ms": self.total_ms}
+
+
+@dataclasses.dataclass
+class ResultSet:
+    """Typed result of ``NavixDB.execute``.
+
+    ``ids``/``dists`` are [k] for a single bound query or [b, k] for a
+    batch; -1 ids are padding (fewer than k reachable selected nodes).
+    ``columns`` holds the projected property columns gathered at ``ids``.
+    """
+    table: str
+    ids: np.ndarray
+    dists: Optional[np.ndarray]
+    columns: dict[str, np.ndarray]
+    sigma: float                   # selectivity |S| / |V| of the prefilter
+    timings: StageTimings
+    stats: Optional[object] = None          # SearchStats (kNN plans only)
+    mask: Optional[np.ndarray] = None       # the Q_S semimask (host bool[n])
+
+    def __len__(self) -> int:
+        return int(self.ids.shape[0])
+
+    def rows(self) -> Iterator[dict]:
+        """Iterate result rows as dicts (single-query plans only)."""
+        if self.ids.ndim != 1:
+            raise ValueError("rows() is for single-query results; "
+                             "index batch results directly")
+        for j, i in enumerate(self.ids):
+            if i < 0:
+                continue
+            row = {"id": int(i)}
+            if self.dists is not None:
+                row["dist"] = float(self.dists[j])
+            for c, v in self.columns.items():
+                row[c] = v[j]
+            yield row
+
+
+@dataclasses.dataclass
+class IndexEntry:
+    """One catalog entry: a named HNSW index over (table, vector column)."""
+    name: str
+    table: str
+    column: str
+    index: NavixIndex
+
+
+class NavixDB:
+    """GraphStore + index catalog + query execution, behind one handle."""
+
+    def __init__(self, store: Optional[GraphStore] = None):
+        self.store = store if store is not None else GraphStore()
+        self.catalog: dict[str, IndexEntry] = {}
+        self.programs = ProgramCache()
+
+    # -- catalog (CREATE_HNSW_INDEX) ---------------------------------------
+    def create_index(self, name: str, table: str, column: str = "embedding",
+                     vectors: Optional[np.ndarray] = None,
+                     config: NavixConfig = NavixConfig()
+                     ) -> tuple[NavixIndex, BuildStats]:
+        """Build + register an HNSW index over ``table.column``.
+
+        ``vectors`` (f32[n, d]) may be passed to materialize the column
+        first (creating the node table if absent) -- the common path when
+        embeddings come from a model rather than the store.
+        """
+        if name in self.catalog:
+            raise ValueError(f"index {name!r} already exists")
+        if vectors is not None:
+            vectors = np.asarray(vectors, dtype=np.float32)
+            if table not in self.store.nodes:
+                self.store.add_node_table(table, vectors.shape[0])
+            self.store.add_vector_column(table, column, vectors)
+        payload = self.store.node(table).column(column)
+        index, stats = NavixIndex.create(payload, config)
+        self._register(IndexEntry(name, table, column, index))
+        return index, stats
+
+    def register_index(self, name: str, index: NavixIndex,
+                       table: Optional[str] = None,
+                       column: str = "embedding") -> IndexEntry:
+        """Adopt an already-built index (checkpoint restore, bench cache).
+
+        When ``table`` is omitted, the catalog binds to the unique node
+        table with a matching row count, creating a bare one if needed.
+        """
+        if name in self.catalog:
+            raise ValueError(f"index {name!r} already exists")
+        n = index.graph.n
+        if table is None:
+            matches = [t for t, nt in self.store.nodes.items() if nt.n == n]
+            if len(matches) > 1:
+                raise ValueError(f"ambiguous table for index {name!r}: "
+                                 f"{matches}; pass table= explicitly")
+            table = matches[0] if matches else name
+        if table not in self.store.nodes:
+            self.store.add_node_table(table, n)
+        entry = IndexEntry(name, table, column, index)
+        self._register(entry)
+        return entry
+
+    def _register(self, entry: IndexEntry) -> None:
+        entry.index.program_cache = self.programs
+        self.catalog[entry.name] = entry
+
+    def index(self, name: str) -> NavixIndex:
+        return self.catalog[name].index
+
+    def _resolve(self, knn: KnnSearch, table: str) -> IndexEntry:
+        if knn.index is not None:
+            return self.catalog[knn.index]
+        matches = [e for e in self.catalog.values() if e.table == table]
+        if not matches:
+            raise ValueError(f"no index on table {table!r}; create one with "
+                             f"db.create_index(...)")
+        if len(matches) > 1:
+            raise ValueError(f"multiple indexes on table {table!r}: "
+                             f"{[e.name for e in matches]}; name one in "
+                             f"KnnSearch(index=...)")
+        return matches[0]
+
+    # -- execution ----------------------------------------------------------
+    def prefilter(self, plan: Plan) -> QueryResult:
+        """Run a selection subquery alone (mask + wall time)."""
+        return evaluate(plan, self.store)
+
+    def execute(self, plan, query: Optional[np.ndarray] = None,
+                max_batch: int = 0) -> ResultSet:
+        """Run a full plan. ``plan`` is a Plan tree or a ``Q`` builder.
+
+        ``query`` binds the vector(s) for the KnnSearch operator: [d] for
+        one query, [b, d] for a batch (overrides a vector bound on the
+        builder). ``max_batch`` chunks device execution of large batches;
+        the prefilter still runs exactly once.
+        """
+        # builders carry their own bound query vector
+        bound = getattr(plan, "bound_query", None)
+        as_plan = getattr(plan, "plan", None)
+        if callable(as_plan):
+            plan = as_plan()
+        if query is None:
+            query = bound
+        parts = split_pipeline(plan)
+        table = output_table(plan, self.store)
+
+        # stage 1: prefilter (Q_S on the host)
+        timings = StageTimings()
+        mask = None
+        sigma = 1.0
+        if parts.selection is not None:
+            qres = evaluate(parts.selection, self.store)
+            mask, sigma = qres.mask, qres.selectivity
+            timings.prefilter_ms = qres.seconds * 1e3
+
+        if parts.knn is None:
+            return self._finish_selection(parts, table, mask, sigma, timings)
+        if query is None:
+            raise ValueError("plan has a KnnSearch but no query vector was "
+                             "bound; pass execute(plan, query=...)")
+        return self._execute_knn(parts, table, np.asarray(query), mask,
+                                 sigma, timings, max_batch)
+
+    def _execute_knn(self, parts, table, query, mask, sigma, timings,
+                     max_batch) -> ResultSet:
+        knn = parts.knn
+        entry = self._resolve(knn, table)
+        idx = entry.index
+        if idx.graph.n != self.store.node(table).n:
+            raise ValueError(f"index {entry.name!r} covers {idx.graph.n} "
+                             f"rows but table {table!r} has "
+                             f"{self.store.node(table).n}")
+
+        # stage 2: semimask packing (the SIP handoff to the device)
+        t0 = time.perf_counter()
+        sel = idx.full_semimask() if mask is None else idx.pack_semimask(mask)
+        sel.block_until_ready()
+        timings.pack_ms = (time.perf_counter() - t0) * 1e3
+
+        # stage 3: the kNN operator through the compiled-program cache
+        k = knn.k
+        params = idx._params(k, knn.efs or 2 * k, knn.heuristic)
+        t0 = time.perf_counter()
+        single = query.ndim == 1
+        if single:
+            res = self.programs.search(idx.graph, idx._prep_query(query),
+                                       sel, params, sigma)
+        else:
+            res = self._run_batch(idx, query, sel, params, sigma, max_batch)
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        timings.search_ms = (time.perf_counter() - t0) * 1e3
+
+        # stage 4: projection + limit
+        t0 = time.perf_counter()
+        if parts.limit is not None:
+            ids = ids[..., :parts.limit]
+            dists = dists[..., :parts.limit]
+        columns = (self.store.node(table).rows(ids, parts.projections)
+                   if parts.projections else {})
+        timings.project_ms = (time.perf_counter() - t0) * 1e3
+        return ResultSet(table=table, ids=ids, dists=dists, columns=columns,
+                         sigma=sigma, timings=timings, stats=res.stats,
+                         mask=mask)
+
+    def _run_batch(self, idx, query, sel, params, sigma, max_batch):
+        import jax
+
+        Q = idx._prep_query(query)
+        if not max_batch or Q.shape[0] <= max_batch:
+            return self.programs.search_batch(idx.graph, Q, sel, params,
+                                              sigma)
+        chunks = [self.programs.search_batch(idx.graph,
+                                             Q[i:i + max_batch], sel,
+                                             params, sigma)
+                  for i in range(0, Q.shape[0], max_batch)]
+        return jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *chunks)
+
+    def _finish_selection(self, parts, table, mask, sigma,
+                          timings) -> ResultSet:
+        """Pure Q_S plan (no kNN): rows are the selected node ids."""
+        ids = (np.flatnonzero(mask) if mask is not None
+               else np.arange(self.store.node(table).n))
+        t0 = time.perf_counter()
+        if parts.limit is not None:
+            ids = ids[:parts.limit]
+        columns = (self.store.node(table).rows(ids, parts.projections)
+                   if parts.projections else {})
+        timings.project_ms = (time.perf_counter() - t0) * 1e3
+        return ResultSet(table=table, ids=ids, dists=None, columns=columns,
+                         sigma=sigma, timings=timings, mask=mask)
+
+    # -- introspection -------------------------------------------------------
+    def explain(self, plan) -> str:
+        """Compact textual plan tree (top-down), Kuzu-EXPLAIN style."""
+        as_plan = getattr(plan, "plan", None)
+        if callable(as_plan):
+            plan = as_plan()
+
+        lines: list[str] = []
+
+        def walk(node, depth):
+            pad = "  " * depth
+            name = type(node).__name__
+            fields = {f.name: getattr(node, f.name)
+                      for f in dataclasses.fields(node)
+                      if f.name not in ("child", "left", "right")}
+            args = ", ".join(f"{k}={v!r}" for k, v in fields.items()
+                             if v is not None and v != ())
+            lines.append(f"{pad}{name}({args})")
+            for attr in ("child", "left", "right"):
+                sub = getattr(node, attr, None)
+                if sub is not None:
+                    walk(sub, depth + 1)
+
+        walk(plan, 0)
+        return "\n".join(lines)

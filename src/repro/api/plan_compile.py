@@ -1,0 +1,137 @@
+"""Compiled-program cache for the kNN plan operator.
+
+``jax.jit`` already memoizes traces, but the seed code paid the full
+retrace cost whenever a new (batch shape, SearchParams) combination first
+arrived -- and gave callers no way to *observe* compilation, so the
+serving engine could not distinguish a warm path from a cold one. This
+layer makes compilation explicit:
+
+* programs are ahead-of-time lowered + compiled (``jit(...).lower(...)
+  .compile()``) and stored under a :class:`ProgramKey` --
+  ``(n, dim, k, efs, heuristic, metric, batch_shape)`` plus the minor
+  search knobs -- so executing a cached program can never retrace;
+* batch shapes are bucketed to the next power of two (queries are padded
+  with their first row and the result sliced back), so a serving engine
+  draining groups of 17, then 19, then 23 requests compiles once, not
+  three times;
+* hits/misses are counted; tests assert that the second execution of a
+  same-shape plan performs zero new compilations.
+
+The cache is owned by :class:`repro.api.db.NavixDB` and shared with every
+index in its catalog (``NavixIndex.program_cache``), so the compatibility
+API ``NavixIndex.search(...)`` benefits too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import HnswGraph
+from repro.core.search import SearchParams, SearchResult
+from repro.core.search import search as _search
+from repro.core.search import search_batch as _search_batch
+
+
+class ProgramKey(NamedTuple):
+    """Identity of one compiled search program (the plan's *shape*)."""
+    n: int
+    dim: int
+    k: int
+    efs: int
+    heuristic: int
+    metric: str
+    batch_shape: Optional[int]     # None = single-query program
+    knobs: tuple = ()              # (ub, lf, two_hop_cap, max_iters,
+                                   #  m_l, n_upper, m_u)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def compiles(self) -> int:
+        return self.misses
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "compiles": self.compiles}
+
+
+def _bucket(b: int) -> int:
+    """Round a batch size up to the next power of two (min 1)."""
+    out = 1
+    while out < b:
+        out <<= 1
+    return out
+
+
+class ProgramCache:
+    """AOT program cache for single-query and batched filtered search."""
+
+    def __init__(self):
+        self._programs: dict[ProgramKey, jax.stages.Compiled] = {}
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def info(self) -> dict:
+        return {**self.stats.as_dict(), "programs": len(self._programs)}
+
+    # -- internals ----------------------------------------------------------
+    def _key(self, graph: HnswGraph, params: SearchParams,
+             batch_shape: Optional[int]) -> ProgramKey:
+        return ProgramKey(
+            n=graph.n, dim=graph.dim, k=params.k, efs=params.efs,
+            heuristic=params.heuristic, metric=params.metric,
+            batch_shape=batch_shape,
+            knobs=(params.ub, params.lf, params.two_hop_cap,
+                   params.max_iters, graph.m_l, graph.n_upper,
+                   graph.m_u))
+
+    def _get(self, key: ProgramKey, fn, graph, q, sel_bits, params, sigma_g):
+        prog = self._programs.get(key)
+        if prog is None:
+            self.stats.misses += 1
+            jitted = jax.jit(fn, static_argnames=("params",))
+            prog = jitted.lower(graph, q, sel_bits, params=params,
+                                sigma_g=sigma_g).compile()
+            self._programs[key] = prog
+        else:
+            self.stats.hits += 1
+        return prog
+
+    # -- execution ----------------------------------------------------------
+    def search(self, graph: HnswGraph, q: jax.Array, sel_bits: jax.Array,
+               params: SearchParams, sigma_g) -> SearchResult:
+        """Single-query filtered search through a cached program."""
+        sigma_g = jnp.asarray(sigma_g, dtype=jnp.float32)
+        key = self._key(graph, params, None)
+        prog = self._get(key, _search, graph, q, sel_bits, params, sigma_g)
+        return prog(graph, q, sel_bits, sigma_g=sigma_g)
+
+    def search_batch(self, graph: HnswGraph, Q: jax.Array,
+                     sel_bits: jax.Array, params: SearchParams,
+                     sigma_g) -> SearchResult:
+        """Batched search; the batch is padded to its power-of-two bucket
+        so nearby batch sizes share one program, and results are sliced
+        back to the true size."""
+        sigma_g = jnp.asarray(sigma_g, dtype=jnp.float32)
+        b = Q.shape[0]
+        bb = _bucket(b)
+        if bb != b:
+            Q = jnp.concatenate(
+                [Q, jnp.broadcast_to(Q[:1], (bb - b,) + Q.shape[1:])])
+        key = self._key(graph, params, bb)
+        prog = self._get(key, _search_batch, graph, Q, sel_bits, params,
+                         sigma_g)
+        res = prog(graph, Q, sel_bits, sigma_g=sigma_g)
+        if bb != b:
+            res = jax.tree_util.tree_map(lambda a: a[:b], res)
+        return res

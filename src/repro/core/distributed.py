@@ -32,6 +32,15 @@ from repro.core.heuristics import Heuristic
 from repro.core.navix import NavixConfig
 from repro.core.search import SearchParams, beam_search_lower, greedy_upper
 
+# jax >= 0.6 exposes top-level jax.shard_map (check_vma=); older releases
+# ship it under jax.experimental.shard_map with the check_rep= spelling
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_REPL_KW = "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_REPL_KW = "check_rep"
+
 
 def _stack_graphs(graphs: list[HnswGraph]) -> HnswGraph:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *graphs)
@@ -129,14 +138,15 @@ class ShardedNavix:
             leaves = jax.tree.leaves(graphs)
             leaf_specs = jax.tree.leaves(graph_specs,
                                          is_leaf=lambda x: isinstance(x, P))
-            d, ids = jax.shard_map(
+            d, ids = _shard_map(
                 functools.partial(local_search),
                 mesh=mesh,
                 in_specs=(tuple(leaf_specs), P(data_axis, None),
                           P(model_axis, None), P()),
                 out_specs=(P(model_axis, data_axis, None),
                            P(model_axis, data_axis, None)),
-                check_vma=False,   # while-loop beam search inside
+                # while-loop beam search inside
+                **{_CHECK_REPL_KW: False},
             )(tuple(leaves), Q, sel_bits, alive)
             # merge: [S, B, k] -> global top-k per query
             s, b, _ = d.shape

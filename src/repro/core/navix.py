@@ -1,15 +1,19 @@
-"""NavixIndex -- the public facade of the paper's contribution.
+"""NavixIndex -- the single-index handle (compatibility layer).
 
-Usage (mirrors the paper's CREATE_HNSW_INDEX / QUERY_HNSW_INDEX calls):
+The primary public API is ``repro.api.NavixDB``: a facade owning the graph
+store, an index catalog, and declarative plan execution (the paper's
+CREATE_HNSW_INDEX / QUERY_HNSW_INDEX as plan operators). ``NavixIndex``
+remains the thin per-index layer underneath it:
 
     idx, build_stats = NavixIndex.create(vectors, NavixConfig(metric="cos"))
-    mask = graph_store.select(...)              # selection subquery -> S
     res = idx.search(q, k=100, semimask=mask)   # adaptive-local by default
 
 Search defaults to the paper's final design (adaptive-local); every
 heuristic from Table 1 is selectable. Per-query latency benchmarking uses
 ``search`` (exclusive lax.switch branches); ``search_many`` is the batch
-path used by the serving engine.
+path used by the serving engine. Indexes registered in a ``NavixDB``
+catalog share its compiled-program cache (``program_cache``), so repeated
+plan shapes never retrace even through this compatibility API.
 """
 
 from __future__ import annotations
@@ -50,6 +54,9 @@ class NavixIndex:
     graph: HnswGraph
     config: NavixConfig
     quantized: Optional[QuantizedStore] = None
+    # set when the index is registered in a NavixDB catalog; routes search
+    # through the shared AOT compiled-program cache (repro.api.plan_compile)
+    program_cache: Optional[object] = None
 
     # -- creation ---------------------------------------------------------
     @classmethod
@@ -97,8 +104,13 @@ class NavixIndex:
                else self.pack_semimask(semimask))
         if sigma_g is None:
             sigma_g = self.sigma(sel)
-        return search(self.graph, self._prep_query(q), sel,
-                      self._params(k, efs, heuristic), sigma_g=sigma_g)
+        params = self._params(k, efs, heuristic)
+        if self.program_cache is not None:
+            return self.program_cache.search(self.graph,
+                                             self._prep_query(q), sel,
+                                             params, sigma_g)
+        return search(self.graph, self._prep_query(q), sel, params,
+                      sigma_g=sigma_g)
 
     def search_many(self, Q, k: int = 100, efs: int = 0, semimask=None,
                     heuristic="adaptive_local") -> SearchResult:
@@ -107,8 +119,13 @@ class NavixIndex:
         sel = (self.full_semimask() if semimask is None
                else self.pack_semimask(semimask))
         sigma_g = self.sigma(sel)
-        return search_batch(self.graph, self._prep_query(Q), sel,
-                            self._params(k, efs, heuristic), sigma_g=sigma_g)
+        params = self._params(k, efs, heuristic)
+        if self.program_cache is not None:
+            return self.program_cache.search_batch(self.graph,
+                                                   self._prep_query(Q), sel,
+                                                   params, sigma_g)
+        return search_batch(self.graph, self._prep_query(Q), sel, params,
+                            sigma_g=sigma_g)
 
     def search_quantized(self, q, k: int = 100, efs: int = 0, semimask=None,
                          heuristic="adaptive_local"):

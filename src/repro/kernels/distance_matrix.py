@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# older jax releases (< 0.5) name the struct TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(q_ref, x_ref, out_ref, acc_ref, *, metric: str, n_d: int):
     k = pl.program_id(2)
@@ -72,7 +76,7 @@ def distance_matrix_pallas(Q: jax.Array, X: jax.Array, metric: str = "l2",
         out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(Q, X)

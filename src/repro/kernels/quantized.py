@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# older jax releases (< 0.5) name the struct TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(q_ref, c_ref, s_ref, out_ref, dot_acc, cc_acc, qq_acc,
             *, metric: str, n_d: int):
@@ -78,7 +82,7 @@ def quantized_distance_pallas(Q: jax.Array, codes: jax.Array,
         scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32),
                         pltpu.VMEM((bn, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(Q, codes, scale[None, :])

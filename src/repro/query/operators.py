@@ -1,18 +1,30 @@
-"""Selection-subquery operators -> node semimasks.
+"""Query-plan operators: selection subqueries + first-class kNN rows.
 
 The paper evaluates predicate-agnostic queries by running an arbitrary
 selection subquery Q_S first (filters, joins) and passing the resulting
 selected set S to the kNN operator as a node semimask via sideways
-information passing. This module is the Q_S evaluator: a small typed
-operator tree over the columnar GraphStore producing a boolean mask over
-one node table.
+information passing. This module holds the whole plan algebra: the Q_S
+evaluator (a small typed operator tree over the columnar GraphStore
+producing a boolean mask over one node table) plus the row-producing
+operators the unified NavixDB pipeline executes on top of it.
 
-Operators mirror the paper's workloads:
+Selection (mask) operators mirror the paper's workloads:
   NodeScan          MATCH (c:Chunk)                    -> all true
   Filter            WHERE c.cid < X / range / eq / isin
   HopJoin           MATCH (p)-[:R]->(c) WHERE mask(p)  -> semi-join (1 hop)
   (chain HopJoin twice for the 2-hop graph-RAG workload of Section 5.7.1)
   And / Or / Not    boolean combinators
+
+Row operators (executed by ``repro.api.db.NavixDB``, not by ``evaluate``):
+  KnnSearch         QUERY_HNSW_INDEX: child = Q_S, produces scored rows
+  Project           keep named property columns of the result rows
+  Limit             truncate to the first n rows
+
+All nodes are frozen dataclasses: plans are hashable values, which is what
+lets the serving engine group requests by plan and the compile layer key
+cached programs by plan shape. The query *vector* is deliberately not part
+of ``KnnSearch`` -- it is bound at execution time, so one plan shape serves
+any number of queries (and batches) through one compiled program.
 
 ``evaluate`` runs on the host (numpy) -- this is the prefiltering phase
 whose cost Table 7 accounts separately -- and the resulting mask is packed
@@ -29,7 +41,8 @@ import numpy as np
 
 from repro.storage.columnar import GraphStore
 
-Plan = Union["NodeScan", "Filter", "HopJoin", "And", "Or", "Not"]
+SelectionPlan = Union["NodeScan", "Filter", "HopJoin", "And", "Or", "Not"]
+Plan = Union[SelectionPlan, "KnnSearch", "Project", "Limit"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +86,74 @@ class Not:
     child: Plan
 
 
+@dataclasses.dataclass(frozen=True)
+class KnnSearch:
+    """The paper's QUERY_HNSW_INDEX as a plan operator.
+
+    ``child`` is the selection subquery Q_S (None = unfiltered search);
+    ``index`` names a catalog entry (None = resolve by the child's output
+    table); ``table`` is only needed when ``child`` is None. The query
+    vector is bound at execution time (see module docstring).
+    """
+    child: Optional[Plan] = None
+    k: int = 10
+    index: Optional[str] = None
+    table: Optional[str] = None
+    efs: int = 0                   # 0 -> 2*k at execution
+    heuristic: str = "adaptive_local"
+
+
+@dataclasses.dataclass(frozen=True)
+class Project:
+    child: Plan
+    columns: tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit:
+    child: Plan
+    n: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineParts:
+    """A root plan split into its three execution stages (top-down)."""
+    selection: Optional[Plan]      # Q_S subtree (mask-producing), or None
+    knn: Optional[KnnSearch]       # the kNN operator, or None (pure Q_S)
+    projections: tuple[str, ...]   # union of Project columns above the knn
+    limit: Optional[int]           # smallest Limit above the knn, or None
+
+
+def split_pipeline(plan: Plan) -> PipelineParts:
+    """Walk Project/Limit wrappers down to the KnnSearch (if any) and its
+    selection subtree. Row operators below a KnnSearch are rejected."""
+    projections: tuple[str, ...] = ()
+    limit: Optional[int] = None
+    node = plan
+    while isinstance(node, (Project, Limit)):
+        if isinstance(node, Project):
+            projections = tuple(c for c in node.columns
+                                if c not in projections) + projections
+        else:
+            limit = node.n if limit is None else min(limit, node.n)
+        node = node.child
+    if isinstance(node, KnnSearch):
+        sel = node.child
+        if sel is not None and not is_selection(sel):
+            raise TypeError(f"KnnSearch child must be a selection subquery, "
+                            f"got {type(sel).__name__}")
+        return PipelineParts(selection=sel, knn=node,
+                             projections=projections, limit=limit)
+    if not is_selection(node):
+        raise TypeError(f"unsupported plan node {type(node).__name__}")
+    return PipelineParts(selection=node, knn=None,
+                         projections=projections, limit=limit)
+
+
+def is_selection(plan: Plan) -> bool:
+    return isinstance(plan, (NodeScan, Filter, HopJoin, And, Or, Not))
+
+
 @dataclasses.dataclass
 class QueryResult:
     table: str
@@ -99,6 +180,14 @@ def output_table(plan: Plan, store: GraphStore) -> str:
             raise ValueError(f"boolean combinator over different tables: {lt} vs {rt}")
         return lt
     if isinstance(plan, Not):
+        return output_table(plan.child, store)
+    if isinstance(plan, KnnSearch):
+        if plan.child is not None:
+            return output_table(plan.child, store)
+        if plan.table is None:
+            raise ValueError("unfiltered KnnSearch needs an explicit table")
+        return plan.table
+    if isinstance(plan, (Project, Limit)):
         return output_table(plan.child, store)
     raise TypeError(plan)
 
@@ -160,6 +249,10 @@ def _ranges(lengths: np.ndarray) -> np.ndarray:
 
 def evaluate(plan: Plan, store: GraphStore) -> QueryResult:
     """Run Q_S; returns the node semimask + prefiltering wall time."""
+    if not is_selection(plan):
+        raise TypeError(
+            f"evaluate() runs selection subqueries only; execute "
+            f"{type(plan).__name__} plans through repro.api.NavixDB")
     t0 = time.perf_counter()
     table = output_table(plan, store)
     mask = _eval(plan, store)

@@ -1,12 +1,19 @@
 """Batched request serving for the vector index (+ LM generation helper).
 
-The search engine mirrors a production vector-serving tier:
-  * requests (query vector + selection subquery + k) accumulate in a queue;
-  * a scheduler drains up to ``max_batch`` compatible requests (same
-    semimask => same compiled program) into one batched search;
-  * per-request latency is recorded (queue + execution) and summarized as
-    p50/p95/p99 -- the paper's latency protocol (warm-up + repeats) is
-    implemented in the benchmark harness on top of this engine.
+The search engine mirrors a production vector-serving tier, rebased on the
+unified :class:`repro.api.NavixDB` pipeline:
+  * requests (query vector + declarative plan + k) accumulate in a queue;
+    plans may be full ``KnnSearch`` trees (built with ``repro.api.Q``) or
+    bare selection subqueries (legacy form, wrapped automatically);
+  * a scheduler drains requests grouped by plan (same plan => same
+    prefilter AND same compiled program) into batched ``NavixDB.execute``
+    calls; the shared AOT program cache means repeated plan shapes never
+    retrace, and the group's prefilter runs exactly once, its cost
+    amortized across the group's requests;
+  * per-request latency is recorded (queue + execution + amortized
+    prefilter share) and summarized as p50/p95/p99 -- the paper's latency
+    protocol (warm-up + repeats) is implemented in the benchmark harness
+    on top of this engine.
 
 Straggler-robust distributed mode: when constructed over a ShardedNavix,
 the engine searches with a shard-liveness mask and a quorum (DESIGN.md
@@ -22,8 +29,9 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.api.db import NavixDB
 from repro.core.navix import NavixIndex
-from repro.query.operators import Plan, evaluate
+from repro.query.operators import KnnSearch, Plan, is_selection
 from repro.storage.columnar import GraphStore
 
 
@@ -31,7 +39,7 @@ from repro.storage.columnar import GraphStore
 class Request:
     rid: int
     query: np.ndarray
-    plan: Optional[Plan]          # selection subquery (None = unfiltered)
+    plan: Optional[Plan]          # KnnSearch tree or bare Q_S (None = unfiltered)
     k: int = 10
     t_enqueue: float = 0.0
 
@@ -43,29 +51,53 @@ class Response:
     dists: np.ndarray
     queue_ms: float
     exec_ms: float
-    prefilter_ms: float
+    prefilter_ms: float           # this request's amortized share of the
+                                  # group's (shared) prefilter wall time
     sigma: float
 
 
 @dataclasses.dataclass
 class SearchEngine:
-    index: NavixIndex
+    """Serving tier over a :class:`NavixDB`.
+
+    Construct either from a ``db`` (preferred; serves declarative plans
+    against its catalog) or from a bare ``index`` (+ optional ``store``),
+    which is wrapped into a single-index NavixDB automatically.
+    """
+    index: Optional[NavixIndex] = None
     store: Optional[GraphStore] = None
     heuristic: str = "adaptive_local"
     efs: int = 0
     max_batch: int = 32
+    db: Optional[NavixDB] = None
+    default_index: Optional[str] = None    # catalog name for unfiltered kNN
 
     def __post_init__(self):
+        if self.db is None:
+            if self.index is None:
+                raise ValueError("SearchEngine needs a db= or an index=")
+            self.db = NavixDB(self.store)
+            self.db.register_index("default", self.index)
+            self.default_index = "default"
+        else:
+            if self.default_index is None:
+                self.default_index = next(iter(self.db.catalog), None)
+            if self.index is None and self.default_index is not None:
+                self.index = self.db.index(self.default_index)
+        self.store = self.db.store
         self._queue: deque[Request] = deque()
         self._next_rid = 0
         self.latencies_ms: list[float] = []
 
     # -- client API ---------------------------------------------------------
     def submit(self, query, plan: Optional[Plan] = None, k: int = 10) -> int:
+        """Enqueue one request. ``plan`` may be a full declarative plan
+        (``Q...knn(...)`` tree, in which case its own k/efs/heuristic
+        apply), a bare selection subquery, or None (unfiltered)."""
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(rid=rid, query=np.asarray(query),
-                                   plan=plan, k=k,
+                                   plan=self._canonical(plan, k), k=k,
                                    t_enqueue=time.perf_counter()))
         return rid
 
@@ -74,42 +106,53 @@ class SearchEngine:
         groups: dict[Any, list[Request]] = defaultdict(list)
         while self._queue:
             r = self._queue.popleft()
-            groups[(r.plan, r.k)].append(r)
+            groups[r.plan].append(r)
         out: list[Response] = []
-        for (plan, k), reqs in groups.items():
-            out.extend(self._serve_group(plan, k, reqs))
+        for plan, reqs in groups.items():
+            out.extend(self._serve_group(plan, reqs))
         return out
 
     # -- internals ------------------------------------------------------------
-    def _serve_group(self, plan, k, reqs: list[Request]) -> list[Response]:
-        t0 = time.perf_counter()
-        if plan is not None:
-            if self.store is None:
-                raise ValueError("filtered request but engine has no store")
-            qres = evaluate(plan, self.store)
-            mask, pf_ms = qres.mask, qres.seconds * 1e3
-            sigma = qres.selectivity
-        else:
-            mask, pf_ms, sigma = None, 0.0, 1.0
+    def _canonical(self, plan: Optional[Plan], k: int) -> Plan:
+        """Normalize every submit to a hashable KnnSearch-rooted plan --
+        the group key: same plan => one prefilter + one compiled program."""
+        builder_plan = getattr(plan, "plan", None)
+        if callable(builder_plan):
+            plan = builder_plan()
+        if plan is None:
+            # resolve lazily: the catalog may be populated after __init__
+            name = self.default_index or next(iter(self.db.catalog), None)
+            if name is None or name not in self.db.catalog:
+                raise ValueError("unfiltered request but the NavixDB "
+                                 "catalog has no index; create one with "
+                                 "db.create_index(...)")
+            entry = self.db.catalog[name]
+            return KnnSearch(child=None, table=entry.table, k=k,
+                             index=name, efs=self.efs,
+                             heuristic=self.heuristic)
+        if is_selection(plan):
+            return KnnSearch(child=plan, k=k, efs=self.efs,
+                             heuristic=self.heuristic)
+        return plan                # already declarative
 
+    def _serve_group(self, plan: Plan, reqs: list[Request]) -> list[Response]:
+        Q = np.stack([r.query for r in reqs])
+        t1 = time.perf_counter()
+        rs = self.db.execute(plan, query=Q, max_batch=self.max_batch)
+        # the prefilter ran once for the whole group: amortize its cost
+        # (and the semimask pack) across the group's requests so the
+        # latency summary reflects what each request actually paid
+        pf_share = rs.timings.prefilter_ms / len(reqs)
+        exec_ms = (rs.timings.pack_ms + rs.timings.search_ms
+                   + rs.timings.project_ms) / len(reqs)
         responses = []
-        for i in range(0, len(reqs), self.max_batch):
-            chunk = reqs[i:i + self.max_batch]
-            Q = np.stack([r.query for r in chunk])
-            t1 = time.perf_counter()
-            res = self.index.search_many(Q, k=k, efs=self.efs or 2 * k,
-                                         semimask=mask,
-                                         heuristic=self.heuristic)
-            ids = np.asarray(res.ids)
-            dists = np.asarray(res.dists)
-            exec_ms = (time.perf_counter() - t1) * 1e3 / len(chunk)
-            for j, r in enumerate(chunk):
-                queue_ms = (t1 - r.t_enqueue) * 1e3
-                self.latencies_ms.append(queue_ms + exec_ms + pf_ms)
-                responses.append(Response(
-                    rid=r.rid, ids=ids[j], dists=dists[j],
-                    queue_ms=queue_ms, exec_ms=exec_ms,
-                    prefilter_ms=pf_ms, sigma=sigma))
+        for j, r in enumerate(reqs):
+            queue_ms = (t1 - r.t_enqueue) * 1e3
+            self.latencies_ms.append(queue_ms + exec_ms + pf_share)
+            responses.append(Response(
+                rid=r.rid, ids=rs.ids[j], dists=rs.dists[j],
+                queue_ms=queue_ms, exec_ms=exec_ms,
+                prefilter_ms=pf_share, sigma=rs.sigma))
         return responses
 
     def latency_summary(self) -> dict:

@@ -14,7 +14,7 @@ Host-side state is numpy (this is the "disk" side); device payloads
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -33,6 +33,18 @@ class NodeTable:
 
     def column(self, name: str) -> np.ndarray:
         return self.columns[name]
+
+    def rows(self, ids: np.ndarray,
+             columns: Sequence[str] | None = None) -> dict[str, np.ndarray]:
+        """Gather property values at ``ids`` (projection after a kNN).
+
+        ``ids`` may carry -1 padding (unreachable result slots); padded
+        positions return the row-0 value -- callers mask on ``ids >= 0``.
+        """
+        ids = np.asarray(ids)
+        take = np.maximum(ids, 0)
+        names = list(columns) if columns is not None else list(self.columns)
+        return {c: self.columns[c][take] for c in names}
 
 
 @dataclasses.dataclass
@@ -103,6 +115,17 @@ class GraphStore:
                        bwd=csr_from_edges(dst, src, n_dst))
         self.rels[name] = rel
         return rel
+
+    def add_vector_column(self, table: str, name: str,
+                          vectors: np.ndarray) -> None:
+        """Register an embedding column (f32[n, d]) on a node table; the
+        index catalog builds HNSW indexes over these (CREATE_HNSW_INDEX's
+        first argument pair)."""
+        vectors = np.asarray(vectors, dtype=np.float32)
+        if vectors.ndim != 2:
+            raise ValueError(f"vector column {name}: expected [n, d], "
+                             f"got shape {vectors.shape}")
+        self.nodes[table].add_column(name, vectors)
 
     def node(self, name: str) -> NodeTable:
         return self.nodes[name]

@@ -1,0 +1,206 @@
+"""Tests for the unified NavixDB API: plan algebra, builder, program
+cache, projection, and the declarative serving path."""
+
+import numpy as np
+import pytest
+
+from repro.api import NavixDB, Q
+from repro.core.navix import NavixConfig
+from repro.data.synthetic import make_queries, make_wiki_like
+from repro.query.operators import (Filter, HopJoin, KnnSearch, Limit,
+                                   NodeScan, Project, evaluate,
+                                   split_pipeline)
+from repro.serving.engine import SearchEngine
+
+
+@pytest.fixture(scope="module")
+def wikidb():
+    data = make_wiki_like(n_person=100, n_resource=260, d=24, seed=2)
+    db = NavixDB(data.store)
+    idx, stats = db.create_index(
+        "chunk_emb", "Chunk", column="embedding", vectors=data.embeddings,
+        config=NavixConfig(m_u=8, ef_construction=48, metric="cos"))
+    assert stats.n == data.n_chunks
+    return db, idx, data
+
+
+# -- plan algebra ----------------------------------------------------------
+
+
+def test_builder_equals_hand_built_plan():
+    built = (Q.match("Person")
+              .where("birth_date", "range", lo=0, hi=100)
+              .hop("PersonChunk", "fwd")
+              .knn(k=7, efs=30)
+              .project("cID")
+              .limit(5)
+              .plan())
+    hand = Limit(
+        Project(
+            KnnSearch(
+                child=HopJoin(
+                    Filter(NodeScan("Person"), "birth_date", "range",
+                           lo=0, hi=100),
+                    "PersonChunk", "fwd"),
+                k=7, efs=30, heuristic="adaptive_local"),
+            ("cID",)),
+        5)
+    assert built == hand
+    assert hash(built) == hash(hand)      # plans are group/cache keys
+
+
+def test_split_pipeline():
+    sel = Filter(NodeScan("Chunk"), "cID", "<", value=10)
+    plan = Limit(Project(KnnSearch(child=sel, k=5), ("cID", "year")), 3)
+    parts = split_pipeline(plan)
+    assert parts.selection == sel
+    assert parts.knn.k == 5
+    assert parts.projections == ("cID", "year")
+    assert parts.limit == 3
+    # selection-only plans split too
+    parts2 = split_pipeline(Project(sel, ("cID",)))
+    assert parts2.knn is None and parts2.selection == sel
+
+
+def test_evaluate_rejects_row_plans():
+    with pytest.raises(TypeError, match="NavixDB"):
+        evaluate(KnnSearch(child=NodeScan("Chunk")), None)
+
+
+# -- end-to-end execution ---------------------------------------------------
+
+
+def test_knn_plan_recall_vs_oracle(wikidb):
+    db, idx, data = wikidb
+    queries = make_queries(data, 8, "uncorrelated", seed=9)
+    sel = Filter(NodeScan("Chunk"), "cID", "<", value=data.n_chunks // 2)
+    rs = db.execute(KnnSearch(child=sel, k=10, efs=80), query=queries)
+    assert rs.ids.shape == (8, 10)
+    mask = db.prefilter(sel).mask
+    # no leakage outside S
+    assert mask[rs.ids[rs.ids >= 0]].all()
+    _, true_ids = idx.brute_force(queries, k=10, semimask=mask)
+    assert idx.recall(rs.ids, np.asarray(true_ids)) >= 0.9
+    assert rs.sigma == pytest.approx(0.5, abs=0.01)
+    assert rs.timings.search_ms > 0.0
+
+
+def test_project_and_limit(wikidb):
+    db, idx, data = wikidb
+    plan = (Q.match("Chunk")
+             .knn(data.embeddings[0], k=8, efs=40, heuristic="onehop_a")
+             .project("cID", "is_person")
+             .limit(3))
+    rs = db.execute(plan)
+    assert rs.ids.shape == (3,)
+    valid = rs.ids >= 0
+    np.testing.assert_array_equal(rs.columns["cID"][valid], rs.ids[valid])
+    assert rs.ids[0] == 0          # nearest neighbor of chunk 0 is itself
+
+
+def test_pure_selection_plan(wikidb):
+    db, _, data = wikidb
+    rs = db.execute(Q.match("Chunk").where("is_person", "==", True)
+                     .project("cID").limit(10))
+    assert len(rs) == 10
+    assert rs.dists is None
+    assert data.chunk_is_person[rs.ids].all()
+    np.testing.assert_array_equal(rs.columns["cID"], rs.ids)
+
+
+def test_unbound_template_needs_query(wikidb):
+    db, _, _ = wikidb
+    with pytest.raises(ValueError, match="query vector"):
+        db.execute(Q.match("Chunk").knn(k=5))
+
+
+def test_explain(wikidb):
+    db, _, _ = wikidb
+    text = db.explain(Q.match("Chunk").where("cID", "<", 9).knn(k=3))
+    assert "KnnSearch" in text and "NodeScan" in text
+
+
+# -- compiled-program cache -------------------------------------------------
+
+
+def test_program_cache_zero_recompiles_on_same_shape(wikidb):
+    db, idx, data = wikidb
+    plan = (Q.match("Chunk").where("cID", "<", 400)
+             .knn(data.embeddings[0], k=5, efs=40))
+    db.execute(plan)                       # may compile (cold shape)
+    before = db.programs.stats.misses
+    hits0 = db.programs.stats.hits
+    db.execute(plan, query=data.embeddings[123])
+    db.execute(plan, query=data.embeddings[77])
+    assert db.programs.stats.misses == before, \
+        "same-shape plan re-execution must not compile"
+    assert db.programs.stats.hits == hits0 + 2
+
+
+def test_program_cache_batch_bucketing(wikidb):
+    db, idx, data = wikidb
+    plan = (Q.match("Chunk").where("cID", "<", 400).knn(k=5, efs=40))
+    rs7 = db.execute(plan, query=data.embeddings[:7])   # bucket 8
+    misses = db.programs.stats.misses
+    rs5 = db.execute(plan, query=data.embeddings[:5])   # same bucket
+    assert db.programs.stats.misses == misses
+    assert rs7.ids.shape == (7, 5) and rs5.ids.shape == (5, 5)
+    # padded rows must not leak into results
+    np.testing.assert_array_equal(rs7.ids[:5], rs5.ids)
+
+
+def test_compat_layer_shares_cache(wikidb):
+    db, idx, data = wikidb
+    mask = np.zeros(data.n_chunks, bool)
+    mask[:500] = True
+    idx.search(data.embeddings[3], k=5, efs=40, semimask=mask)
+    hits0 = db.programs.stats.hits
+    misses0 = db.programs.stats.misses
+    r = idx.search(data.embeddings[9], k=5, efs=40, semimask=mask)
+    assert db.programs.stats.hits == hits0 + 1
+    assert db.programs.stats.misses == misses0
+    assert mask[np.asarray(r.ids)[np.asarray(r.ids) >= 0]].all()
+
+
+# -- serving on the declarative path ---------------------------------------
+
+
+def test_engine_serves_declarative_plans(wikidb):
+    db, idx, data = wikidb
+    eng = SearchEngine(db=db, efs=40)
+    tmpl = (Q.match("Chunk").where("cID", "<", data.n_chunks // 3)
+             .knn(k=6, efs=40))
+    qs = make_queries(data, 5, "uncorrelated", seed=11)
+    rids = [eng.submit(q, plan=tmpl) for q in qs]
+    rids.append(eng.submit(qs[0], plan=None, k=6))
+    resp = eng.drain()
+    assert len(resp) == len(rids)
+    by = {r.rid: r for r in resp}
+    for rid in rids[:-1]:
+        ids = by[rid].ids
+        assert (ids[ids >= 0] < data.n_chunks // 3).all()
+    assert by[rids[-1]].sigma == 1.0
+    assert eng.latency_summary()["n"] == len(rids)
+
+
+def test_group_prefilter_amortized(wikidb, monkeypatch):
+    """The group's shared prefilter cost is split across its requests
+    (one Q_S evaluation, not one per request)."""
+    import repro.api.db as dbmod
+    db, idx, data = wikidb
+    real_eval = dbmod.evaluate
+
+    def fixed_time_eval(plan, store):
+        q = real_eval(plan, store)
+        return dbmod.QueryResult(table=q.table, mask=q.mask, seconds=0.048)
+
+    monkeypatch.setattr(dbmod, "evaluate", fixed_time_eval)
+    eng = SearchEngine(db=db, efs=40)
+    tmpl = Q.match("Chunk").where("cID", "<", 500).knn(k=4, efs=40)
+    qs = make_queries(data, 4, "uncorrelated", seed=13)
+    for q in qs:
+        eng.submit(q, plan=tmpl)
+    resp = eng.drain()
+    assert len(resp) == 4
+    for r in resp:
+        assert r.prefilter_ms == pytest.approx(48.0 / 4)
