@@ -1,0 +1,118 @@
+"""Search-engine throughput: vmap oracle vs the batched-frontier engine.
+
+Tracks the serving story per PR: for each batch size B in {1, 8, 32, 128}
+both batch engines run the same filtered workload and report QPS, batch
+latency percentiles, and recall@k against the brute-force oracle. Results
+go to ``experiments/bench/BENCH_search.json`` (plus the usual CSV sink)
+so the perf trajectory is diffable across PRs.
+
+Claim gated by validate(): the batched engine's QPS at B=32 is >= 1.5x
+the vmap path (>= 1.0x sanity floor in REPRO_BENCH_QUICK mode, where the
+problem is too small for the margin to be stable), and -- since the
+engines are lane-for-lane equivalent -- identical recall.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import bitset
+from repro.core.navix import NavixConfig, NavixIndex
+from repro.core.search import SearchParams, search_batch
+from repro.core.search_batch import search_many
+from repro.data.synthetic import gaussian_mixture
+
+# quick (smoke) runs write a separate file so they never clobber the
+# committed full-mode result
+JSON_OUT = pathlib.Path("experiments") / "bench" / (
+    "BENCH_search.quick.json" if common.QUICK else "BENCH_search.json")
+
+BATCHES = (1, 8, 32, 128)
+K = 10
+EFS = 60
+SIGMA = 0.3
+SPEEDUP_AT_B = 32
+SPEEDUP_FLOOR = 1.0 if common.QUICK else 1.5
+
+_ENGINES = {"vmap": search_batch, "batched": search_many}
+
+
+def run() -> list[dict]:
+    n, d = (1500, 16) if common.QUICK else (4000, 32)
+    reps = 3 if common.QUICK else 8
+    X, _, centers = gaussian_mixture(n, d, 10, seed=0)
+    index = common.cached_index(f"bench_search_{n}",
+                                X, NavixConfig(m_u=8, ef_construction=64,
+                                               metric="l2", seed=0))
+    rng = np.random.default_rng(7)
+    mask = rng.random(n) < SIGMA
+    sel = bitset.pack(jnp.asarray(mask))
+    sigma_g = float(bitset.count(sel)) / n
+    params = SearchParams(k=K, efs=EFS, heuristic=4, metric="l2")
+
+    rows: list[dict] = []
+    for b in BATCHES:
+        Q = (centers[rng.integers(0, len(centers), size=b)]
+             + 0.3 * rng.normal(size=(b, d))).astype(np.float32)
+        Qj = jnp.asarray(Q)
+        _, true_ids = index.brute_force(Q, k=K, semimask=mask)
+        for engine, fn in _ENGINES.items():
+            res = fn(index.graph, Qj, sel, params, sigma_g=sigma_g)
+            res.dists.block_until_ready()               # warm-up compile
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                res = fn(index.graph, Qj, sel, params, sigma_g=sigma_g)
+                res.dists.block_until_ready()
+                times.append(time.perf_counter() - t0)
+            times_ms = np.asarray(times) * 1e3
+            rows.append({
+                "engine": engine,
+                "B": b,
+                "qps": round(b / float(np.mean(times)), 2),
+                "p50_ms": round(float(np.percentile(times_ms, 50)), 3),
+                "p95_ms": round(float(np.percentile(times_ms, 95)), 3),
+                "recall": round(index.recall(np.asarray(res.ids),
+                                             np.asarray(true_ids)), 4),
+            })
+    common.emit(rows, "search_engines")
+
+    by = {(r["engine"], r["B"]): r for r in rows}
+    speedups = {str(b): round(by[("batched", b)]["qps"]
+                              / max(by[("vmap", b)]["qps"], 1e-9), 3)
+                for b in BATCHES}
+    JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
+    JSON_OUT.write_text(json.dumps({
+        "workload": {"n": n, "d": d, "k": K, "efs": EFS, "sigma": SIGMA,
+                     "heuristic": "adaptive_local", "reps": reps,
+                     "quick": common.QUICK},
+        "rows": rows,
+        "batched_over_vmap_qps": speedups,
+    }, indent=2) + "\n")
+    return rows
+
+
+def validate(rows: list[dict]) -> list[str]:
+    fails: list[str] = []
+    by = {(r["engine"], r["B"]): r for r in rows}
+    v = by.get(("vmap", SPEEDUP_AT_B))
+    b = by.get(("batched", SPEEDUP_AT_B))
+    if not v or not b:
+        return [f"missing B={SPEEDUP_AT_B} rows"]
+    speedup = b["qps"] / max(v["qps"], 1e-9)
+    if speedup < SPEEDUP_FLOOR:
+        fails.append(f"batched engine QPS at B={SPEEDUP_AT_B} is only "
+                     f"{speedup:.2f}x the vmap path (need >= "
+                     f"{SPEEDUP_FLOOR}x)")
+    for bb in BATCHES:
+        rv, rb = by.get(("vmap", bb)), by.get(("batched", bb))
+        if rv and rb and abs(rv["recall"] - rb["recall"]) > 1e-9:
+            fails.append(f"engines disagree on recall at B={bb}: "
+                         f"vmap={rv['recall']} batched={rb['recall']}")
+    return fails

@@ -12,6 +12,8 @@ paper-claim validation summary. Set REPRO_BENCH_QUICK=1 for a fast pass.
   quantized int8 + re-rank                 (Figure 18 regime)
   kernels   in-BM zero-copy + rooflines    (Section 4.2.1, Appendix A.3)
   distributed shard-and-merge + quorum     (beyond paper)
+  search    vmap vs batched-frontier QPS   (Section 6 serving; emits
+                                            experiments/bench/BENCH_search.json)
 """
 
 from __future__ import annotations
@@ -25,12 +27,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig8,adaptive,postfilter,construction,"
-                         "quantized,kernels,distributed")
+                         "quantized,kernels,distributed,search")
     args = ap.parse_args()
 
     from benchmarks import (bench_adaptive, bench_construction,
                             bench_distributed, bench_heuristics,
-                            bench_kernels, bench_postfilter, bench_quantized)
+                            bench_kernels, bench_postfilter, bench_quantized,
+                            bench_search)
 
     def post_run():                 # two tables (Fig 16 + Table 7)
         rows = bench_postfilter.run()
@@ -45,6 +48,7 @@ def main() -> None:
         "quantized": (bench_quantized.run, bench_quantized.validate),
         "kernels": (bench_kernels.run, bench_kernels.validate),
         "distributed": (bench_distributed.run, bench_distributed.validate),
+        "search": (bench_search.run, bench_search.validate),
     }
 
     wanted = (args.only.split(",") if args.only else list(suites))

@@ -183,13 +183,16 @@ class NavixDB:
         return evaluate(plan, self.store)
 
     def execute(self, plan, query: Optional[np.ndarray] = None,
-                max_batch: int = 0) -> ResultSet:
+                max_batch: int = 0, engine: str = "batched") -> ResultSet:
         """Run a full plan. ``plan`` is a Plan tree or a ``Q`` builder.
 
         ``query`` binds the vector(s) for the KnnSearch operator: [d] for
         one query, [b, d] for a batch (overrides a vector bound on the
         builder). ``max_batch`` chunks device execution of large batches;
-        the prefilter still runs exactly once.
+        the prefilter still runs exactly once. ``engine`` picks the
+        multi-row execution engine: "batched" (default, the
+        batched-frontier engine) or "vmap" (the reference oracle);
+        single-row queries ignore it.
         """
         # builders carry their own bound query vector
         bound = getattr(plan, "bound_query", None)
@@ -216,10 +219,10 @@ class NavixDB:
             raise ValueError("plan has a KnnSearch but no query vector was "
                              "bound; pass execute(plan, query=...)")
         return self._execute_knn(parts, table, np.asarray(query), mask,
-                                 sigma, timings, max_batch)
+                                 sigma, timings, max_batch, engine)
 
     def _execute_knn(self, parts, table, query, mask, sigma, timings,
-                     max_batch) -> ResultSet:
+                     max_batch, engine="batched") -> ResultSet:
         knn = parts.knn
         entry = self._resolve(knn, table)
         idx = entry.index
@@ -243,7 +246,8 @@ class NavixDB:
             res = self.programs.search(idx.graph, idx._prep_query(query),
                                        sel, params, sigma)
         else:
-            res = self._run_batch(idx, query, sel, params, sigma, max_batch)
+            res = self._run_batch(idx, query, sel, params, sigma, max_batch,
+                                  engine)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         timings.search_ms = (time.perf_counter() - t0) * 1e3
@@ -260,16 +264,15 @@ class NavixDB:
                          sigma=sigma, timings=timings, stats=res.stats,
                          mask=mask)
 
-    def _run_batch(self, idx, query, sel, params, sigma, max_batch):
+    def _run_batch(self, idx, query, sel, params, sigma, max_batch,
+                   engine="batched"):
         import jax
 
+        run = self.programs.batch(engine)
         Q = idx._prep_query(query)
         if not max_batch or Q.shape[0] <= max_batch:
-            return self.programs.search_batch(idx.graph, Q, sel, params,
-                                              sigma)
-        chunks = [self.programs.search_batch(idx.graph,
-                                             Q[i:i + max_batch], sel,
-                                             params, sigma)
+            return run(idx.graph, Q, sel, params, sigma)
+        chunks = [run(idx.graph, Q[i:i + max_batch], sel, params, sigma)
                   for i in range(0, Q.shape[0], max_batch)]
         return jax.tree_util.tree_map(
             lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *chunks)

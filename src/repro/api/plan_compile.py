@@ -8,8 +8,10 @@ layer makes compilation explicit:
 
 * programs are ahead-of-time lowered + compiled (``jit(...).lower(...)
   .compile()``) and stored under a :class:`ProgramKey` --
-  ``(n, dim, k, efs, heuristic, metric, batch_shape)`` plus the minor
-  search knobs -- so executing a cached program can never retrace;
+  ``(n, dim, k, efs, heuristic, metric, batch_shape, engine)`` plus the
+  minor search knobs -- so executing a cached program can never retrace;
+  the ``engine`` arm keeps the batched-frontier engine ("batched") and
+  the vmap reference oracle ("vmap") as distinct programs;
 * batch shapes are bucketed to the next power of two (queries are padded
   with their first row and the result sliced back), so a serving engine
   draining groups of 17, then 19, then 23 requests compiles once, not
@@ -25,6 +27,7 @@ API ``NavixIndex.search(...)`` benefits too.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -33,7 +36,7 @@ import jax.numpy as jnp
 from repro.core.graph import HnswGraph
 from repro.core.search import SearchParams, SearchResult
 from repro.core.search import search as _search
-from repro.core.search import search_batch as _search_batch
+from repro.core.search_batch import resolve_engine
 
 
 class ProgramKey(NamedTuple):
@@ -47,6 +50,8 @@ class ProgramKey(NamedTuple):
     batch_shape: Optional[int]     # None = single-query program
     knobs: tuple = ()              # (ub, lf, two_hop_cap, max_iters,
                                    #  m_l, n_upper, m_u)
+    engine: str = "single"         # "single" | "vmap" | "batched" -- the
+                                   # two batch engines are distinct programs
 
 
 @dataclasses.dataclass
@@ -86,14 +91,15 @@ class ProgramCache:
 
     # -- internals ----------------------------------------------------------
     def _key(self, graph: HnswGraph, params: SearchParams,
-             batch_shape: Optional[int]) -> ProgramKey:
+             batch_shape: Optional[int], engine: str = "single") -> ProgramKey:
         return ProgramKey(
             n=graph.n, dim=graph.dim, k=params.k, efs=params.efs,
             heuristic=params.heuristic, metric=params.metric,
             batch_shape=batch_shape,
             knobs=(params.ub, params.lf, params.two_hop_cap,
                    params.max_iters, graph.m_l, graph.n_upper,
-                   graph.m_u))
+                   graph.m_u),
+            engine=engine)
 
     def _get(self, key: ProgramKey, fn, graph, q, sel_bits, params, sigma_g):
         prog = self._programs.get(key)
@@ -119,18 +125,38 @@ class ProgramCache:
     def search_batch(self, graph: HnswGraph, Q: jax.Array,
                      sel_bits: jax.Array, params: SearchParams,
                      sigma_g) -> SearchResult:
-        """Batched search; the batch is padded to its power-of-two bucket
-        so nearby batch sizes share one program, and results are sliced
-        back to the true size."""
+        """vmap-engine batch search (the reference oracle path)."""
+        return self.batch("vmap")(graph, Q, sel_bits, params, sigma_g)
+
+    def search_many(self, graph: HnswGraph, Q: jax.Array,
+                    sel_bits: jax.Array, params: SearchParams,
+                    sigma_g) -> SearchResult:
+        """Batched-frontier engine search (the serving throughput path).
+
+        Compiled under its own cache-key arm (``engine="batched"``) so the
+        two batch engines never collide even at identical plan shapes.
+        """
+        return self.batch("batched")(graph, Q, sel_bits, params, sigma_g)
+
+    def batch(self, engine: str):
+        """The cached batch entry point for a (validated) engine name."""
+        return functools.partial(self._run_batched, resolve_engine(engine),
+                                 engine)
+
+    def _run_batched(self, fn, engine: str, graph: HnswGraph, Q: jax.Array,
+                     sel_bits: jax.Array, params: SearchParams,
+                     sigma_g) -> SearchResult:
+        """Shared batch-program path: the batch is padded to its
+        power-of-two bucket so nearby batch sizes share one program, and
+        results are sliced back to the true size."""
         sigma_g = jnp.asarray(sigma_g, dtype=jnp.float32)
         b = Q.shape[0]
         bb = _bucket(b)
         if bb != b:
             Q = jnp.concatenate(
                 [Q, jnp.broadcast_to(Q[:1], (bb - b,) + Q.shape[1:])])
-        key = self._key(graph, params, bb)
-        prog = self._get(key, _search_batch, graph, Q, sel_bits, params,
-                         sigma_g)
+        key = self._key(graph, params, bb, engine=engine)
+        prog = self._get(key, fn, graph, Q, sel_bits, params, sigma_g)
         res = prog(graph, Q, sel_bits, sigma_g=sigma_g)
         if bb != b:
             res = jax.tree_util.tree_map(lambda a: a[:b], res)

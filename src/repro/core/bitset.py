@@ -51,16 +51,20 @@ def test(bits: jax.Array, ids: jax.Array) -> jax.Array:
 
 
 def set_bits(bits: jax.Array, ids: jax.Array) -> jax.Array:
-    """Set bits for (assumed-distinct) ids; ids<0 ignored.
+    """Set bits for ids; ids<0 ignored. Duplicate-safe.
 
-    Distinctness matters: duplicate ids would carry into neighboring bits
-    (the OR is realized as a sum of distinct powers of two). Callers dedupe
-    their expansion lists before marking visited, which is also what the
-    sequential algorithm does implicitly.
+    The per-word OR is realized as a scatter-add of *distinct* powers of
+    two: ids are sorted so duplicates become adjacent and only the first
+    occurrence of each run (that is not already set) contributes. A plain
+    additive scatter would carry duplicate contributions into neighboring
+    bits, silently corrupting the set.
     """
-    already = test(bits, ids)
-    fresh = (ids >= 0) & (~already)
-    safe = jnp.maximum(ids, 0)
+    s = jnp.sort(ids)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]]) if s.shape[0] > 1 else (
+        jnp.ones(s.shape, bool))
+    fresh = first & (s >= 0) & ~test(bits, s)
+    safe = jnp.maximum(s, 0)
     word = jnp.where(fresh, safe >> 5, 0)
     val = jnp.where(fresh, (jnp.uint32(1) << (safe & 31).astype(jnp.uint32)), jnp.uint32(0))
     return bits.at[word].add(val)

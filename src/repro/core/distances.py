@@ -35,14 +35,20 @@ def normalize(x: jax.Array, eps: float = 1e-12) -> jax.Array:
 
 
 def point_dist(q: jax.Array, x: jax.Array, metric: Metric) -> jax.Array:
-    """dist(q[d], x[..., d]) -> [...]."""
+    """dist(q[..., d], x[..., d]) -> [...] (q broadcasts against x).
+
+    cos/dot use an explicit elementwise multiply + last-axis sum (not a
+    matvec) so the single-query and batched search engines -- which call
+    this with differently-ranked operands -- produce bitwise-identical
+    distances for the same (q, x) rows.
+    """
     if metric == "l2":
         diff = x - q
         return jnp.sum(diff * diff, axis=-1)
     if metric == "cos":
-        return 1.0 - x @ q
+        return 1.0 - jnp.sum(x * q, axis=-1)
     if metric == "dot":
-        return -(x @ q)
+        return -jnp.sum(x * q, axis=-1)
     raise ValueError(metric)
 
 
@@ -51,6 +57,19 @@ def gathered_dist(q: jax.Array, vectors: jax.Array, ids: jax.Array,
     """dist(q, vectors[ids]) with ids<0 padding -> +inf."""
     safe = jnp.maximum(ids, 0)
     d = point_dist(q, vectors[safe], metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def gathered_dist_batch(Q: jax.Array, vectors: jax.Array, ids: jax.Array,
+                        metric: Metric) -> jax.Array:
+    """Rowwise gather+distance: dist(Q[b], vectors[ids[b]]) -> f32[B, K].
+
+    The batched engine's distance primitive; ids<0 padding -> +inf. Uses
+    the same elementwise ops as :func:`gathered_dist` so a batched lane
+    and a single-query run over the same ids agree bitwise.
+    """
+    safe = jnp.maximum(ids, 0)
+    d = point_dist(Q[:, None, :], vectors[safe], metric)
     return jnp.where(ids >= 0, d, jnp.inf)
 
 

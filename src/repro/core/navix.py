@@ -32,7 +32,8 @@ from repro.core.graph import HnswGraph
 from repro.core.heuristics import Heuristic
 from repro.core.postfilter import postfilter_search
 from repro.core.quantize import QuantizedStore, dequantize, quantize, rerank
-from repro.core.search import SearchParams, SearchResult, search, search_batch
+from repro.core.search import SearchParams, SearchResult, search
+from repro.core.search_batch import resolve_engine
 
 
 class NavixConfig(NamedTuple):
@@ -74,7 +75,17 @@ class NavixIndex:
     def pack_semimask(self, mask) -> jax.Array:
         mask = jnp.asarray(mask)
         if mask.dtype == jnp.uint32:
+            want = bitset.n_words(self.graph.n)
+            if mask.shape[-1] != want:
+                raise ValueError(
+                    f"pre-packed semimask has {mask.shape[-1]} uint32 words "
+                    f"but this index ({self.graph.n} nodes) needs {want}; "
+                    f"was it packed for a differently-sized index?")
             return mask
+        if mask.shape[-1] != self.graph.n:
+            raise ValueError(
+                f"semimask covers {mask.shape[-1]} nodes but this index "
+                f"has {self.graph.n}")
         return bitset.pack(mask.astype(bool))
 
     def full_semimask(self) -> jax.Array:
@@ -113,19 +124,29 @@ class NavixIndex:
                       sigma_g=sigma_g)
 
     def search_many(self, Q, k: int = 100, efs: int = 0, semimask=None,
-                    heuristic="adaptive_local") -> SearchResult:
-        """Batched (vmap) search -- the serving-throughput path."""
+                    heuristic="adaptive_local",
+                    engine: str = "batched") -> SearchResult:
+        """Batched search -- the serving-throughput path.
+
+        ``engine="batched"`` (default) runs the batched-frontier engine
+        (``repro.core.search_batch``): one while-loop over the whole
+        batch, per-query convergence masking, one shared expansion per
+        iteration. ``engine="vmap"`` keeps the vmapped single-query
+        program as a reference oracle (pays the branch union per
+        iteration; see the module docs). Both return lane-for-lane
+        identical results.
+        """
+        fn = resolve_engine(engine)
         efs = efs or 2 * k
         sel = (self.full_semimask() if semimask is None
                else self.pack_semimask(semimask))
         sigma_g = self.sigma(sel)
         params = self._params(k, efs, heuristic)
         if self.program_cache is not None:
-            return self.program_cache.search_batch(self.graph,
-                                                   self._prep_query(Q), sel,
-                                                   params, sigma_g)
-        return search_batch(self.graph, self._prep_query(Q), sel, params,
-                            sigma_g=sigma_g)
+            return self.program_cache.batch(engine)(
+                self.graph, self._prep_query(Q), sel, params, sigma_g)
+        return fn(self.graph, self._prep_query(Q), sel, params,
+                  sigma_g=sigma_g)
 
     def search_quantized(self, q, k: int = 100, efs: int = 0, semimask=None,
                          heuristic="adaptive_local"):
@@ -167,5 +188,6 @@ class NavixIndex:
         for r, t in zip(res, true):
             tset = set(int(x) for x in t if x >= 0)
             denom += len(tset)
-            hits += sum(1 for x in r if int(x) in tset)
+            # set intersection: a duplicated result id is one hit, not many
+            hits += len(tset & set(int(x) for x in r if x >= 0))
         return hits / max(denom, 1)

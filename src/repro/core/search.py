@@ -378,5 +378,10 @@ def search(graph: HnswGraph, q: jax.Array, sel_bits: jax.Array,
 @functools.partial(jax.jit, static_argnames=("params",))
 def search_batch(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
                  params: SearchParams, sigma_g=None) -> SearchResult:
-    """vmap throughput path (branch-union cost per iteration; see module doc)."""
+    """vmap batch path, kept as the reference oracle for the dedicated
+    batched-frontier engine (``repro.core.search_batch.search_many``).
+
+    It pays the branch-union cost per iteration (see module doc) --
+    production batch traffic should use the batched engine instead.
+    """
     return jax.vmap(lambda q: search(graph, q, sel_bits, params, sigma_g))(Q)

@@ -58,3 +58,49 @@ def gather_distance_pallas(q: jax.Array, vectors: jax.Array, ids: jax.Array,
         interpret=interpret,
     )(safe, vectors, q[None, :])
     return jnp.where(ids >= 0, out, jnp.inf)
+
+
+def _batch_kernel(ids_ref, row_ref, q_ref, out_ref, *, metric: str):
+    row = row_ref[...].astype(jnp.float32)       # [1, d]
+    q = q_ref[...].astype(jnp.float32)           # [1, d]
+    if metric == "l2":
+        diff = row - q
+        out_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+    elif metric == "cos":
+        out_ref[...] = 1.0 - jnp.sum(row * q, axis=1, keepdims=True)
+    else:  # dot
+        out_ref[...] = -jnp.sum(row * q, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_distance_batch_pallas(Q: jax.Array, vectors: jax.Array,
+                                 ids: jax.Array, metric: str = "l2",
+                                 interpret: bool = False) -> jax.Array:
+    """Q[b,d], vectors[n,d], ids[b,k] (int32; <0 = padding) -> f32[b,k].
+
+    The batched-engine variant of the fused gather+distance kernel: all B
+    id lists stream through ONE pallas_call with a (B, K) grid -- the
+    scalar-prefetch index_map reads ``ids[b, k]`` to pick the HBM row and
+    ``b`` to pick the query row, so the multi-query engine pays a single
+    trace/launch instead of B separate ones. Retired lanes pass ids == -1
+    (clamped to row 0, masked to +inf here), matching the engine's
+    active-query masking contract.
+    """
+    n, d = vectors.shape
+    b, k = ids.shape
+    safe = jnp.clip(ids, 0, n - 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_batch_kernel, metric=metric),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, k),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, j, ids_ref: (ids_ref[i, j], 0)),
+                pl.BlockSpec((1, d), lambda i, j, ids_ref: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, j, ids_ref: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(safe, vectors, Q)
+    return jnp.where(ids >= 0, out, jnp.inf)

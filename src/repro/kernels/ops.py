@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.distance_matrix import distance_matrix_pallas
-from repro.kernels.gather_distance import gather_distance_pallas
+from repro.kernels.gather_distance import (gather_distance_batch_pallas,
+                                           gather_distance_pallas)
 from repro.kernels.quantized import quantized_distance_pallas
 from repro.kernels.segment_sum import csr_segment_sum_pallas, plan_tiles
 
@@ -73,6 +74,20 @@ def gather_distance(q, vectors, ids, metric: str = "l2"):
     qp = _pad_to(q, 0, 128)
     return gather_distance_pallas(qp, vp, ids, metric,
                                   interpret=not _on_tpu())
+
+
+def gather_distance_batch(Q, vectors, ids, metric: str = "l2"):
+    """Batched fused gather+distance: dist(Q[b], vectors[ids[b]]). f32[b,k].
+
+    One pallas_call grid streams all B id lists (the batched engine's
+    distance primitive); ids<0 -> inf.
+    """
+    if not _use_pallas():
+        return ref.gather_distance_batch(Q, vectors, ids, metric)
+    vp = _pad_to(vectors, 1, 128)
+    qp = _pad_to(Q, 1, 128)
+    return gather_distance_batch_pallas(qp, vp, ids, metric,
+                                        interpret=not _on_tpu())
 
 
 def quantized_distance_matrix(Q, codes, scale, metric: str = "l2",

@@ -41,6 +41,22 @@ def gather_distance(q: jax.Array, vectors: jax.Array, ids: jax.Array,
     return jnp.where(ids >= 0, d, jnp.inf)
 
 
+def gather_distance_batch(Q: jax.Array, vectors: jax.Array, ids: jax.Array,
+                          metric: str) -> jax.Array:
+    """f32[b,k]: dist(Q[b], vectors[ids[b]]); ids < 0 -> +inf."""
+    rows = vectors[jnp.maximum(ids, 0)].astype(jnp.float32)  # [b, k, d]
+    Qf = Q.astype(jnp.float32)[:, None, :]
+    if metric == "l2":
+        d = jnp.sum((rows - Qf) ** 2, axis=-1)
+    elif metric == "cos":
+        d = 1.0 - jnp.sum(rows * Qf, axis=-1)
+    elif metric == "dot":
+        d = -jnp.sum(rows * Qf, axis=-1)
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
 def quantized_distance_matrix(Q: jax.Array, codes: jax.Array,
                               scale: jax.Array, metric: str) -> jax.Array:
     """Distances against int8-quantized vectors x_i ~= scale_i * codes_i."""

@@ -7,7 +7,10 @@ unified :class:`repro.api.NavixDB` pipeline:
     bare selection subqueries (legacy form, wrapped automatically);
   * a scheduler drains requests grouped by plan (same plan => same
     prefilter AND same compiled program) into batched ``NavixDB.execute``
-    calls; the shared AOT program cache means repeated plan shapes never
+    calls served by the batched-frontier engine
+    (``repro.core.search_batch``): one while-loop per group batch,
+    converged queries masked out, one shared expansion per iteration;
+    the shared AOT program cache means repeated plan shapes never
     retrace, and the group's prefilter runs exactly once, its cost
     amortized across the group's requests;
   * per-request latency is recorded (queue + execution + amortized
@@ -71,6 +74,9 @@ class SearchEngine:
     max_batch: int = 32
     db: Optional[NavixDB] = None
     default_index: Optional[str] = None    # catalog name for unfiltered kNN
+    engine: str = "batched"                # grouped drains run the
+                                           # batched-frontier engine;
+                                           # "vmap" = reference oracle
 
     def __post_init__(self):
         if self.db is None:
@@ -138,7 +144,8 @@ class SearchEngine:
     def _serve_group(self, plan: Plan, reqs: list[Request]) -> list[Response]:
         Q = np.stack([r.query for r in reqs])
         t1 = time.perf_counter()
-        rs = self.db.execute(plan, query=Q, max_batch=self.max_batch)
+        rs = self.db.execute(plan, query=Q, max_batch=self.max_batch,
+                             engine=self.engine)
         # the prefilter ran once for the whole group: amortize its cost
         # (and the semimask pack) across the group's requests so the
         # latency summary reflects what each request actually paid

@@ -108,6 +108,13 @@ def test_pure_selection_plan(wikidb):
     np.testing.assert_array_equal(rs.columns["cID"], rs.ids)
 
 
+def test_execute_rejects_unknown_engine(wikidb):
+    db, _, data = wikidb
+    with pytest.raises(ValueError, match="engine"):
+        db.execute(Q.match("Chunk").knn(k=3), query=data.embeddings[:4],
+                   engine="bacthed")
+
+
 def test_unbound_template_needs_query(wikidb):
     db, _, _ = wikidb
     with pytest.raises(ValueError, match="query vector"):

@@ -46,6 +46,69 @@ def test_set_bits_matches_numpy(n, seed):
     np.testing.assert_array_equal(np.asarray(bitset.unpack(out, n)), expect)
 
 
+def test_set_bits_duplicate_ids_are_safe():
+    """Regression: duplicate ids must OR into the same bit, not carry
+    into neighboring bits (additive scatter corrupted the word)."""
+    n = 70
+    bits = bitset.pack(jnp.zeros(n, bool))
+    ids = jnp.asarray([5, 5, 5, 5, 37, 37, 69, -1, -1], jnp.int32)
+    out = np.asarray(bitset.unpack(bitset.set_bits(bits, ids), n))
+    expect = np.zeros(n, bool)
+    expect[[5, 37, 69]] = True
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_set_bits_duplicates_against_preset_bits():
+    """Duplicates of an already-set bit stay a no-op."""
+    n = 40
+    base = np.zeros(n, bool)
+    base[7] = True
+    bits = bitset.pack(jnp.asarray(base))
+    out = bitset.set_bits(bits, jnp.asarray([7, 7, 8, 8], jnp.int32))
+    expect = base.copy()
+    expect[8] = True
+    np.testing.assert_array_equal(np.asarray(bitset.unpack(out, n)), expect)
+    assert int(bitset.count(out)) == 2
+
+
+@given(st.integers(10, 120), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_set_bits_with_duplicates_matches_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    base = rng.random(n) < 0.3
+    ids = rng.integers(-2, n, size=25)          # duplicates very likely
+    bits = bitset.set_bits(bitset.pack(jnp.asarray(base)),
+                           jnp.asarray(ids, jnp.int32))
+    expect = base.copy()
+    expect[ids[ids >= 0]] = True
+    np.testing.assert_array_equal(np.asarray(bitset.unpack(bits, n)), expect)
+
+
+def _tiny_index(n=70, d=4):
+    from repro.core.graph import empty_graph
+    from repro.core.navix import NavixConfig, NavixIndex
+    graph = empty_graph(n, d, m_l=4, m_u=2, n_upper=4,
+                        vectors=jnp.zeros((n, d), jnp.float32))
+    return NavixIndex.from_graph(graph, NavixConfig())
+
+
+def test_pack_semimask_validates_prepacked_width():
+    idx = _tiny_index(n=70)                      # needs ceil(70/32) = 3 words
+    good = bitset.pack(jnp.zeros(70, bool))
+    assert idx.pack_semimask(good).shape == (3,)
+    stale = jnp.zeros(5, jnp.uint32)             # packed for a bigger index
+    with pytest.raises(ValueError, match="3"):
+        idx.pack_semimask(stale)
+    with pytest.raises(ValueError, match="words"):
+        idx.pack_semimask(jnp.zeros(2, jnp.uint32))
+
+
+def test_pack_semimask_validates_bool_length():
+    idx = _tiny_index(n=70)
+    with pytest.raises(ValueError, match="70"):
+        idx.pack_semimask(np.zeros(64, bool))
+
+
 def test_count_members_sigma_l():
     """The adaptive-local sigma_l numerator: membership counting only."""
     mask = np.zeros(100, bool)

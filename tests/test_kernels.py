@@ -6,7 +6,8 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.distance_matrix import distance_matrix_pallas
-from repro.kernels.gather_distance import gather_distance_pallas
+from repro.kernels.gather_distance import (gather_distance_batch_pallas,
+                                           gather_distance_pallas)
 from repro.kernels.quantized import quantized_distance_pallas
 from repro.kernels.segment_sum import (PAD_SENTINEL, csr_segment_sum_pallas,
                                        plan_tiles)
@@ -40,6 +41,24 @@ def test_gather_distance_sweep(metric, n, d, k):
     ids = jnp.asarray(RNG.integers(-1, n, size=k), jnp.int32)
     got = gather_distance_pallas(q, X, ids, metric, interpret=True)
     exp = ref.gather_distance(q, X, ids, metric)
+    g, e = np.asarray(got), np.asarray(exp)
+    np.testing.assert_array_equal(np.isinf(g), np.isinf(e))
+    fin = np.isfinite(e)
+    np.testing.assert_allclose(g[fin], e[fin], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", ["l2", "cos", "dot"])
+@pytest.mark.parametrize("b,n,d,k", [(4, 64, 128, 7), (8, 128, 128, 16),
+                                     (1, 100, 256, 5)])
+def test_gather_distance_batch_sweep(metric, b, n, d, k):
+    """One pallas_call grid serves all B id lists (incl. -1 padded lanes,
+    the engine's retired-query masking contract)."""
+    Q = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    X = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(-1, n, size=(b, k)), jnp.int32)
+    ids = ids.at[0].set(-1)                     # a fully-retired lane
+    got = gather_distance_batch_pallas(Q, X, ids, metric, interpret=True)
+    exp = ref.gather_distance_batch(Q, X, ids, metric)
     g, e = np.asarray(got), np.asarray(exp)
     np.testing.assert_array_equal(np.isinf(g), np.isinf(e))
     fin = np.isfinite(e)
