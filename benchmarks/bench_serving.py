@@ -1,0 +1,155 @@
+"""Mixed-plan serving throughput: continuous batching vs per-group drain.
+
+The workload the per-group scheduler cannot batch: every request carries
+its OWN selection subquery (distinct ``cID < cutoff`` predicates spanning
+selectivities from ~5% to 100%), so plan-grouping degenerates to B=1
+device calls. The continuous scheduler fuses them anyway -- per-lane
+``[B, W]`` semimasks, per-lane k/efs capped to the batch max, converged
+lanes compacted out and refilled from the queue between device steps.
+
+Both schedulers serve the identical request stream through the same
+``SearchEngine`` surface; results are checked equal request-for-request.
+QPS, latency percentiles, and the continuous/grouped speedup go to
+``experiments/bench/BENCH_serving.json``.
+
+Claim gated by validate(): continuous-batching QPS >= 1.3x the
+per-group-drain path (>= 1.0x sanity floor in REPRO_BENCH_QUICK mode,
+where the problem is too small for the margin to be stable), with
+identical per-request answers.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.navix import NavixConfig
+from repro.data.synthetic import gaussian_mixture
+from repro.query.operators import Filter, NodeScan
+from repro.serving.engine import SearchEngine
+from repro.storage.columnar import GraphStore
+
+JSON_OUT = pathlib.Path("experiments") / "bench" / (
+    "BENCH_serving.quick.json" if common.QUICK else "BENCH_serving.json")
+
+K = 10
+EFS = 30
+MAX_BATCH = 16
+STEP_ITERS = 32
+SPEEDUP_FLOOR = 1.0 if common.QUICK else 1.3
+#: request selectivities -- each request gets its own predicate
+SELECTIVITIES = (0.05, 0.1, 0.2, 0.35, 0.5, 0.75, 0.9, 1.0)
+
+
+def _requests(n: int, centers, d: int, n_req: int, rng):
+    """(query, plan) stream: distinct per-request predicates at varied
+    selectivities."""
+    reqs = []
+    for j in range(n_req):
+        sigma = SELECTIVITIES[j % len(SELECTIVITIES)]
+        # distinct cutoffs even at equal sigma (jitter) => distinct plans
+        cut = min(n, max(K, int(sigma * n) - (j // len(SELECTIVITIES))))
+        q = (centers[rng.integers(0, len(centers))]
+             + 0.3 * rng.normal(size=d)).astype(np.float32)
+        reqs.append((q, Filter(NodeScan("Chunk"), "cID", "<", value=cut)))
+    return reqs
+
+
+def _serve(engine: SearchEngine, reqs) -> tuple[float, dict]:
+    rids = [engine.submit(q, plan=plan, k=K) for q, plan in reqs]
+    t0 = time.perf_counter()
+    responses = engine.drain()
+    wall = time.perf_counter() - t0
+    by = {r.rid: r for r in responses}
+    assert sorted(by) == sorted(rids), "every rid answered exactly once"
+    return wall, {rid: by[rid] for rid in rids}
+
+
+def run() -> list[dict]:
+    n, d = (1500, 16) if common.QUICK else (4000, 32)
+    n_req = 24 if common.QUICK else 128
+    reps = 2 if common.QUICK else 5
+    X, _, centers = gaussian_mixture(n, d, 10, seed=0)
+    index = common.cached_index(f"bench_search_{n}",
+                                X, NavixConfig(m_u=8, ef_construction=64,
+                                               metric="l2", seed=0))
+    rng = np.random.default_rng(11)
+    reqs = _requests(n, centers, d, n_req, rng)
+
+    def make_engine(sched: str) -> SearchEngine:
+        store = GraphStore()
+        store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+        return SearchEngine(index=index, store=store, efs=EFS,
+                            max_batch=MAX_BATCH, scheduler=sched,
+                            step_iters=STEP_ITERS)
+
+    # engines are warmed up front and their timed drains interleaved
+    # (grouped rep, continuous rep, ...) so host load drift hits both
+    # schedulers equally; medians keep one noisy drain from deciding
+    engines = {s: make_engine(s) for s in ("grouped", "continuous")}
+    for engine in engines.values():
+        _serve(engine, reqs)                        # warm-up compile
+        engine.latencies_ms.clear()
+    walls: dict[str, list[float]] = {s: [] for s in engines}
+    answers: dict[str, dict] = {}
+    for _ in range(reps):
+        for sched, engine in engines.items():
+            wall, got = _serve(engine, reqs)
+            walls[sched].append(wall)
+            answers[sched] = got
+    rows: list[dict] = []
+    for sched, engine in engines.items():
+        lat = engine.latency_summary()
+        med = float(np.median(walls[sched]))
+        rows.append({
+            "sched": sched,
+            "n_req": n_req,
+            "qps": round(n_req / med, 2),
+            "drain_ms": round(med * 1e3, 2),
+            "p50_ms": round(lat["p50_ms"], 3),
+            "p95_ms": round(lat["p95_ms"], 3),
+        })
+    common.emit(rows, "serving_schedulers")
+
+    mismatched = sum(
+        1 for rid in answers["grouped"]
+        if not np.array_equal(answers["grouped"][rid].ids,
+                              answers["continuous"][rid].ids))
+    by = {r["sched"]: r for r in rows}
+    speedup = round(by["continuous"]["qps"] / max(by["grouped"]["qps"], 1e-9),
+                    3)
+    JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
+    JSON_OUT.write_text(json.dumps({
+        "workload": {"n": n, "d": d, "k": K, "efs": EFS,
+                     "n_req": n_req, "max_batch": MAX_BATCH,
+                     "step_iters": STEP_ITERS, "reps": reps,
+                     "selectivities": list(SELECTIVITIES),
+                     "distinct_plans": len({p for _, p in reqs}),
+                     "quick": common.QUICK},
+        "rows": rows,
+        "continuous_over_grouped_qps": speedup,
+        "mismatched_answers": mismatched,
+    }, indent=2) + "\n")
+    for r in rows:
+        r["_mismatched"] = mismatched
+    return rows
+
+
+def validate(rows: list[dict]) -> list[str]:
+    fails: list[str] = []
+    by = {r["sched"]: r for r in rows}
+    if "grouped" not in by or "continuous" not in by:
+        return ["missing scheduler rows"]
+    speedup = by["continuous"]["qps"] / max(by["grouped"]["qps"], 1e-9)
+    if speedup < SPEEDUP_FLOOR:
+        fails.append(f"continuous batching QPS is only {speedup:.2f}x the "
+                     f"per-group drain on the mixed-plan workload (need >= "
+                     f"{SPEEDUP_FLOOR}x)")
+    if rows[0].get("_mismatched"):
+        fails.append(f"{rows[0]['_mismatched']} requests got different "
+                     f"answers from the two schedulers")
+    return fails

@@ -14,6 +14,12 @@ paper-claim validation summary. Set REPRO_BENCH_QUICK=1 for a fast pass.
   distributed shard-and-merge + quorum     (beyond paper)
   search    vmap vs batched-frontier QPS   (Section 6 serving; emits
                                             experiments/bench/BENCH_search.json)
+  serving   mixed-plan continuous batching  (per-lane semimasks; emits
+                                            experiments/bench/BENCH_serving.json)
+
+``--check-trend`` diffs the current BENCH_search.json against a previous
+artifact (``--baseline PATH``) and exits non-zero on a >20% QPS
+regression (``--trend-tol`` overrides); see benchmarks/trend.py.
 """
 
 from __future__ import annotations
@@ -27,13 +33,32 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig8,adaptive,postfilter,construction,"
-                         "quantized,kernels,distributed,search")
+                         "quantized,kernels,distributed,search,serving")
+    ap.add_argument("--check-trend", action="store_true",
+                    help="diff BENCH_search.json QPS against --baseline and "
+                         "fail on regressions > --trend-tol (no suites run)")
+    ap.add_argument("--baseline",
+                    default="experiments/bench/prev/BENCH_search.json",
+                    help="previous BENCH_search.json artifact to diff against")
+    ap.add_argument("--current", default=None,
+                    help="bench JSON to check (default: the quick/full "
+                         "BENCH_search.json the last run emitted)")
+    ap.add_argument("--trend-tol", type=float, default=None,
+                    help="allowed fractional QPS drop (default 0.20)")
     args = ap.parse_args()
+
+    if args.check_trend:
+        from benchmarks import bench_search, trend
+        current = args.current or str(bench_search.JSON_OUT)
+        sys.exit(trend.check_trend(
+            current, args.baseline,
+            tol=args.trend_tol if args.trend_tol is not None
+            else trend.DEFAULT_TOL))
 
     from benchmarks import (bench_adaptive, bench_construction,
                             bench_distributed, bench_heuristics,
                             bench_kernels, bench_postfilter, bench_quantized,
-                            bench_search)
+                            bench_search, bench_serving)
 
     def post_run():                 # two tables (Fig 16 + Table 7)
         rows = bench_postfilter.run()
@@ -49,6 +74,7 @@ def main() -> None:
         "kernels": (bench_kernels.run, bench_kernels.validate),
         "distributed": (bench_distributed.run, bench_distributed.validate),
         "search": (bench_search.run, bench_search.validate),
+        "serving": (bench_serving.run, bench_serving.validate),
     }
 
     wanted = (args.only.split(",") if args.only else list(suites))

@@ -1,0 +1,83 @@
+"""QPS trend check: diff a BENCH_*.json against a previous artifact.
+
+``python -m benchmarks.run --check-trend`` loads the current
+``experiments/bench/BENCH_search.json`` (or ``--current PATH``) and a
+baseline from a previous run (``--baseline PATH``, e.g. the artifact CI
+downloaded from the last main build) and fails when any (engine, B) row's
+QPS regressed by more than ``--trend-tol`` (default 20%). Speedups and
+new rows never fail; a missing baseline is a skip, not a failure, so the
+first run of a fresh branch stays green.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+DEFAULT_TOL = 0.20
+
+#: workload keys that must match for a QPS comparison to be meaningful
+_WORKLOAD_KEYS = ("n", "d", "k", "efs", "quick")
+
+
+def _row_key(row: dict) -> tuple:
+    """Identity of one measured configuration within a bench file."""
+    return tuple(sorted((k, v) for k, v in row.items()
+                 if k not in ("qps", "p50_ms", "p95_ms", "p99_ms", "recall",
+                              "mean_ms")))
+
+
+def compare(current: dict, baseline: dict,
+            tol: float = DEFAULT_TOL) -> tuple[list[str], list[str]]:
+    """Return (failures, notes) from diffing two bench JSON payloads."""
+    notes: list[str] = []
+    cw, bw = current.get("workload", {}), baseline.get("workload", {})
+    mismatched = [k for k in _WORKLOAD_KEYS
+                  if k in cw and k in bw and cw[k] != bw[k]]
+    if mismatched:
+        return [], [f"workload changed ({', '.join(mismatched)}); "
+                    f"skipping QPS comparison"]
+
+    base_rows = {_row_key(r): r for r in baseline.get("rows", [])}
+    fails: list[str] = []
+    for row in current.get("rows", []):
+        prev = base_rows.get(_row_key(row))
+        if prev is None or "qps" not in row or "qps" not in prev:
+            continue
+        if prev["qps"] <= 0:
+            continue
+        ratio = row["qps"] / prev["qps"]
+        label = ", ".join(f"{k}={row[k]}" for k in ("engine", "B", "sched")
+                          if k in row)
+        if ratio < 1.0 - tol:
+            fails.append(f"QPS regression at ({label}): "
+                         f"{prev['qps']:.1f} -> {row['qps']:.1f} "
+                         f"({ratio:.2f}x, floor {1.0 - tol:.2f}x)")
+        else:
+            notes.append(f"({label}): {prev['qps']:.1f} -> "
+                         f"{row['qps']:.1f} ({ratio:.2f}x) ok")
+    return fails, notes
+
+
+def check_trend(current_path: str, baseline_path: str,
+                tol: float = DEFAULT_TOL) -> int:
+    """CLI body: print the diff, return a process exit code."""
+    cur_p, base_p = pathlib.Path(current_path), pathlib.Path(baseline_path)
+    if not cur_p.exists():
+        print(f"trend: current bench file {cur_p} missing; run the "
+              f"benchmark first")
+        return 1
+    if not base_p.exists():
+        print(f"trend: no baseline at {base_p}; skipping (first run?)")
+        return 0
+    current = json.loads(cur_p.read_text())
+    baseline = json.loads(base_p.read_text())
+    fails, notes = compare(current, baseline, tol)
+    for n in notes:
+        print(f"trend: {n}")
+    for f in fails:
+        print(f"TREND-FAIL: {f}")
+    if not fails:
+        print(f"trend: no QPS regression beyond {tol:.0%} "
+              f"({len(notes)} comparisons)")
+    return 1 if fails else 0

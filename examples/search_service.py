@@ -3,10 +3,14 @@ graph store serving batched requests (the paper's kind of system is a
 serving system, so the end-to-end driver serves batched requests).
 
 Requests carry declarative plan templates (built with ``repro.api.Q``,
-query vector bound per request by the engine); the engine groups by plan,
-runs each group's prefilter once through NavixDB, and serves the batch
-through the shared compiled-program cache. Latency percentiles are
-reported like a production tier.
+query vector bound per request by the engine). The default scheduler is
+continuous batching: requests with *different* plans fuse into one
+device batch (each lane carries its own selection subquery's semimask),
+converged lanes are compacted out and refilled from the queue, and each
+distinct prefilter runs exactly once per drain. Latency percentiles are
+reported like a production tier. ``SearchEngine(scheduler="grouped")``
+selects the per-plan reference path (which also exercises the shared
+compiled-program cache through NavixDB.execute).
 
     PYTHONPATH=src python examples/search_service.py [--requests 60]
 """
@@ -67,6 +71,8 @@ def main():
         print(f"  rid={r.rid} sigma={r.sigma:.2f} ids={r.ids[:5]}"
               f" prefilter={r.prefilter_ms:.3f}ms exec={r.exec_ms:.1f}ms")
     print("latency summary:", engine.latency_summary())
+    # the program cache serves the grouped path + NavixDB.execute; the
+    # continuous scheduler runs the stepping engine's own jit programs
     print("program cache:", db.programs.info())
 
 

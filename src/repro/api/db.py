@@ -71,9 +71,12 @@ class ResultSet:
     dists: Optional[np.ndarray]
     columns: dict[str, np.ndarray]
     sigma: float                   # selectivity |S| / |V| of the prefilter
+                                   # (mean over lanes for per-lane masks)
     timings: StageTimings
     stats: Optional[object] = None          # SearchStats (kNN plans only)
     mask: Optional[np.ndarray] = None       # the Q_S semimask (host bool[n])
+    sigmas: Optional[np.ndarray] = None     # per-lane selectivities (f32[b],
+                                            # execute(masks=[...]) only)
 
     def __len__(self) -> int:
         return int(self.ids.shape[0])
@@ -183,7 +186,8 @@ class NavixDB:
         return evaluate(plan, self.store)
 
     def execute(self, plan, query: Optional[np.ndarray] = None,
-                max_batch: int = 0, engine: str = "batched") -> ResultSet:
+                max_batch: int = 0, engine: str = "batched",
+                masks=None) -> ResultSet:
         """Run a full plan. ``plan`` is a Plan tree or a ``Q`` builder.
 
         ``query`` binds the vector(s) for the KnnSearch operator: [d] for
@@ -193,6 +197,14 @@ class NavixDB:
         multi-row execution engine: "batched" (default, the
         batched-frontier engine) or "vmap" (the reference oracle);
         single-row queries ignore it.
+
+        ``masks`` runs a **mixed-plan batch**: a list of per-query
+        selection masks (bool[n]; ``None`` entries mean unfiltered), one
+        per row of a [b, d] ``query``. Each lane then searches its own
+        selected set in one device batch (the paper's per-query ad-hoc S,
+        batched); ``ResultSet.sigmas`` carries the per-lane
+        selectivities. The plan must not also carry a selection subquery
+        -- the caller has already run the per-request Q_S's.
         """
         # builders carry their own bound query vector
         bound = getattr(plan, "bound_query", None)
@@ -209,6 +221,10 @@ class NavixDB:
         mask = None
         sigma = 1.0
         if parts.selection is not None:
+            if masks is not None:
+                raise ValueError(
+                    "execute(masks=...) replaces the prefilter stage; the "
+                    "plan must not also carry a selection subquery")
             qres = evaluate(parts.selection, self.store)
             mask, sigma = qres.mask, qres.selectivity
             timings.prefilter_ms = qres.seconds * 1e3
@@ -218,7 +234,16 @@ class NavixDB:
         if query is None:
             raise ValueError("plan has a KnnSearch but no query vector was "
                              "bound; pass execute(plan, query=...)")
-        return self._execute_knn(parts, table, np.asarray(query), mask,
+        query = np.asarray(query)
+        if masks is not None:
+            if query.ndim != 2 or len(masks) != query.shape[0]:
+                raise ValueError(
+                    f"masks needs one entry per query row; got "
+                    f"{len(masks)} masks for query shape {query.shape}")
+            n = self.store.node(table).n
+            mask = np.stack([np.ones(n, bool) if m is None
+                             else np.asarray(m, bool) for m in masks])
+        return self._execute_knn(parts, table, query, mask,
                                  sigma, timings, max_batch, engine)
 
     def _execute_knn(self, parts, table, query, mask, sigma, timings,
@@ -237,6 +262,12 @@ class NavixDB:
         sel.block_until_ready()
         timings.pack_ms = (time.perf_counter() - t0) * 1e3
 
+        # per-lane masks carry per-lane selectivities
+        sigmas = None
+        if sel.ndim == 2:
+            sigmas = np.asarray(idx.sigma(sel))
+            sigma = float(sigmas.mean())
+
         # stage 3: the kNN operator through the compiled-program cache
         k = knn.k
         params = idx._params(k, knn.efs or 2 * k, knn.heuristic)
@@ -246,8 +277,9 @@ class NavixDB:
             res = self.programs.search(idx.graph, idx._prep_query(query),
                                        sel, params, sigma)
         else:
-            res = self._run_batch(idx, query, sel, params, sigma, max_batch,
-                                  engine)
+            res = self._run_batch(idx, query, sel, params,
+                                  sigma if sigmas is None else sigmas,
+                                  max_batch, engine)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         timings.search_ms = (time.perf_counter() - t0) * 1e3
@@ -262,7 +294,7 @@ class NavixDB:
         timings.project_ms = (time.perf_counter() - t0) * 1e3
         return ResultSet(table=table, ids=ids, dists=dists, columns=columns,
                          sigma=sigma, timings=timings, stats=res.stats,
-                         mask=mask)
+                         mask=mask, sigmas=sigmas)
 
     def _run_batch(self, idx, query, sel, params, sigma, max_batch,
                    engine="batched"):
@@ -272,7 +304,15 @@ class NavixDB:
         Q = idx._prep_query(query)
         if not max_batch or Q.shape[0] <= max_batch:
             return run(idx.graph, Q, sel, params, sigma)
-        chunks = [run(idx.graph, Q[i:i + max_batch], sel, params, sigma)
+
+        def chunk_of(x, i):
+            """Per-lane operands (2-D sel, [b] sigma) chunk with the
+            query rows; shared operands pass through whole."""
+            return x[i:i + max_batch] if np.ndim(x) >= 1 else x
+
+        chunks = [run(idx.graph, Q[i:i + max_batch],
+                      chunk_of(sel, i) if sel.ndim == 2 else sel,
+                      params, chunk_of(sigma, i))
                   for i in range(0, Q.shape[0], max_batch)]
         return jax.tree_util.tree_map(
             lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *chunks)

@@ -52,6 +52,8 @@ class ProgramKey(NamedTuple):
                                    #  m_l, n_upper, m_u)
     engine: str = "single"         # "single" | "vmap" | "batched" -- the
                                    # two batch engines are distinct programs
+    per_lane_sel: bool = False     # [B, W] per-lane semimasks (mixed-plan
+                                   # batches) vs one shared [W] mask
 
 
 @dataclasses.dataclass
@@ -91,7 +93,8 @@ class ProgramCache:
 
     # -- internals ----------------------------------------------------------
     def _key(self, graph: HnswGraph, params: SearchParams,
-             batch_shape: Optional[int], engine: str = "single") -> ProgramKey:
+             batch_shape: Optional[int], engine: str = "single",
+             per_lane_sel: bool = False) -> ProgramKey:
         return ProgramKey(
             n=graph.n, dim=graph.dim, k=params.k, efs=params.efs,
             heuristic=params.heuristic, metric=params.metric,
@@ -99,7 +102,7 @@ class ProgramCache:
             knobs=(params.ub, params.lf, params.two_hop_cap,
                    params.max_iters, graph.m_l, graph.n_upper,
                    graph.m_u),
-            engine=engine)
+            engine=engine, per_lane_sel=per_lane_sel)
 
     def _get(self, key: ProgramKey, fn, graph, q, sel_bits, params, sigma_g):
         prog = self._programs.get(key)
@@ -148,14 +151,30 @@ class ProgramCache:
                      sigma_g) -> SearchResult:
         """Shared batch-program path: the batch is padded to its
         power-of-two bucket so nearby batch sizes share one program, and
-        results are sliced back to the true size."""
+        results are sliced back to the true size.
+
+        ``sel_bits`` may be one shared ``[W]`` semimask or a per-lane
+        ``[B, W]`` stack (the mixed-plan serving path); per-lane masks
+        (and a per-lane ``sigma_g`` vector) are padded alongside the
+        query rows and compile under a distinct ``per_lane_sel`` key arm.
+        """
         sigma_g = jnp.asarray(sigma_g, dtype=jnp.float32)
+        per_lane = sel_bits.ndim == 2
         b = Q.shape[0]
         bb = _bucket(b)
         if bb != b:
+            pad = (bb - b,)
             Q = jnp.concatenate(
-                [Q, jnp.broadcast_to(Q[:1], (bb - b,) + Q.shape[1:])])
-        key = self._key(graph, params, bb, engine=engine)
+                [Q, jnp.broadcast_to(Q[:1], pad + Q.shape[1:])])
+            if per_lane:
+                sel_bits = jnp.concatenate(
+                    [sel_bits,
+                     jnp.broadcast_to(sel_bits[:1], pad + sel_bits.shape[1:])])
+            if sigma_g.ndim == 1:
+                sigma_g = jnp.concatenate(
+                    [sigma_g, jnp.broadcast_to(sigma_g[:1], pad)])
+        key = self._key(graph, params, bb, engine=engine,
+                        per_lane_sel=per_lane)
         prog = self._get(key, fn, graph, Q, sel_bits, params, sigma_g)
         res = prog(graph, Q, sel_bits, sigma_g=sigma_g)
         if bb != b:

@@ -88,6 +88,64 @@ def count_members(bits: jax.Array, ids: jax.Array) -> jax.Array:
     return test(bits, ids).astype(jnp.int32).sum()
 
 
+# -- batched (per-lane) primitives ------------------------------------------
+# A batch of semimasks is packed as uint32[B, W]: one independent bitset per
+# lane. These are the [B, W] counterparts the batched-frontier engine uses
+# when every lane carries its own selection subquery's S (mixed-plan device
+# batches); ids < 0 stay padding lane-wise.
+
+#: bool[B, n] -> uint32[B, W] (``pack`` already maps over leading dims).
+pack_batch = pack
+
+#: ([B, W], [B, K]) -> bool[B, K]: lane b tests its own bitset.
+test_batch = jax.vmap(test)
+
+
+def set_bits_batch(bits: jax.Array, ids: jax.Array) -> jax.Array:
+    """Lane-wise set_bits: ([B, W], [B, K]) -> uint32[B, W].
+
+    Bitwise-identical to ``vmap(set_bits)`` but realized as ONE flat
+    1-D scatter-add over ``[B * W]`` (lane-offset indices) instead of a
+    batched scatter -- XLA CPU lowers per-lane scatters to serial loops,
+    which dominated the batched engine's iteration cost.
+    """
+    bsz, w = bits.shape
+    s = jnp.sort(ids, axis=1)
+    first = (jnp.concatenate([jnp.ones((bsz, 1), bool),
+                              s[:, 1:] != s[:, :-1]], axis=1)
+             if s.shape[1] > 1 else jnp.ones(s.shape, bool))
+    fresh = first & (s >= 0) & ~test_batch(bits, s)
+    safe = jnp.maximum(s, 0)
+    word = jnp.where(fresh, safe >> 5, 0)
+    val = jnp.where(fresh,
+                    jnp.uint32(1) << (safe & 31).astype(jnp.uint32),
+                    jnp.uint32(0))
+    flat_idx = (jnp.arange(bsz, dtype=word.dtype)[:, None] * w
+                + word).reshape(-1)
+    flat = bits.reshape(-1).at[flat_idx].add(val.reshape(-1))
+    return flat.reshape(bsz, w)
+
+#: ([B, W], [B, K]) -> i32[B]: per-lane sigma_l numerators.
+count_members_batch = jax.vmap(count_members)
+
+
+def count_batch(bits: jax.Array) -> jax.Array:
+    """Per-lane popcount total: uint32[..., W] -> i32[...]."""
+    return popcount(bits).astype(jnp.int32).sum(axis=-1)
+
+
+def broadcast_lanes(bits: jax.Array, bsz: int) -> jax.Array:
+    """Normalize a semimask to per-lane form: [W] -> [B, W] (a broadcast
+    view; XLA never materializes the copy), [B, W] passes through after a
+    lane-count check."""
+    if bits.ndim == 1:
+        return jnp.broadcast_to(bits, (bsz,) + bits.shape)
+    if bits.shape[0] != bsz:
+        raise ValueError(f"per-lane semimask has {bits.shape[0]} lanes "
+                         f"but the batch has {bsz}")
+    return bits
+
+
 def full_mask(n: int, value: bool = True) -> jax.Array:
     if value:
         w = n_words(n)

@@ -31,7 +31,8 @@ from repro.core.distances import brute_force_topk, normalize, validate_metric
 from repro.core.graph import HnswGraph
 from repro.core.heuristics import Heuristic
 from repro.core.postfilter import postfilter_search
-from repro.core.quantize import QuantizedStore, dequantize, quantize, rerank
+from repro.core.quantize import (QuantizedStore, dequantize, quantize,
+                                 rerank, rerank_many)
 from repro.core.search import SearchParams, SearchResult, search
 from repro.core.search_batch import resolve_engine
 
@@ -73,6 +74,14 @@ class NavixIndex:
 
     # -- semimasks ----------------------------------------------------------
     def pack_semimask(self, mask) -> jax.Array:
+        """Pack a semimask (or a per-lane stack of semimasks).
+
+        Accepts bool[n] / bool[B, n] (or a list of bool[n] masks), and
+        pre-packed uint32[W] / uint32[B, W]. 2-D results are the
+        per-lane form the batched engine fuses mixed-plan batches with.
+        """
+        if isinstance(mask, (list, tuple)):
+            mask = np.stack([np.asarray(m) for m in mask])
         mask = jnp.asarray(mask)
         if mask.dtype == jnp.uint32:
             want = bitset.n_words(self.graph.n)
@@ -91,7 +100,12 @@ class NavixIndex:
     def full_semimask(self) -> jax.Array:
         return bitset.full_mask(self.graph.n)
 
-    def sigma(self, sel_bits: jax.Array) -> float:
+    def sigma(self, sel_bits: jax.Array):
+        """Selectivity |S|/|V|: float for a [W] mask, f32[B] per lane for
+        a per-lane [B, W] stack."""
+        if sel_bits.ndim == 2:
+            return bitset.count_batch(sel_bits).astype(jnp.float32) / \
+                self.graph.n
         return float(bitset.count(sel_bits)) / self.graph.n
 
     # -- search -------------------------------------------------------------
@@ -135,6 +149,11 @@ class NavixIndex:
         program as a reference oracle (pays the branch union per
         iteration; see the module docs). Both return lane-for-lane
         identical results.
+
+        ``semimask`` may be one shared mask (bool[n] / uint32[W]) or a
+        per-lane stack (bool[B, n], a list of B masks, or uint32[B, W]),
+        in which case lane b searches its own selected set -- the
+        mixed-plan device-batching path.
         """
         fn = resolve_engine(engine)
         efs = efs or 2 * k
@@ -161,6 +180,30 @@ class NavixIndex:
         res = search(qgraph, qv, sel, self._params(k, max(efs, k), heuristic),
                      sigma_g=self.sigma(sel))
         d, ids = rerank(qv, self.graph.vectors, res.ids, k, self.config.metric)
+        return SearchResult(dists=d, ids=ids, stats=res.stats)
+
+    def search_quantized_many(self, Q, k: int = 100, efs: int = 0,
+                              semimask=None, heuristic="adaptive_local",
+                              engine: str = "batched"):
+        """Batched DiskANN-regime search: the int8 store composed with the
+        batched-frontier engine, plus a lane-vectorized exact re-rank.
+
+        Lane-for-lane equivalent to :meth:`search_quantized` per query
+        (``semimask`` accepts the same shared / per-lane forms as
+        :meth:`search_many`).
+        """
+        if self.quantized is None:
+            self.quantized = quantize(self.graph.vectors)
+        fn = resolve_engine(engine)
+        efs = efs or 2 * k
+        qgraph = self.graph._replace(vectors=dequantize(self.quantized))
+        sel = (self.full_semimask() if semimask is None
+               else self.pack_semimask(semimask))
+        Qp = self._prep_query(Q)
+        res = fn(qgraph, Qp, sel, self._params(k, max(efs, k), heuristic),
+                 sigma_g=self.sigma(sel))
+        d, ids = rerank_many(Qp, self.graph.vectors, res.ids, k,
+                             self.config.metric)
         return SearchResult(dists=d, ids=ids, stats=res.stats)
 
     def search_postfilter(self, q, k: int = 100, semimask=None):

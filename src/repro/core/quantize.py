@@ -48,3 +48,11 @@ def rerank(q: jax.Array, vectors: jax.Array, ids: jax.Array, k: int,
     neg, order = jax.lax.top_k(-d, k)
     out_d = -neg
     return out_d, jnp.where(jnp.isfinite(out_d), ids[order], -1)
+
+
+def rerank_many(Q: jax.Array, vectors: jax.Array, ids: jax.Array, k: int,
+                metric: str):
+    """Lane-vectorized exact re-rank: Q[b, d], ids[b, w] ->
+    (dists[b, k], ids[b, k]). Lane b is bitwise ``rerank`` on row b --
+    the batched tail of ``search_quantized_many``."""
+    return jax.vmap(lambda q, i: rerank(q, vectors, i, k, metric))(Q, ids)

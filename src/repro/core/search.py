@@ -383,5 +383,19 @@ def search_batch(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
 
     It pays the branch-union cost per iteration (see module doc) --
     production batch traffic should use the batched engine instead.
+    ``sel_bits`` may be one shared ``[W]`` semimask or a per-lane
+    ``[B, W]`` stack (with ``sigma_g`` scalar or per-lane ``[B]``).
     """
+    per_lane_sigma = sigma_g is not None and jnp.ndim(sigma_g) == 1
+    if sel_bits.ndim == 2:
+        if per_lane_sigma:
+            return jax.vmap(
+                lambda q, s, g: search(graph, q, s, params, g)
+            )(Q, sel_bits, jnp.asarray(sigma_g))
+        return jax.vmap(
+            lambda q, s: search(graph, q, s, params, sigma_g))(Q, sel_bits)
+    if per_lane_sigma:
+        return jax.vmap(
+            lambda q, g: search(graph, q, sel_bits, params, g)
+        )(Q, jnp.asarray(sigma_g))
     return jax.vmap(lambda q: search(graph, q, sel_bits, params, sigma_g))(Q)

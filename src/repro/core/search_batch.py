@@ -16,6 +16,12 @@ This module is a dedicated engine that runs one ``lax.while_loop`` over a
   candidate ids are masked to ``-1`` *before* the shared gathers, so it
   stops contributing distance computations (and dc accounting) while the
   rest of the batch finishes;
+* **per-lane semimasks** -- ``sel_bits`` may be one shared packed bitset
+  ``[W]`` or a per-lane ``[B, W]`` stack, so requests carrying *different*
+  selection subqueries (each at its own selectivity) fuse into one device
+  batch -- the paper's per-query ad-hoc S, batched. All selectivity
+  machinery is lane-local: candidate masking, the sigma_l estimate, and
+  (for adaptive-global) a per-lane ``sigma_g`` vector;
 * **masked unified expansion** -- the three heuristics share one
   ``[B, M + K2]`` candidate layout: first-degree candidates are identical
   across branches (selected & unvisited, in neighbor order), so one
@@ -24,23 +30,35 @@ This module is a dedicated engine that runs one ``lax.while_loop`` over a
   cheap masks (which neighbors get marked visited, which parents seed the
   second hop, what the dc counters charge);
 * **per-query adaptive-local branch selection** -- ``sigma_l`` and the
-  paper's decision rule evaluate vectorized over lanes, so different
-  lanes take different branches in the same iteration at no extra cost;
+  paper's decision rule evaluate vectorized over lanes *against each
+  lane's own S*, so different lanes take different branches in the same
+  iteration at no extra cost;
 * **data-dependent second-hop skip** -- when no live lane picked a
   two-hop branch this iteration, a ``lax.cond`` skips the entire
   ``[B, M, M]`` second-degree stage (exclusive under jit, something the
   vmap path structurally cannot do).
 
 Lane-for-lane, the state transition is identical to the single-query
-``search``: the equivalence suite asserts exactly equal (ids, dists) and
-stats. The distance primitive is ``gathered_dist_batch`` (see
-``repro.kernels.gather_distance.gather_distance_batch_pallas`` for the
-TPU kernel that streams the same [B] id lists through one pallas_call).
+``search`` run with that lane's own semimask: the equivalence suite
+asserts exactly equal (ids, dists) and stats.
+
+The distance primitive is :func:`batch_gather_dist`, which routes through
+``repro.kernels.ops.gather_distance_batch`` -- the batched Pallas
+gather+distance kernel on TPU (interpret mode under
+``REPRO_FORCE_PALLAS=1``), the XLA reference elsewhere. Set
+``REPRO_ENGINE_GATHER=xla`` to pin the pure-jnp path; the choice is baked
+at trace time, so set the env var before the first engine call.
+
+The ``engine_*`` stepping API at the bottom decomposes the same loop into
+resumable chunks (park / refill / step / finalize) for the serving tier's
+continuous-batching scheduler: converged lanes are compacted out and
+refilled from the request queue between device calls, LLM-serving style.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple
 
 import jax
@@ -52,15 +70,7 @@ from repro.core.distances import gathered_dist_batch, point_dist
 from repro.core.graph import HnswGraph
 from repro.core.heuristics import Heuristic, adaptive_rule
 from repro.core.search import (SearchParams, SearchResult, SearchStats,
-                               _dedupe_keep_first, _take_first, search_batch)
-
-# batched bitset primitives: visited is per-lane [B, W]; the semimask is
-# shared across the batch (one selection subquery serves the whole group)
-_test_vis = jax.vmap(bitset.test)                       # [B,W],[B,K] -> [B,K]
-_test_sel = jax.vmap(bitset.test, in_axes=(None, 0))    # [W],  [B,K] -> [B,K]
-_count_sel = jax.vmap(bitset.count_members, in_axes=(None, 0))
-_set_bits = jax.vmap(bitset.set_bits)
-
+                               _dedupe_keep_first, search_batch)
 
 class _BatchState(NamedTuple):
     d: jax.Array          # f32[B, efs]
@@ -72,6 +82,68 @@ class _BatchState(NamedTuple):
     t_dc: jax.Array       # i32[B]
     s_dc: jax.Array       # i32[B]
     picks: jax.Array      # i32[B, 3]
+
+
+# ---------------------------------------------------------------------------
+# distance primitive routing (ROADMAP: batched Pallas path in the engine)
+# ---------------------------------------------------------------------------
+
+GATHER_ENV = "REPRO_ENGINE_GATHER"
+_GATHER_MODES = ("auto", "ops", "pallas", "xla")
+
+
+def gather_backend() -> str:
+    """The engine's gather+distance backend from ``REPRO_ENGINE_GATHER``:
+    "auto"/"ops"/"pallas" route through ``repro.kernels.ops`` (Pallas on
+    TPU, interpret-mode kernels under REPRO_FORCE_PALLAS=1, the XLA ref
+    otherwise); "xla" pins the pure-jnp ``gathered_dist_batch``."""
+    mode = os.environ.get(GATHER_ENV, "auto").lower()
+    if mode not in _GATHER_MODES:
+        raise ValueError(f"{GATHER_ENV}={mode!r}; valid: {_GATHER_MODES}")
+    return mode
+
+
+def batch_gather_dist(Q: jax.Array, vectors: jax.Array, ids: jax.Array,
+                      metric: str) -> jax.Array:
+    """The engine's distance primitive: dist(Q[b], vectors[ids[b]]).
+
+    Routed through the kernels dispatch layer so the batched Pallas
+    gather+distance kernel serves the engine when available; bitwise
+    equal to :func:`repro.core.distances.gathered_dist_batch` on the
+    fallback path. Backend choice is baked at trace time.
+    """
+    if gather_backend() == "xla":
+        return gathered_dist_batch(Q, vectors, ids, metric)
+    from repro.kernels import ops
+    return ops.gather_distance_batch(Q, vectors, ids, metric)
+
+
+def _take_first_batch(elig: jax.Array, values: jax.Array, width: int,
+                      budget=None) -> jax.Array:
+    """Lane-wise first-k compaction: ([B, L], [B, L]) -> int32[B, width].
+
+    Bitwise-identical output to ``vmap(search._take_first)`` (the first
+    up-to-``budget`` eligible values per lane, in order, -1 padded) but
+    scatter- and sort-free: the j-th taken element of a lane sits at the
+    first position whose running take-count reaches j+1, found with a
+    vmapped binary search over the cumsum -- both per-lane scatters and
+    a [B, L] top_k serialize badly on XLA CPU and each dominated the
+    engine's second-degree stage.
+    """
+    cum = jnp.cumsum(elig.astype(jnp.int32), axis=1)
+    if budget is not None:
+        limit = jnp.minimum(budget, width)[:, None]
+    else:
+        limit = width
+    # running count of TAKEN elements == eligible count clipped at the
+    # take limit (an eligible element past the limit is never taken)
+    cum_t = jnp.minimum(cum, limit)
+    targets = jnp.arange(1, width + 1)
+    idx = jax.vmap(
+        lambda c: jnp.searchsorted(c, targets, side="left"))(cum_t)
+    out = jnp.take_along_axis(
+        values, jnp.minimum(idx, values.shape[1] - 1), axis=1)
+    return jnp.where(targets[None, :] <= cum_t[:, -1:], out, -1)
 
 
 def _frontier_min(st: _BatchState):
@@ -105,8 +177,8 @@ def greedy_upper_batch(graph: HnswGraph, Q: jax.Array, metric: str):
         nbr_pos = upper[pos]                               # [B, M_U]
         valid = nbr_pos >= 0
         nbr_ids = jnp.where(valid, upper_ids[jnp.maximum(nbr_pos, 0)], -1)
-        nd = gathered_dist_batch(Q, vectors,
-                                 jnp.where(act[:, None], nbr_ids, -1), metric)
+        nd = batch_gather_dist(Q, vectors,
+                               jnp.where(act[:, None], nbr_ids, -1), metric)
         jj = jnp.argmin(nd, axis=1)
         best = jnp.take_along_axis(nd, jj[:, None], axis=1)[:, 0]
         upd = act & (best < d)
@@ -122,58 +194,49 @@ def greedy_upper_batch(graph: HnswGraph, Q: jax.Array, metric: str):
     return upper_ids[pos], dc
 
 
-def beam_search_lower_batch(
-    graph: HnswGraph,
-    Q: jax.Array,
-    sel_bits: jax.Array,
-    seeds: jax.Array,
-    params: SearchParams,
-    sigma_g=None,
-) -> tuple[jax.Array, jax.Array, SearchStats]:
-    """Search G_L for B queries at once. Returns the full beams
-    (dists[B, efs], ids[B, efs]) ascending, plus per-lane stats.
+# ---------------------------------------------------------------------------
+# shared pieces of the lower-level loop (used by both the one-shot
+# search_many path and the resumable engine_* stepping API, so the two
+# stay in bitwise lockstep)
+# ---------------------------------------------------------------------------
 
-    ``seeds``: int32[B] entry node ids (one per lane).
-    ``sel_bits``: one shared semimask (the group's selection subquery).
+
+def _resolve_branching(sel2: jax.Array, params: SearchParams, sigma_g,
+                       n: int, m_l: int, bsz: int):
+    """Normalize (semimask, heuristic) to the loop's static/per-lane form.
+
+    Returns ``(sel2, mode, global_branch[B])``: ONEHOP_A becomes ONEHOP_S
+    over the full mask; ADAPTIVE_GLOBAL evaluates the paper's rule with a
+    scalar or per-lane sigma_g (defaulting to each lane's own |S|/|V|).
     """
-    efs = params.efs
-    metric = params.metric
     mode = int(params.heuristic)
-    m_l = graph.m_l
-    k2 = params.two_hop_cap or m_l
-    max_iters = params.max_iters or graph.n
-    bsz = Q.shape[0]
-    b_idx = jnp.arange(bsz)
-
-    vectors, lower = graph.vectors, graph.lower
-
     if mode == int(Heuristic.ONEHOP_A):
-        sel_bits = bitset.full_mask(graph.n)
+        sel2 = jnp.broadcast_to(bitset.full_mask(n), sel2.shape)
         mode = int(Heuristic.ONEHOP_S)
-
     if mode == int(Heuristic.ADAPTIVE_GLOBAL):
         if sigma_g is None:
-            sigma_g = bitset.count(sel_bits) / graph.n
+            sigma_g = bitset.count_batch(sel2) / n
         global_branch = adaptive_rule(sigma_g, m_l, params.ub, params.lf)
     else:
         global_branch = jnp.int32(mode if mode <= 2 else 0)
+    return sel2, mode, jnp.broadcast_to(global_branch, (bsz,))
 
-    take_w2 = jax.vmap(lambda e, v: _take_first(e, v, 2 * k2))
-    take_cap = jax.vmap(lambda e, v, bud: _take_first(e, v, k2, budget=bud))
-    dedupe = jax.vmap(_dedupe_keep_first)
 
-    # --- init beams with the per-lane seed ------------------------------
-    seed_d = point_dist(Q, vectors[seeds], metric)
+def _init_state(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
+                seeds: jax.Array, params: SearchParams) -> _BatchState:
+    """Fresh per-lane beams holding only each lane's seed entry point."""
+    bsz, efs = Q.shape[0], params.efs
+    seed_d = point_dist(Q, graph.vectors[seeds], params.metric)
     pad_d = jnp.full((bsz, efs - 1), jnp.inf, seed_d.dtype)
-    st = _BatchState(
+    return _BatchState(
         d=jnp.concatenate([seed_d[:, None], pad_d], axis=1),
         ids=jnp.concatenate(
             [seeds[:, None], jnp.full((bsz, efs - 1), -1, jnp.int32)], axis=1),
         exp=jnp.zeros((bsz, efs), bool),
         sel=jnp.concatenate(
-            [bitset.test(sel_bits, seeds)[:, None],
+            [bitset.test_batch(sel2, seeds[:, None])[:, 0:1],
              jnp.zeros((bsz, efs - 1), bool)], axis=1),
-        visited=_set_bits(
+        visited=bitset.set_bits_batch(
             jnp.zeros((bsz, bitset.n_words(graph.n)), jnp.uint32),
             seeds[:, None]),
         it=jnp.zeros((bsz,), jnp.int32),
@@ -182,42 +245,58 @@ def beam_search_lower_batch(
         picks=jnp.zeros((bsz, 3), jnp.int32),
     )
 
+
+def _loop_fns(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
+              params: SearchParams, mode: int, global_branch: jax.Array):
+    """Build the (lane_cond, body) closures of the batched lower-level
+    loop. ``sel2`` is per-lane ``[B, W]``; ``mode`` is the static resolved
+    heuristic; ``global_branch`` the per-lane fallback branch vector."""
+    efs = params.efs
+    metric = params.metric
+    m_l = graph.m_l
+    k2 = params.two_hop_cap or m_l
+    max_iters = params.max_iters or graph.n
+    bsz = Q.shape[0]
+    b_idx = jnp.arange(bsz)
+    vectors, lower = graph.vectors, graph.lower
+
+    dedupe = jax.vmap(_dedupe_keep_first)
+
     def lane_cond(st: _BatchState):
         _, d_min = _frontier_min(st)
         keep = (d_min < jnp.inf) & (d_min <= _r_max(st, efs))
         return keep & (st.it < max_iters)
 
-    def cond(st: _BatchState):
-        return jnp.any(lane_cond(st))
-
     def body(st: _BatchState) -> _BatchState:
         live = lane_cond(st)                               # [B]
         j, _ = _frontier_min(st)
-        c_min = st.ids[b_idx, j]
+        c_min = jnp.take_along_axis(st.ids, j[:, None], axis=1)[:, 0]
         # retired lanes contribute no candidates to the shared gathers
         nbrs = jnp.where(live[:, None],
                          lower[jnp.maximum(c_min, 0)], -1)  # [B, M_L]
 
         if mode == int(Heuristic.ADAPTIVE_LOCAL):
             deg = (nbrs >= 0).sum(axis=1)
-            sigma_l = _count_sel(sel_bits, nbrs) / jnp.maximum(deg, 1)
+            # each lane estimates sigma_l against its OWN selected set
+            sigma_l = bitset.count_members_batch(sel2, nbrs) / \
+                jnp.maximum(deg, 1)
             branch = adaptive_rule(sigma_l, m_l, params.ub, params.lf)
         else:
-            branch = jnp.broadcast_to(global_branch, (bsz,))
+            branch = global_branch
         is_dir = branch == int(Heuristic.DIRECTED)
 
         # shared first-degree pass: one gather serves every branch
-        visited_t = _test_vis(st.visited, nbrs)            # [B, M]
+        visited_t = bitset.test_batch(st.visited, nbrs)            # [B, M]
         new1 = (nbrs >= 0) & ~visited_t
-        sel1 = _test_sel(sel_bits, nbrs) & ~visited_t      # == cand1 mask
+        sel1 = bitset.test_batch(sel2, nbrs) & ~visited_t  # == cand1 mask
         cand1 = jnp.where(sel1, nbrs, -1)
-        d_all = gathered_dist_batch(Q, vectors, nbrs, metric)
+        d_all = batch_gather_dist(Q, vectors, nbrs, metric)
         d1 = jnp.where(sel1, d_all, jnp.inf)
         n1 = sel1.sum(axis=1)
         # directed marks every neighbor it ordered; the others only the
         # selected candidates they actually inserted
         mark1 = jnp.where(is_dir[:, None], new1, sel1)
-        visited1 = _set_bits(st.visited, jnp.where(mark1, nbrs, -1))
+        visited1 = bitset.set_bits_batch(st.visited, jnp.where(mark1, nbrs, -1))
 
         # second-degree parents: distance-ordered for directed, scan order
         # for blind, none for onehop-s / retired lanes
@@ -233,13 +312,14 @@ def beam_search_lower_batch(
             nb2 = lower[jnp.maximum(parents, 0)]           # [B, M, M]
             flat = jnp.where((parents >= 0)[:, :, None], nb2,
                              -1).reshape(bsz, -1)
-            elig = ((flat >= 0) & _test_sel(sel_bits, flat)
-                    & ~_test_vis(visited1, flat))
-            cand = take_w2(elig, flat)                     # over-take ...
+            elig = ((flat >= 0) & bitset.test_batch(sel2, flat)
+                    & ~bitset.test_batch(visited1, flat))
+            cand = _take_first_batch(elig, flat, 2 * k2)   # over-take ...
             cand = dedupe(cand)                            # ... dedupe ...
-            cand2 = take_cap(cand >= 0, cand, budget)      # ... then cap
-            d2 = gathered_dist_batch(Q, vectors, cand2, metric)
-            return (cand2, d2, _set_bits(visited1, cand2),
+            cand2 = _take_first_batch(cand >= 0, cand, k2,
+                                      budget=budget)       # ... then cap
+            d2 = batch_gather_dist(Q, vectors, cand2, metric)
+            return (cand2, d2, bitset.set_bits_batch(visited1, cand2),
                     (cand2 >= 0).sum(axis=1))
 
         def skip_second(args):
@@ -256,10 +336,13 @@ def beam_search_lower_batch(
         t_add = jnp.where(is_dir, new1.sum(axis=1) + n2, n1 + n2)
         s_add = n1 + n2
 
-        # retire the expanded slot and merge candidates (per lane)
-        exp = st.exp.at[b_idx, j].set(True)
-        d = st.d.at[b_idx, j].set(
-            jnp.where(st.sel[b_idx, j], st.d[b_idx, j], jnp.inf))
+        # retire the expanded slot and merge candidates (per lane);
+        # one-hot mask arithmetic instead of batched .at[] scatters --
+        # XLA CPU serializes per-lane scatters, these are the hot path
+        slot = jnp.arange(efs)[None, :] == j[:, None]      # [B, efs]
+        exp = st.exp | slot
+        sel_j = jnp.take_along_axis(st.sel, j[:, None], axis=1)
+        d = jnp.where(slot & ~sel_j, jnp.inf, st.d)
 
         cand_ids = jnp.concatenate([cand1, cand2], axis=1)
         cand_d = jnp.concatenate([d1, d2], axis=1)
@@ -284,11 +367,17 @@ def beam_search_lower_batch(
             it=st.it + live.astype(jnp.int32),
             t_dc=st.t_dc + jnp.where(live, t_add, 0).astype(jnp.int32),
             s_dc=st.s_dc + jnp.where(live, s_add, 0).astype(jnp.int32),
-            picks=st.picks.at[b_idx, branch].add(live.astype(jnp.int32)),
+            picks=st.picks + ((jnp.arange(3)[None, :] == branch[:, None])
+                              & live[:, None]).astype(jnp.int32),
         )
 
-    st = lax.while_loop(cond, body, st)
+    return lane_cond, body
 
+
+def _extract_results(st: _BatchState, efs: int):
+    """Selected-slot top-k of the final beams: (dists[B, efs], ids[B, efs],
+    per-lane stats with upper_dc left zero for the caller to fill)."""
+    bsz = st.it.shape[0]
     res_d = jnp.where(st.sel & (st.ids >= 0), st.d, jnp.inf)
     neg, order = lax.top_k(-res_d, efs)
     out_d = -neg
@@ -300,14 +389,42 @@ def beam_search_lower_batch(
     return out_d, out_id, stats
 
 
+def beam_search_lower_batch(
+    graph: HnswGraph,
+    Q: jax.Array,
+    sel_bits: jax.Array,
+    seeds: jax.Array,
+    params: SearchParams,
+    sigma_g=None,
+) -> tuple[jax.Array, jax.Array, SearchStats]:
+    """Search G_L for B queries at once. Returns the full beams
+    (dists[B, efs], ids[B, efs]) ascending, plus per-lane stats.
+
+    ``seeds``: int32[B] entry node ids (one per lane).
+    ``sel_bits``: one shared semimask ``[W]`` (the group's selection
+    subquery) or a per-lane stack ``[B, W]`` (each lane its own S).
+    ``sigma_g``: scalar or per-lane ``[B]`` (ADAPTIVE_GLOBAL only).
+    """
+    bsz = Q.shape[0]
+    sel2 = bitset.broadcast_lanes(sel_bits, bsz)
+    sel2, mode, global_branch = _resolve_branching(
+        sel2, params, sigma_g, graph.n, graph.m_l, bsz)
+    lane_cond, body = _loop_fns(graph, Q, sel2, params, mode, global_branch)
+
+    st = _init_state(graph, Q, sel2, seeds, params)
+    st = lax.while_loop(lambda s: jnp.any(lane_cond(s)), body, st)
+    return _extract_results(st, params.efs)
+
+
 @functools.partial(jax.jit, static_argnames=("params",))
 def search_many(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
                 params: SearchParams, sigma_g=None) -> SearchResult:
     """Full 2-level filtered search for a [B, d] query batch.
 
-    Lane-for-lane equivalent to ``search.search`` per query (same ids,
-    dists, and stats), at a fraction of the vmap path's per-iteration
-    cost. The whole batch shares one semimask.
+    Lane-for-lane equivalent to ``search.search`` per query with that
+    lane's own semimask (same ids, dists, and stats), at a fraction of
+    the vmap path's per-iteration cost. ``sel_bits`` is ``[W]`` (shared)
+    or ``[B, W]`` (per-lane, the mixed-plan serving path).
     """
     entry, upper_dc = greedy_upper_batch(graph, Q, params.metric)
     beam_d, beam_id, stats = beam_search_lower_batch(
@@ -319,6 +436,106 @@ def search_many(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
         # +1: the entry vector's own distance at the lower level
         stats=stats._replace(upper_dc=upper_dc.astype(jnp.int32) + 1),
     )
+
+
+# ---------------------------------------------------------------------------
+# resumable stepping API -- the continuous-batching scheduler's device side
+# ---------------------------------------------------------------------------
+# The serving tier holds a fixed [B, efs] beam state across device calls:
+#   parked_state   -> all lanes empty (converged-by-construction)
+#   engine_refill  -> reset a subset of lanes to fresh beams for new
+#                     requests (their own query + their own semimask)
+#   engine_steps   -> run at most n_steps loop iterations; returns the
+#                     per-lane live mask so the host can spot convergence
+#   engine_finalize-> extract per-lane (dists, ids, stats) at any point
+# A lane stepped to convergence through any chunking of engine_steps calls
+# passes through exactly the `search_many` state sequence (converged and
+# parked lanes are frozen by the body's live mask), so per-lane results
+# stay bitwise-identical to the single-query path.
+
+
+def parked_state(n: int, bsz: int, params: SearchParams) -> _BatchState:
+    """An all-parked batch state: every lane is empty and converged."""
+    efs = params.efs
+    return _BatchState(
+        d=jnp.full((bsz, efs), jnp.inf, jnp.float32),
+        ids=jnp.full((bsz, efs), -1, jnp.int32),
+        exp=jnp.ones((bsz, efs), bool),
+        sel=jnp.zeros((bsz, efs), bool),
+        visited=jnp.zeros((bsz, bitset.n_words(n)), jnp.uint32),
+        it=jnp.zeros((bsz,), jnp.int32),
+        t_dc=jnp.zeros((bsz,), jnp.int32),
+        s_dc=jnp.zeros((bsz,), jnp.int32),
+        picks=jnp.zeros((bsz, 3), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def engine_refill(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                  st: _BatchState, upper_dc: jax.Array, refill: jax.Array,
+                  params: SearchParams) -> tuple[_BatchState, jax.Array]:
+    """Reset the lanes flagged in ``refill`` (bool[B]) to fresh beams.
+
+    Refilled lanes run the greedy upper descent for their (new) query and
+    start a fresh lower-level beam over their (new) per-lane semimask;
+    all other lanes pass through bit-identically. Returns the merged
+    state and the updated per-lane ``upper_dc`` accounting.
+    """
+    bsz = Q.shape[0]
+    sel2 = bitset.broadcast_lanes(sel_bits, bsz)
+    sel2, _, _ = _resolve_branching(sel2, params, None, graph.n,
+                                    graph.m_l, bsz)
+    entry, dc = greedy_upper_batch(graph, Q, params.metric)
+    fresh = _init_state(graph, Q, sel2, entry, params)
+
+    def merge(new, old):
+        sel_b = refill.reshape((bsz,) + (1,) * (new.ndim - 1))
+        return jnp.where(sel_b, new, old)
+
+    merged = jax.tree_util.tree_map(merge, fresh, st)
+    return merged, jnp.where(refill, dc.astype(jnp.int32) + 1, upper_dc)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "n_steps"))
+def engine_steps(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                 st: _BatchState, params: SearchParams, n_steps: int,
+                 sigma_g=None) -> tuple[_BatchState, jax.Array]:
+    """Advance the batch by at most ``n_steps`` loop iterations
+    (``n_steps=0``: unbounded -- run to whole-batch convergence, the
+    right call when the request queue is empty and there is nothing to
+    refill between chunks).
+
+    Returns ``(state, live[B])``; a lane with ``live == False`` has
+    converged (or is parked) and is safe to finalize and refill.
+    """
+    bsz = Q.shape[0]
+    sel2 = bitset.broadcast_lanes(sel_bits, bsz)
+    sel2, mode, global_branch = _resolve_branching(
+        sel2, params, sigma_g, graph.n, graph.m_l, bsz)
+    lane_cond, body = _loop_fns(graph, Q, sel2, params, mode, global_branch)
+
+    def cond(c):
+        s, i = c
+        keep = jnp.any(lane_cond(s))
+        return keep & (i < n_steps) if n_steps else keep
+
+    def chunk_body(c):
+        s, i = c
+        return body(s), i + 1
+
+    st, _ = lax.while_loop(cond, chunk_body, (st, jnp.int32(0)))
+    return st, lane_cond(st)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def engine_finalize(st: _BatchState, upper_dc: jax.Array,
+                    params: SearchParams) -> SearchResult:
+    """Extract per-lane results from a (possibly partially converged)
+    batch state: full-efs beams, the host slices each lane to its own k."""
+    out_d, out_id, stats = _extract_results(st, params.efs)
+    return SearchResult(
+        dists=out_d, ids=out_id,
+        stats=stats._replace(upper_dc=upper_dc.astype(jnp.int32)))
 
 
 #: the multi-row execution engines (name -> raw jitted entry point);

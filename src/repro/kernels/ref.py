@@ -27,15 +27,20 @@ def distance_matrix(Q: jax.Array, X: jax.Array, metric: str) -> jax.Array:
 
 def gather_distance(q: jax.Array, vectors: jax.Array, ids: jax.Array,
                     metric: str) -> jax.Array:
-    """f32[k]: dist(q, vectors[ids]); ids < 0 -> +inf."""
+    """f32[k]: dist(q, vectors[ids]); ids < 0 -> +inf.
+
+    Elementwise forms match ``repro.core.distances`` exactly, so the
+    engines stay bitwise-identical when routed through this fallback.
+    """
     rows = vectors[jnp.maximum(ids, 0)].astype(jnp.float32)
     qf = q.astype(jnp.float32)
     if metric == "l2":
-        d = jnp.sum((rows - qf) ** 2, axis=-1)
+        diff = rows - qf
+        d = jnp.sum(diff * diff, axis=-1)
     elif metric == "cos":
-        d = 1.0 - rows @ qf
+        d = 1.0 - jnp.sum(rows * qf, axis=-1)
     elif metric == "dot":
-        d = -(rows @ qf)
+        d = -jnp.sum(rows * qf, axis=-1)
     else:
         raise ValueError(metric)
     return jnp.where(ids >= 0, d, jnp.inf)
@@ -43,11 +48,16 @@ def gather_distance(q: jax.Array, vectors: jax.Array, ids: jax.Array,
 
 def gather_distance_batch(Q: jax.Array, vectors: jax.Array, ids: jax.Array,
                           metric: str) -> jax.Array:
-    """f32[b,k]: dist(Q[b], vectors[ids[b]]); ids < 0 -> +inf."""
+    """f32[b,k]: dist(Q[b], vectors[ids[b]]); ids < 0 -> +inf.
+
+    Same elementwise forms as ``distances.gathered_dist_batch`` (see
+    :func:`gather_distance`).
+    """
     rows = vectors[jnp.maximum(ids, 0)].astype(jnp.float32)  # [b, k, d]
     Qf = Q.astype(jnp.float32)[:, None, :]
     if metric == "l2":
-        d = jnp.sum((rows - Qf) ** 2, axis=-1)
+        diff = rows - Qf
+        d = jnp.sum(diff * diff, axis=-1)
     elif metric == "cos":
         d = 1.0 - jnp.sum(rows * Qf, axis=-1)
     elif metric == "dot":

@@ -5,15 +5,20 @@ unified :class:`repro.api.NavixDB` pipeline:
   * requests (query vector + declarative plan + k) accumulate in a queue;
     plans may be full ``KnnSearch`` trees (built with ``repro.api.Q``) or
     bare selection subqueries (legacy form, wrapped automatically);
-  * a scheduler drains requests grouped by plan (same plan => same
-    prefilter AND same compiled program) into batched ``NavixDB.execute``
-    calls served by the batched-frontier engine
-    (``repro.core.search_batch``): one while-loop per group batch,
-    converged queries masked out, one shared expansion per iteration;
-    the shared AOT program cache means repeated plan shapes never
-    retrace, and the group's prefilter runs exactly once, its cost
-    amortized across the group's requests;
-  * per-request latency is recorded (queue + execution + amortized
+  * the default scheduler is **continuous batching** (the LLM-serving
+    pattern applied to beam search): requests with *different* plans fuse
+    into one device batch via per-lane ``[B, W]`` semimasks -- each lane
+    searches its own selection subquery's S at its own selectivity, with
+    per-lane k/efs capped to the batch max -- and a host-side step loop
+    (``repro.core.search_batch.engine_steps``) periodically compacts
+    converged lanes out and refills them from the queue, so long-tail
+    convergence gaps never strand SIMD lanes. Every distinct selection
+    subquery is prefiltered exactly once per drain; its cost is shared by
+    the requests that carry it (never amortized across unrelated plans);
+  * ``scheduler="grouped"`` keeps the PR-2 reference path: requests
+    grouped by identical plan into ``NavixDB.execute`` calls (one shared
+    semimask per group batch, whole-batch convergence);
+  * per-request latency is recorded (queue + execution + own-plan
     prefilter share) and summarized as p50/p95/p99 -- the paper's latency
     protocol (warm-up + repeats) is implemented in the benchmark harness
     on top of this engine.
@@ -33,8 +38,10 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.api.db import NavixDB
+from repro.api.plan_compile import _bucket
 from repro.core.navix import NavixIndex
-from repro.query.operators import KnnSearch, Plan, is_selection
+from repro.query.operators import (KnnSearch, Plan, is_selection,
+                                   output_table, split_pipeline)
 from repro.storage.columnar import GraphStore
 
 
@@ -54,9 +61,10 @@ class Response:
     dists: np.ndarray
     queue_ms: float
     exec_ms: float
-    prefilter_ms: float           # this request's amortized share of the
-                                  # group's (shared) prefilter wall time
-    sigma: float
+    prefilter_ms: float           # this request's share of its OWN plan's
+                                  # prefilter wall time (shared only with
+                                  # requests carrying the same Q_S)
+    sigma: float                  # this request's own |S| / |V|
 
 
 @dataclasses.dataclass
@@ -77,6 +85,18 @@ class SearchEngine:
     engine: str = "batched"                # grouped drains run the
                                            # batched-frontier engine;
                                            # "vmap" = reference oracle
+    scheduler: str = "continuous"          # "continuous": mixed-plan fusing
+                                           # with per-lane semimasks + lane
+                                           # refill; "grouped": the PR-2
+                                           # per-plan reference path
+    step_iters: int = 32                   # device loop iterations per
+                                           # continuous-batching step call
+                                           # while requests are still queued
+                                           # (an empty queue runs each step
+                                           # to whole-batch convergence)
+    refill_threshold: int = 0              # min free lanes before a refill
+                                           # (compaction) is worth a device
+                                           # call; 0 = auto (batch size / 2)
 
     def __post_init__(self):
         if self.db is None:
@@ -108,14 +128,30 @@ class SearchEngine:
         return rid
 
     def drain(self) -> list[Response]:
-        """Serve everything queued; batches requests with identical plans."""
-        groups: dict[Any, list[Request]] = defaultdict(list)
+        """Serve everything queued.
+
+        ``scheduler="continuous"`` (default) fuses requests with
+        *different* plans into shared device batches (per-lane semimasks,
+        continuous lane refill); ``scheduler="grouped"`` batches only
+        identical plans (the reference path). Every submitted rid is
+        answered exactly once either way.
+        """
+        if self.scheduler not in ("continuous", "grouped"):
+            # validate BEFORE popping the queue: a bad config must not
+            # silently discard every queued request
+            raise ValueError(f"unknown scheduler {self.scheduler!r}; "
+                             f"valid: ('continuous', 'grouped')")
+        reqs: list[Request] = []
         while self._queue:
-            r = self._queue.popleft()
+            reqs.append(self._queue.popleft())
+        if self.scheduler == "continuous":
+            return self._drain_continuous(reqs)
+        groups: dict[Any, list[Request]] = defaultdict(list)
+        for r in reqs:
             groups[r.plan].append(r)
         out: list[Response] = []
-        for plan, reqs in groups.items():
-            out.extend(self._serve_group(plan, reqs))
+        for plan, group in groups.items():
+            out.extend(self._serve_group(plan, group))
         return out
 
     # -- internals ------------------------------------------------------------
@@ -140,6 +176,163 @@ class SearchEngine:
             return KnnSearch(child=plan, k=k, efs=self.efs,
                              heuristic=self.heuristic)
         return plan                # already declarative
+
+    # -- continuous batching (mixed-plan fusing + lane refill) ---------------
+    def _drain_continuous(self, reqs: list[Request]) -> list[Response]:
+        """Fuse mixed-plan requests into shared device batches.
+
+        Requests fuse when they target the same index with the same
+        heuristic -- their selection subqueries (and k/efs) may all
+        differ: each lane carries its own packed semimask, k/efs are
+        capped to the batch max, and every distinct Q_S is prefiltered
+        once. Per fuse group, a host step loop advances the batch in
+        ``step_iters``-iteration chunks, finalizes converged lanes, and
+        refills freed lanes from the queue (``refill_threshold`` sets how
+        many free lanes make a compaction worth the device call).
+        """
+        fuse: dict[Any, list[tuple[Request, Any]]] = defaultdict(list)
+        for r in reqs:
+            parts = split_pipeline(r.plan)
+            table = output_table(r.plan, self.db.store)
+            entry = self.db._resolve(parts.knn, table)
+            fuse[(entry.name, parts.knn.heuristic)].append((r, parts))
+        out: list[Response] = []
+        for (name, heuristic), items in fuse.items():
+            out.extend(self._serve_fused(self.db.catalog[name].index,
+                                         heuristic, items))
+        return out
+
+    def _serve_fused(self, idx: NavixIndex, heuristic: str,
+                     items: list[tuple[Request, Any]]) -> list[Response]:
+        import jax.numpy as jnp
+
+        from repro.core import bitset
+        from repro.core.search_batch import (engine_finalize, engine_refill,
+                                             engine_steps, parked_state)
+
+        graph = idx.graph
+        n = graph.n
+
+        # one prefilter per DISTINCT selection subquery; its wall time is
+        # shared only by the requests that carry it
+        sel_info: dict[Any, list] = {}   # Q_S -> [packed_row, sigma, ms, cnt]
+        full_row = np.asarray(idx.full_semimask())
+        for r, parts in items:
+            s = parts.selection
+            if s not in sel_info:
+                if s is None:
+                    sel_info[s] = [full_row, 1.0, 0.0, 0]
+                else:
+                    qres = self.db.prefilter(s)
+                    sel_info[s] = [np.asarray(idx.pack_semimask(qres.mask)),
+                                   qres.selectivity, qres.seconds * 1e3, 0]
+            sel_info[s][3] += 1
+
+        # per-lane k/efs, capped to the batch max: one static program
+        # serves every fused request; lanes slice their own k at the end
+        k_cap = max(p.knn.k for _, p in items)
+        efs_cap = max(max(p.knn.efs or 2 * p.knn.k for _, p in items), k_cap)
+        params = idx._params(k_cap, efs_cap, heuristic)
+
+        # selectivity-sorted admission: lanes running together then carry
+        # similar-sigma subqueries, so whole step chunks pass in which no
+        # live lane picks a two-hop branch and the engine's lax.cond
+        # skips the [B, M, M] second-degree stage entirely -- mixing one
+        # low-sigma lane into a high-sigma batch would re-enable it for
+        # everyone. Lane-for-lane results are order-independent.
+        items = sorted(items,
+                       key=lambda rp: -sel_info[rp[1].selection][1])
+
+        # prep every query in ONE vectorized device call (a per-request
+        # _prep_query inside the refill loop costs a dispatch each)
+        prepped = np.asarray(idx._prep_query(
+            np.stack([r.query for r, _ in items])), np.float32)
+
+        bsz = _bucket(max(1, min(self.max_batch, len(items))))
+        Qh = np.zeros((bsz, graph.dim), np.float32)
+        selh = np.zeros((bsz, bitset.n_words(n)), np.uint32)
+        sigh = np.ones((bsz,), np.float32)
+        lane_req: list[Optional[tuple[Request, Any]]] = [None] * bsz
+        lane_t0 = [0.0] * bsz
+        pending = deque((r, parts, prepped[j])
+                        for j, (r, parts) in enumerate(items))
+
+        st = parked_state(n, bsz, params)
+        udc = jnp.zeros((bsz,), jnp.int32)
+        Qj, selj, sigj = (jnp.asarray(Qh), jnp.asarray(selh),
+                          jnp.asarray(sigh))
+
+        refill_thr = self.refill_threshold or max(1, bsz // 2)
+        responses: list[Response] = []
+        done: dict[int, float] = {}    # converged lane -> t_done (state
+                                       # stays frozen until flushed)
+
+        def flush():
+            """Finalize + emit every converged-but-unemitted lane (one
+            device call for any number of them), freeing their lanes."""
+            if not done:
+                return
+            fin = engine_finalize(st, udc, params)
+            ids, dists = np.asarray(fin.ids), np.asarray(fin.dists)
+            for i, t_done in done.items():
+                r, parts = lane_req[i]
+                _, sigma, pf_ms, cnt = sel_info[parts.selection]
+                pf_share = pf_ms / cnt
+                queue_ms = (lane_t0[i] - r.t_enqueue) * 1e3
+                exec_ms = (t_done - lane_t0[i]) * 1e3
+                self.latencies_ms.append(queue_ms + exec_ms + pf_share)
+                k_r = parts.knn.k
+                responses.append(Response(
+                    rid=r.rid, ids=ids[i, :k_r], dists=dists[i, :k_r],
+                    queue_ms=queue_ms, exec_ms=exec_ms,
+                    prefilter_ms=pf_share, sigma=float(sigma)))
+                lane_req[i] = None
+            done.clear()
+
+        while pending or any(lane_req):
+            n_running = sum(1 for i in range(bsz)
+                            if lane_req[i] is not None) - len(done)
+            n_free = bsz - n_running - len(done)
+            if pending and (n_free + len(done) >= refill_thr
+                            or n_running == 0):
+                flush()                 # compact converged lanes out ...
+                refill = np.zeros(bsz, bool)
+                for i in range(bsz):    # ... and refill from the queue
+                    if not pending:
+                        break
+                    if lane_req[i] is not None:
+                        continue
+                    r, parts, qrow = pending.popleft()
+                    row, sigma, _, _ = sel_info[parts.selection]
+                    Qh[i] = qrow
+                    selh[i] = row
+                    sigh[i] = sigma
+                    lane_req[i] = (r, parts)
+                    lane_t0[i] = time.perf_counter()
+                    refill[i] = True
+                Qj, selj, sigj = (jnp.asarray(Qh), jnp.asarray(selh),
+                                  jnp.asarray(sigh))
+                st, udc = engine_refill(graph, Qj, selj, st, udc,
+                                        jnp.asarray(refill), params)
+            elif n_running == 0:
+                # queue empty (a non-empty queue with zero running lanes
+                # always takes the refill branch): only frozen converged
+                # lanes remain
+                break
+
+            # with an empty queue there is nothing to refill between
+            # chunks: run the remaining lanes straight to convergence
+            n_steps = self.step_iters if pending else 0
+            st, live = engine_steps(graph, Qj, selj, st, params,
+                                    n_steps, sigma_g=sigj)
+            live_np = np.asarray(live)
+            now = time.perf_counter()
+            for i in range(bsz):
+                if (lane_req[i] is not None and i not in done
+                        and not live_np[i]):
+                    done[i] = now
+        flush()
+        return responses
 
     def _serve_group(self, plan: Plan, reqs: list[Request]) -> list[Response]:
         Q = np.stack([r.query for r in reqs])

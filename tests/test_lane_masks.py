@@ -1,0 +1,254 @@
+"""Per-lane semimasks + the continuous-batching scheduler.
+
+The mixed-plan batching contract: with a ``[B, W]`` per-lane semimask,
+lane b of the batched engine is bitwise-identical (ids, dists, dc stats)
+to single-query ``search`` run with lane b's own mask -- including lanes
+at sigma=0 and sigma=1 fused into the same batch -- and the serving
+scheduler answers every submitted rid exactly once while refilling lanes.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.search import search, search_batch
+from repro.core.search_batch import search_many
+
+HEURISTICS = ["onehop_s", "directed", "blind", "adaptive_g",
+              "adaptive_local", "onehop_a"]
+SIGMAS = [1.0, 0.4, 0.1, 0.0, 0.03, 0.7]
+
+
+def _lane_masks(n, sigmas, seed=0):
+    rng = np.random.default_rng(seed)
+    masks = []
+    for s in sigmas:
+        if s >= 1.0:
+            masks.append(np.ones(n, bool))
+        elif s <= 0.0:
+            masks.append(np.zeros(n, bool))
+        else:
+            masks.append(rng.random(n) < s)
+    return np.stack(masks)
+
+
+# -- engine-level equivalence ------------------------------------------------
+
+
+@pytest.mark.parametrize("heuristic", HEURISTICS)
+def test_per_lane_matches_single_with_own_mask(index, queries, heuristic):
+    """Lane b == single-query search with lane b's own semimask, exactly
+    (ids, dists AND stats), for every heuristic -- with sigma=0 and
+    sigma=1 lanes fused into the same batch."""
+    n = index.graph.n
+    masks = _lane_masks(n, SIGMAS, seed=3)
+    sel2 = bitset.pack(jnp.asarray(masks))
+    sigmas = jnp.asarray(masks.mean(axis=1), jnp.float32)
+    Q = jnp.asarray(queries[:len(SIGMAS)])
+    params = index._params(8, 32, heuristic)
+
+    batched = search_many(index.graph, Q, sel2, params, sigma_g=sigmas)
+    for b in range(len(SIGMAS)):
+        single = search(index.graph, Q[b], sel2[b], params,
+                        sigma_g=sigmas[b])
+        np.testing.assert_array_equal(
+            np.asarray(batched.ids[b]), np.asarray(single.ids),
+            err_msg=f"ids diverge at lane {b} ({heuristic})")
+        np.testing.assert_array_equal(
+            np.asarray(batched.dists[b]), np.asarray(single.dists),
+            err_msg=f"dists diverge at lane {b} ({heuristic})")
+        for f in ("iters", "t_dc", "s_dc", "upper_dc", "picks"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(batched.stats, f)[b]),
+                np.asarray(getattr(single.stats, f)),
+                err_msg=f"stats.{f} diverges at lane {b} ({heuristic})")
+
+
+def test_per_lane_vmap_oracle_agrees(index, queries):
+    masks = _lane_masks(index.graph.n, [0.5, 0.1, 1.0, 0.0], seed=7)
+    sel2 = bitset.pack(jnp.asarray(masks))
+    sigmas = jnp.asarray(masks.mean(axis=1), jnp.float32)
+    Q = jnp.asarray(queries[:4])
+    params = index._params(6, 24, "adaptive_local")
+    a = search_many(index.graph, Q, sel2, params, sigma_g=sigmas)
+    b = search_batch(index.graph, Q, sel2, params, sigma_g=sigmas)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+def test_sigma_zero_lane_empty_sigma_one_lane_full(index, queries):
+    masks = _lane_masks(index.graph.n, [0.0, 1.0], seed=1)
+    sel2 = bitset.pack(jnp.asarray(masks))
+    res = index.search_many(queries[:2], k=5, efs=20, semimask=masks)
+    assert (np.asarray(res.ids[0]) == -1).all()
+    assert (np.asarray(res.ids[1]) >= 0).all()
+    assert sel2.shape[0] == 2
+
+
+def test_navix_search_many_accepts_mask_list(index, queries):
+    masks = _lane_masks(index.graph.n, [0.3, 0.6, 0.1], seed=5)
+    a = index.search_many(queries[:3], k=6, efs=30, semimask=masks)
+    b = index.search_many(queries[:3], k=6, efs=30,
+                          semimask=[masks[0], masks[1], masks[2]])
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+# -- hypothesis sweep over mixed per-lane selectivities ----------------------
+
+
+def test_hypothesis_mixed_selectivities(index, queries):
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    n = index.graph.n
+    params = index._params(6, 24, "adaptive_local")
+
+    @given(sigmas=st.lists(
+        st.sampled_from([0.0, 0.02, 0.08, 0.25, 0.6, 1.0]),
+        min_size=4, max_size=4),
+        seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def run(sigmas, seed):
+        masks = _lane_masks(n, sigmas, seed=seed)
+        sel2 = bitset.pack(jnp.asarray(masks))
+        sg = jnp.asarray(masks.mean(axis=1), jnp.float32)
+        Q = jnp.asarray(queries[:4])
+        batched = search_many(index.graph, Q, sel2, params, sigma_g=sg)
+        for b in range(4):
+            single = search(index.graph, Q[b], sel2[b], params,
+                            sigma_g=sg[b])
+            np.testing.assert_array_equal(np.asarray(batched.ids[b]),
+                                          np.asarray(single.ids))
+            np.testing.assert_array_equal(np.asarray(batched.dists[b]),
+                                          np.asarray(single.dists))
+            # every returned id is in that lane's own S
+            ids = np.asarray(batched.ids[b])
+            assert masks[b][ids[ids >= 0]].all()
+
+    run()
+
+
+# -- NavixDB mixed-plan execution -------------------------------------------
+
+
+def test_db_execute_with_per_query_masks(index, queries):
+    from repro.api import NavixDB
+
+    db = NavixDB()
+    db.register_index("default", index)
+    n = index.graph.n
+    masks = [np.arange(n) < n // 4, None, np.arange(n) % 2 == 0]
+    from repro.query.operators import KnnSearch
+    rs = db.execute(KnnSearch(child=None, table="default", k=5, efs=30),
+                    query=np.asarray(queries[:3]), masks=masks)
+    assert rs.ids.shape == (3, 5)
+    assert rs.sigmas is not None and rs.sigmas.shape == (3,)
+    assert rs.sigmas[0] == pytest.approx(0.25, abs=0.01)
+    assert rs.sigmas[1] == pytest.approx(1.0)
+    ids0 = rs.ids[0][rs.ids[0] >= 0]
+    assert (ids0 < n // 4).all()
+    ids2 = rs.ids[2][rs.ids[2] >= 0]
+    assert (ids2 % 2 == 0).all()
+    # masks= and a plan-level Q_S are mutually exclusive
+    from repro.query.operators import Filter, NodeScan
+    sel = Filter(NodeScan("default"), "cID", "<", value=3)
+    with pytest.raises(ValueError, match="selection subquery"):
+        db.execute(KnnSearch(child=sel, k=5), query=np.asarray(queries[:3]),
+                   masks=masks)
+    with pytest.raises(ValueError, match="one entry per query row"):
+        db.execute(KnnSearch(child=None, table="default", k=5),
+                   query=np.asarray(queries[:3]), masks=masks[:2])
+
+
+def test_program_cache_per_lane_arm_no_collision(index, queries):
+    """The same plan shape under shared vs per-lane semimasks compiles two
+    distinct programs (per_lane_sel key arm) and each re-executes with
+    zero new compilations."""
+    from repro.api.plan_compile import ProgramCache
+
+    cache = ProgramCache()
+    Q = jnp.asarray(queries[:4])
+    params = index._params(5, 20, "adaptive_local")
+    shared = index.full_semimask()
+    masks = _lane_masks(index.graph.n, [0.2, 0.5, 1.0, 0.1], seed=2)
+    per_lane = bitset.pack(jnp.asarray(masks))
+    sg = jnp.asarray(masks.mean(axis=1), jnp.float32)
+
+    cache.search_many(index.graph, Q, shared, params, 1.0)
+    assert cache.stats.misses == 1
+    cache.search_many(index.graph, Q, per_lane, params, sg)
+    assert cache.stats.misses == 2, "per-lane must be a distinct program"
+    cache.search_many(index.graph, Q, shared, params, 1.0)
+    cache.search_many(index.graph, Q, per_lane, params, sg)
+    assert cache.stats.misses == 2 and cache.stats.hits == 2
+
+
+# -- kernels.ops routing of the engine's distance primitive ------------------
+
+
+def test_batch_gather_dist_backends_agree_bitwise(index):
+    """The kernels.ops route (ref fallback on CPU) must match the pure-jnp
+    gathered_dist_batch bitwise -- the engines' lane identity depends on
+    it -- and the env toggle must reject unknown values."""
+    import jax.numpy as jnp
+
+    from repro.core.distances import gathered_dist_batch
+    from repro.core.search_batch import GATHER_ENV, batch_gather_dist, \
+        gather_backend
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    V = index.graph.vectors
+    Q = jnp.asarray(rng.normal(size=(5, V.shape[1])).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, index.graph.n, (5, 9)).astype(np.int32))
+    for metric in ("l2", "cos", "dot"):
+        a = np.asarray(ops.gather_distance_batch(Q, V, ids, metric))
+        b = np.asarray(gathered_dist_batch(Q, V, ids, metric))
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(
+            np.asarray(batch_gather_dist(Q, V, ids, metric)), b)
+
+    import os
+    old = os.environ.get(GATHER_ENV)
+    try:
+        os.environ[GATHER_ENV] = "nope"
+        with pytest.raises(ValueError, match=GATHER_ENV):
+            gather_backend()
+        os.environ[GATHER_ENV] = "xla"
+        assert gather_backend() == "xla"
+        np.testing.assert_array_equal(
+            np.asarray(batch_gather_dist(Q, V, ids, "l2")),
+            np.asarray(gathered_dist_batch(Q, V, ids, "l2")))
+    finally:
+        if old is None:
+            os.environ.pop(GATHER_ENV, None)
+        else:
+            os.environ[GATHER_ENV] = old
+
+
+# -- quantized + batched -----------------------------------------------------
+
+
+def test_search_quantized_many_matches_single(index, queries):
+    masks = _lane_masks(index.graph.n, [0.5, 0.15, 1.0, 0.05], seed=9)
+    res = index.search_quantized_many(queries[:4], k=6, efs=30,
+                                      semimask=masks)
+    for b in range(4):
+        single = index.search_quantized(queries[b], k=6, efs=30,
+                                        semimask=masks[b])
+        np.testing.assert_array_equal(np.asarray(res.ids[b]),
+                                      np.asarray(single.ids))
+        np.testing.assert_array_equal(np.asarray(res.dists[b]),
+                                      np.asarray(single.dists))
+
+
+def test_search_quantized_many_shared_mask(index, queries):
+    mask = _lane_masks(index.graph.n, [0.3], seed=4)[0]
+    res = index.search_quantized_many(queries[:3], k=5, efs=25, semimask=mask)
+    ids = np.asarray(res.ids)
+    assert ids.shape == (3, 5)
+    assert mask[ids[ids >= 0]].all()

@@ -14,6 +14,87 @@ def engine(index):
     return SearchEngine(index=index, store=store, efs=60)
 
 
+def _mixed_plan_engine(index, **kw):
+    store = GraphStore()
+    store.add_node_table("Chunk", index.graph.n,
+                         {"cID": np.arange(index.graph.n)})
+    return SearchEngine(index=index, store=store, **kw)
+
+
+def test_continuous_scheduler_mixed_plans_exactly_once(index, queries):
+    """Mixed-plan fusing under refill: more requests than lanes, every
+    plan distinct, every rid answered exactly once -- and each response
+    is bitwise the single-query search over that request's own S."""
+    n = index.graph.n
+    eng = _mixed_plan_engine(index, efs=30, max_batch=4,
+                             scheduler="continuous", step_iters=3,
+                             refill_threshold=1)
+    cutoffs = [n // 10, n // 5, n // 3, n // 2, 2 * n // 3, n,
+               n // 8, n // 4, 3 * n // 4, n // 2, n // 6, n]
+    rids = {}
+    for j, cut in enumerate(cutoffs):
+        plan = Filter(NodeScan("Chunk"), "cID", "<", value=cut)
+        rid = eng.submit(queries[j % len(queries)], plan=plan, k=6)
+        rids[rid] = (j, cut)
+    responses = eng.drain()
+    assert sorted(r.rid for r in responses) == sorted(rids), \
+        "every rid must be answered exactly once"
+    for r in responses:
+        j, cut = rids[r.rid]
+        mask = np.arange(n) < cut
+        assert r.sigma == pytest.approx(cut / n, abs=1e-6), \
+            "Response.sigma must be the request's OWN selectivity"
+        single = index.search(queries[j % len(queries)], k=6, efs=30,
+                              semimask=mask)
+        np.testing.assert_array_equal(r.ids, np.asarray(single.ids),
+                                      err_msg=f"rid {r.rid} (cut={cut})")
+        np.testing.assert_array_equal(r.dists, np.asarray(single.dists))
+    assert eng.latency_summary()["n"] == len(cutoffs)
+
+
+def test_continuous_matches_grouped_reference(index, queries):
+    """Same mixed workload through both schedulers: identical answers."""
+    n = index.graph.n
+    plans = [Filter(NodeScan("Chunk"), "cID", "<", value=c)
+             for c in (n // 4, n // 2, n, n // 3)]
+    results = {}
+    for sched in ("continuous", "grouped"):
+        eng = _mixed_plan_engine(index, efs=24, max_batch=8,
+                                 scheduler=sched)
+        rids = [eng.submit(queries[j], plan=plans[j % len(plans)], k=5)
+                for j in range(8)]
+        by = {r.rid: r for r in eng.drain()}
+        results[sched] = [by[rid] for rid in rids]
+    for a, b in zip(results["continuous"], results["grouped"]):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+        assert a.sigma == pytest.approx(b.sigma)
+
+
+def test_per_lane_k_capped_to_batch_max(index, queries):
+    """Requests with different k fuse into one batch; each response is
+    sliced to its own k."""
+    n = index.graph.n
+    eng = _mixed_plan_engine(index, efs=40, max_batch=8,
+                             scheduler="continuous")
+    plan_a = Filter(NodeScan("Chunk"), "cID", "<", value=n // 2)
+    plan_b = Filter(NodeScan("Chunk"), "cID", "<", value=n // 3)
+    ra = eng.submit(queries[0], plan=plan_a, k=3)
+    rb = eng.submit(queries[1], plan=plan_b, k=9)
+    by = {r.rid: r for r in eng.drain()}
+    assert by[ra].ids.shape == (3,)
+    assert by[rb].ids.shape == (9,)
+    mask_b = np.arange(n) < n // 3
+    assert mask_b[by[rb].ids[by[rb].ids >= 0]].all()
+
+
+def test_unknown_scheduler_rejected(index, queries):
+    eng = _mixed_plan_engine(index, scheduler="nope")
+    eng.submit(queries[0], k=3)
+    with pytest.raises(ValueError, match="scheduler"):
+        eng.drain()
+
+
 def test_batched_requests(engine, queries):
     plan = Filter(NodeScan("Chunk"), "cID", "<", value=engine.index.graph.n // 2)
     rids = [engine.submit(q, plan=plan, k=5) for q in queries]
