@@ -12,16 +12,28 @@ Both schedulers serve the identical request stream through the same
 QPS, latency percentiles, and the continuous/grouped speedup go to
 ``experiments/bench/BENCH_serving.json``.
 
-Claim gated by validate(): continuous-batching QPS >= 1.3x the
+The ``--shards`` arm serves the identical stream on a
+:class:`~repro.core.distributed.ShardedNavix` (continuous scheduler,
+per-lane ``[S, B, W]`` semimasks) in a subprocess with placeholder host
+devices, reports sharded-vs-unsharded QPS, and checks every sharded
+answer against the *unsharded batched engine* run per shard over
+shard-restricted masks and merged host-side -- zero drift is a gated
+claim.
+
+Claims gated by validate(): continuous-batching QPS >= 1.3x the
 per-group-drain path (>= 1.0x sanity floor in REPRO_BENCH_QUICK mode,
 where the problem is too small for the margin to be stable), with
-identical per-request answers.
+identical per-request answers; and zero sharded answer drift.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import pathlib
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -41,6 +53,7 @@ EFS = 30
 MAX_BATCH = 16
 STEP_ITERS = 32
 SPEEDUP_FLOOR = 1.0 if common.QUICK else 1.3
+SHARDS = 2                       # the --shards arm run() spawns by default
 #: request selectivities -- each request gets its own predicate
 SELECTIVITIES = (0.05, 0.1, 0.2, 0.35, 0.5, 0.75, 0.9, 1.0)
 
@@ -69,16 +82,27 @@ def _serve(engine: SearchEngine, reqs) -> tuple[float, dict]:
     return wall, {rid: by[rid] for rid in rids}
 
 
-def run() -> list[dict]:
+def _workload() -> tuple[int, int, int, int]:
+    """(n, d, n_req, reps) -- shared by the main run and the --shards arm
+    so both serve the identical request stream."""
     n, d = (1500, 16) if common.QUICK else (4000, 32)
     n_req = 24 if common.QUICK else 128
     reps = 2 if common.QUICK else 5
+    return n, d, n_req, reps
+
+
+def _request_stream(n: int, d: int, n_req: int):
     X, _, centers = gaussian_mixture(n, d, 10, seed=0)
+    rng = np.random.default_rng(11)
+    return X, _requests(n, centers, d, n_req, rng)
+
+
+def run() -> list[dict]:
+    n, d, n_req, reps = _workload()
+    X, reqs = _request_stream(n, d, n_req)
     index = common.cached_index(f"bench_search_{n}",
                                 X, NavixConfig(m_u=8, ef_construction=64,
                                                metric="l2", seed=0))
-    rng = np.random.default_rng(11)
-    reqs = _requests(n, centers, d, n_req, rng)
 
     def make_engine(sched: str) -> SearchEngine:
         store = GraphStore()
@@ -113,7 +137,6 @@ def run() -> list[dict]:
             "p50_ms": round(lat["p50_ms"], 3),
             "p95_ms": round(lat["p95_ms"], 3),
         })
-    common.emit(rows, "serving_schedulers")
 
     mismatched = sum(
         1 for rid in answers["grouped"]
@@ -122,6 +145,14 @@ def run() -> list[dict]:
     by = {r["sched"]: r for r in rows}
     speedup = round(by["continuous"]["qps"] / max(by["grouped"]["qps"], 1e-9),
                     3)
+
+    # --shards arm: the same stream on a ShardedNavix, in a subprocess
+    # with placeholder host devices (this process keeps its one device)
+    sharded = _spawn_sharded(SHARDS)
+    if "row" in sharded:
+        rows.append(sharded["row"])
+    common.emit(rows, "serving_schedulers")
+
     JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
     JSON_OUT.write_text(json.dumps({
         "workload": {"n": n, "d": d, "k": K, "efs": EFS,
@@ -133,15 +164,112 @@ def run() -> list[dict]:
         "rows": rows,
         "continuous_over_grouped_qps": speedup,
         "mismatched_answers": mismatched,
+        "sharded": sharded,
     }, indent=2) + "\n")
     for r in rows:
         r["_mismatched"] = mismatched
+        r["_sharded"] = sharded
     return rows
+
+
+def _spawn_sharded(shards: int) -> dict:
+    """Run the --shards arm in a subprocess with enough host devices and
+    return its JSON payload ({"error": ...} on failure). The parent's
+    XLA_FLAGS / PYTHONPATH are preserved (device-count flag replaced, not
+    clobbered) so both arms run under the same XLA configuration."""
+    import re
+
+    flag = f"--xla_force_host_platform_device_count={max(4, shards)}"
+    xla = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                 os.environ.get("XLA_FLAGS", ""))
+    parent_pp = os.environ.get("PYTHONPATH", "")
+    env = dict(os.environ,
+               PYTHONPATH="src" + (os.pathsep + parent_pp if parent_pp
+                                   else ""),
+               HOME=os.environ.get("HOME", "/tmp"),
+               XLA_FLAGS=f"{xla} {flag}".strip())
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serving",
+         "--shards", str(shards)],
+        timeout=3600, capture_output=True, text=True,
+        cwd=pathlib.Path(__file__).parent.parent, env=env)
+    if out.returncode != 0:
+        return {"shards": shards, "error": out.stderr[-500:]}
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run_sharded(shards: int) -> dict:
+    """The --shards arm body (run with >= ``shards`` host devices).
+
+    Serves the identical mixed-predicate stream through the continuous
+    scheduler on (a) the unsharded index and (b) a ShardedNavix, and
+    checks every sharded answer against the unsharded batched engine run
+    per shard over shard-restricted masks + a host lexicographic merge.
+    """
+    import jax
+
+    from repro.core.distributed import ShardedNavix, per_shard_reference
+
+    n, d, n_req, reps = _workload()
+    X, reqs = _request_stream(n, d, n_req)
+    cfg = NavixConfig(m_u=8, ef_construction=64, metric="l2", seed=0)
+    index = common.cached_index(f"bench_search_{n}", X, cfg)
+    mesh = jax.make_mesh((1, shards), ("data", "model"))
+    sn = ShardedNavix.build(X, cfg, mesh)
+
+    def make_engine(idx) -> SearchEngine:
+        store = GraphStore()
+        store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+        return SearchEngine(index=idx, store=store, efs=EFS,
+                            max_batch=MAX_BATCH, scheduler="continuous",
+                            step_iters=STEP_ITERS)
+
+    engines = {"unsharded": make_engine(index), "sharded": make_engine(sn)}
+    for engine in engines.values():
+        _serve(engine, reqs)                        # warm-up compile
+        engine.latencies_ms.clear()
+    walls: dict[str, list[float]] = {s: [] for s in engines}
+    answers: dict[str, dict] = {}
+    for _ in range(reps):
+        for name, engine in engines.items():
+            wall, got = _serve(engine, reqs)
+            walls[name].append(wall)
+            answers[name] = got
+
+    # zero-drift check against the SAME oracle the equivalence suite
+    # asserts lane-for-lane identity with: the unsharded batched engine
+    # per shard over shard-restricted masks + host lexicographic merge
+    params = sn._params(K, EFS, "adaptive_local")
+    Q = np.stack([q for q, _ in reqs])
+    masks = np.stack([np.arange(n) < plan.value for _, plan in reqs])
+    _, ref_ids, _ = per_shard_reference(sn, Q, masks, params)
+    drift = 0
+    rids = sorted(answers["sharded"])
+    for j, rid in enumerate(rids):
+        if not np.array_equal(answers["sharded"][rid].ids, ref_ids[j]):
+            drift += 1
+
+    med = {name: float(np.median(walls[name])) for name in engines}
+    lat = engines["sharded"].latency_summary()
+    row = {"sched": "continuous", "shards": shards, "n_req": n_req,
+           "qps": round(n_req / med["sharded"], 2),
+           "drain_ms": round(med["sharded"] * 1e3, 2),
+           "p50_ms": round(lat["p50_ms"], 3),
+           "p95_ms": round(lat["p95_ms"], 3)}
+    return {
+        "shards": shards,
+        "row": row,
+        "qps_sharded": row["qps"],
+        "qps_unsharded": round(n_req / med["unsharded"], 2),
+        "sharded_over_unsharded_qps": round(
+            med["unsharded"] / med["sharded"], 3),
+        "answer_drift_vs_unsharded_engine": drift,
+    }
 
 
 def validate(rows: list[dict]) -> list[str]:
     fails: list[str] = []
-    by = {r["sched"]: r for r in rows}
+    by = {r["sched"]: r for r in rows if not r.get("shards")}
     if "grouped" not in by or "continuous" not in by:
         return ["missing scheduler rows"]
     speedup = by["continuous"]["qps"] / max(by["grouped"]["qps"], 1e-9)
@@ -152,4 +280,33 @@ def validate(rows: list[dict]) -> list[str]:
     if rows[0].get("_mismatched"):
         fails.append(f"{rows[0]['_mismatched']} requests got different "
                      f"answers from the two schedulers")
+    sharded = rows[0].get("_sharded", {})
+    if "error" in sharded:
+        fails.append(f"sharded serving arm failed: {sharded['error']}")
+    elif sharded.get("answer_drift_vs_unsharded_engine"):
+        fails.append(
+            f"{sharded['answer_drift_vs_unsharded_engine']} sharded "
+            f"responses drifted from the per-shard unsharded-engine "
+            f"reference merge")
     return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=0,
+                    help="run ONLY the sharded arm in this process "
+                         "(needs >= that many host devices) and print "
+                         "its JSON payload")
+    args = ap.parse_args()
+    if args.shards:
+        print(json.dumps(run_sharded(args.shards)))
+        return
+    fails = validate(run())
+    for f in fails:
+        print("CLAIM-FAIL:", f)
+    if fails:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

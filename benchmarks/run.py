@@ -17,9 +17,10 @@ paper-claim validation summary. Set REPRO_BENCH_QUICK=1 for a fast pass.
   serving   mixed-plan continuous batching  (per-lane semimasks; emits
                                             experiments/bench/BENCH_serving.json)
 
-``--check-trend`` diffs the current BENCH_search.json against a previous
-artifact (``--baseline PATH``) and exits non-zero on a >20% QPS
-regression (``--trend-tol`` overrides); see benchmarks/trend.py.
+``--check-trend`` diffs the current BENCH_search.json AND
+BENCH_serving.json against previous artifacts (``--baseline`` /
+``--serving-baseline``) and exits non-zero on a >20% QPS regression in
+either (``--trend-tol`` overrides); see benchmarks/trend.py.
 """
 
 from __future__ import annotations
@@ -35,25 +36,37 @@ def main() -> None:
                     help="comma list: fig8,adaptive,postfilter,construction,"
                          "quantized,kernels,distributed,search,serving")
     ap.add_argument("--check-trend", action="store_true",
-                    help="diff BENCH_search.json QPS against --baseline and "
-                         "fail on regressions > --trend-tol (no suites run)")
+                    help="diff BENCH_search.json + BENCH_serving.json QPS "
+                         "against baselines and fail on regressions > "
+                         "--trend-tol (no suites run)")
     ap.add_argument("--baseline",
                     default="experiments/bench/prev/BENCH_search.json",
                     help="previous BENCH_search.json artifact to diff against")
     ap.add_argument("--current", default=None,
                     help="bench JSON to check (default: the quick/full "
                          "BENCH_search.json the last run emitted)")
+    ap.add_argument("--serving-baseline",
+                    default="experiments/bench/prev/BENCH_serving.json",
+                    help="previous BENCH_serving.json artifact to diff "
+                         "against")
+    ap.add_argument("--serving-current", default=None,
+                    help="serving bench JSON to check (default: the "
+                         "quick/full BENCH_serving.json the last run "
+                         "emitted)")
     ap.add_argument("--trend-tol", type=float, default=None,
                     help="allowed fractional QPS drop (default 0.20)")
     args = ap.parse_args()
 
     if args.check_trend:
-        from benchmarks import bench_search, trend
-        current = args.current or str(bench_search.JSON_OUT)
-        sys.exit(trend.check_trend(
-            current, args.baseline,
-            tol=args.trend_tol if args.trend_tol is not None
-            else trend.DEFAULT_TOL))
+        from benchmarks import bench_search, bench_serving, trend
+        tol = (args.trend_tol if args.trend_tol is not None
+               else trend.DEFAULT_TOL)
+        rc = trend.check_trend(args.current or str(bench_search.JSON_OUT),
+                               args.baseline, tol=tol)
+        rc_serving = trend.check_trend(
+            args.serving_current or str(bench_serving.JSON_OUT),
+            args.serving_baseline, tol=tol)
+        sys.exit(rc or rc_serving)
 
     from benchmarks import (bench_adaptive, bench_construction,
                             bench_distributed, bench_heuristics,

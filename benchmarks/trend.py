@@ -1,12 +1,14 @@
 """QPS trend check: diff a BENCH_*.json against a previous artifact.
 
 ``python -m benchmarks.run --check-trend`` loads the current
-``experiments/bench/BENCH_search.json`` (or ``--current PATH``) and a
-baseline from a previous run (``--baseline PATH``, e.g. the artifact CI
-downloaded from the last main build) and fails when any (engine, B) row's
-QPS regressed by more than ``--trend-tol`` (default 20%). Speedups and
-new rows never fail; a missing baseline is a skip, not a failure, so the
-first run of a fresh branch stays green.
+``experiments/bench/BENCH_search.json`` AND ``BENCH_serving.json`` (or
+``--current`` / ``--serving-current`` paths) and baselines from a
+previous run (``--baseline`` / ``--serving-baseline``, e.g. the
+artifacts CI downloaded from the last main build) and fails when any
+(engine, B) / (sched, shards) row's QPS regressed by more than
+``--trend-tol`` (default 20%). Speedups and new rows never fail; a
+missing baseline is a skip, not a failure, so the first run of a fresh
+branch stays green.
 """
 
 from __future__ import annotations
@@ -19,12 +21,15 @@ DEFAULT_TOL = 0.20
 #: workload keys that must match for a QPS comparison to be meaningful
 _WORKLOAD_KEYS = ("n", "d", "k", "efs", "quick")
 
+#: measured (run-varying) fields excluded from a row's identity
+_METRIC_KEYS = ("qps", "p50_ms", "p95_ms", "p99_ms", "recall", "mean_ms",
+                "drain_ms")
+
 
 def _row_key(row: dict) -> tuple:
     """Identity of one measured configuration within a bench file."""
     return tuple(sorted((k, v) for k, v in row.items()
-                 if k not in ("qps", "p50_ms", "p95_ms", "p99_ms", "recall",
-                              "mean_ms")))
+                 if k not in _METRIC_KEYS))
 
 
 def compare(current: dict, baseline: dict,
@@ -47,7 +52,8 @@ def compare(current: dict, baseline: dict,
         if prev["qps"] <= 0:
             continue
         ratio = row["qps"] / prev["qps"]
-        label = ", ".join(f"{k}={row[k]}" for k in ("engine", "B", "sched")
+        label = ", ".join(f"{k}={row[k]}"
+                          for k in ("engine", "B", "sched", "shards")
                           if k in row)
         if ratio < 1.0 - tol:
             fails.append(f"QPS regression at ({label}): "

@@ -12,31 +12,73 @@ reported like a production tier. ``SearchEngine(scheduler="grouped")``
 selects the per-plan reference path (which also exercises the shared
 compiled-program cache through NavixDB.execute).
 
+``--shards S`` serves the same workload on a sharded index
+(:class:`repro.core.distributed.ShardedNavix`): the chunk embeddings
+split into S shard-local HNSW subgraphs, every request's semimask
+becomes a ``[S, B, W_local]`` per-lane stack, and per-shard candidates
+merge into the global top-k in one device op. The demo ends by killing
+one shard mid-service: responses degrade gracefully (flagged
+``degraded``, no dead-shard ids) instead of failing.
+
     PYTHONPATH=src python examples/search_service.py [--requests 60]
+    PYTHONPATH=src python examples/search_service.py --shards 2
 """
 
 import argparse
-
-import numpy as np
-
-from repro.api import NavixDB, Q
-from repro.core.navix import NavixConfig
-from repro.data.synthetic import make_queries, make_wiki_like
-from repro.serving.engine import SearchEngine
+import os
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve on a ShardedNavix with this many shards "
+                         "(spawns placeholder host devices)")
     args = ap.parse_args()
+    if args.shards:
+        # must be set before jax initializes its backend; a pre-existing
+        # XLA_FLAGS keeps its other options, and an existing (too-small)
+        # device count is raised rather than trusted
+        import re
+        need = max(4, args.shards)
+        prev = os.environ.get("XLA_FLAGS", "")
+        m = re.search(r"--xla_force_host_platform_device_count=(\d+)", prev)
+        if m is None or int(m.group(1)) < need:
+            prev = re.sub(r"--xla_force_host_platform_device_count=\d+",
+                          "", prev)
+            os.environ["XLA_FLAGS"] = (
+                f"{prev} --xla_force_host_platform_device_count={need}"
+            ).strip()
+
+    import numpy as np
+
+    from repro.api import NavixDB, Q
+    from repro.core.navix import NavixConfig
+    from repro.data.synthetic import make_queries, make_wiki_like
+    from repro.serving.engine import SearchEngine
 
     print("== building the Wiki-like graph + index catalog ==")
     data = make_wiki_like(n_person=300, n_resource=1200, d=48, seed=0)
     db = NavixDB(data.store)
-    _, stats = db.create_index(
-        "chunk_emb", "Chunk", column="embedding", vectors=data.embeddings,
-        config=NavixConfig(m_u=8, ef_construction=64, metric="cos"))
-    print(f"chunks={data.n_chunks} build={stats.seconds:.1f}s")
+    config = NavixConfig(m_u=8, ef_construction=64, metric="cos")
+    if args.shards:
+        import jax
+
+        from repro.core.distributed import ShardedNavix
+        mesh = jax.make_mesh((1, args.shards), ("data", "model"))
+        sn = ShardedNavix.build(data.embeddings.astype(np.float32), config,
+                                mesh)
+        db.store.add_vector_column("Chunk", "embedding",
+                                   data.embeddings.astype(np.float32))
+        db.register_index("chunk_emb", sn, table="Chunk",
+                          column="embedding")
+        print(f"chunks={data.n_chunks} shards={sn.n_shards} "
+              f"n_local={sn.n_local}")
+    else:
+        _, stats = db.create_index(
+            "chunk_emb", "Chunk", column="embedding",
+            vectors=data.embeddings, config=config)
+        print(f"chunks={data.n_chunks} build={stats.seconds:.1f}s")
 
     engine = SearchEngine(db=db, efs=80)
 
@@ -74,6 +116,23 @@ def main():
     # the program cache serves the grouped path + NavixDB.execute; the
     # continuous scheduler runs the stepping engine's own jit programs
     print("program cache:", db.programs.info())
+
+    if args.shards:
+        sn = db.index("chunk_emb")
+        print(f"== quorum demo: killing shard {sn.n_shards - 1} ==")
+        alive = np.ones(sn.n_shards, bool)
+        alive[-1] = False
+        engine.alive = alive
+        for i in range(8):
+            engine.submit(queries[i % len(queries)],
+                          plan=plans["id_filter"], k=10)
+        degraded = engine.drain()
+        dead_lo = (sn.n_shards - 1) * sn.n_local
+        leaked = sum(int(((r.ids >= dead_lo) & (r.ids >= 0)).sum())
+                     for r in degraded)
+        print(f"served {len(degraded)} requests degraded="
+              f"{all(r.degraded for r in degraded)} "
+              f"dead-shard ids leaked={leaked} (must be 0)")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.api.plan_compile import ProgramCache
 from repro.core.build import BuildStats
+from repro.core.distributed import ShardedNavix
 from repro.core.navix import NavixConfig, NavixIndex
 from repro.query.operators import (KnnSearch, Plan, QueryResult,
                                    evaluate, output_table, split_pipeline)
@@ -99,11 +100,12 @@ class ResultSet:
 
 @dataclasses.dataclass
 class IndexEntry:
-    """One catalog entry: a named HNSW index over (table, vector column)."""
+    """One catalog entry: a named HNSW index over (table, vector column).
+    ``index`` is a NavixIndex or a ShardedNavix (shard-and-merge)."""
     name: str
     table: str
     column: str
-    index: NavixIndex
+    index: object
 
 
 class NavixDB:
@@ -137,17 +139,21 @@ class NavixDB:
         self._register(IndexEntry(name, table, column, index))
         return index, stats
 
-    def register_index(self, name: str, index: NavixIndex,
+    def register_index(self, name: str, index,
                        table: Optional[str] = None,
                        column: str = "embedding") -> IndexEntry:
         """Adopt an already-built index (checkpoint restore, bench cache).
 
-        When ``table`` is omitted, the catalog binds to the unique node
-        table with a matching row count, creating a bare one if needed.
+        ``index`` may be a :class:`NavixIndex` or a
+        :class:`~repro.core.distributed.ShardedNavix` (sharded entries
+        route ``execute`` through the sharded batched engine). When
+        ``table`` is omitted, the catalog binds to the unique node table
+        with a matching row count, creating a bare one if needed.
         """
         if name in self.catalog:
             raise ValueError(f"index {name!r} already exists")
-        n = index.graph.n
+        n = (index.n_total if isinstance(index, ShardedNavix)
+             else index.graph.n)
         if table is None:
             matches = [t for t, nt in self.store.nodes.items() if nt.n == n]
             if len(matches) > 1:
@@ -187,7 +193,7 @@ class NavixDB:
 
     def execute(self, plan, query: Optional[np.ndarray] = None,
                 max_batch: int = 0, engine: str = "batched",
-                masks=None) -> ResultSet:
+                masks=None, alive=None) -> ResultSet:
         """Run a full plan. ``plan`` is a Plan tree or a ``Q`` builder.
 
         ``query`` binds the vector(s) for the KnnSearch operator: [d] for
@@ -205,6 +211,11 @@ class NavixDB:
         batched); ``ResultSet.sigmas`` carries the per-lane
         selectivities. The plan must not also carry a selection subquery
         -- the caller has already run the per-request Q_S's.
+
+        When the resolved catalog entry is a ShardedNavix, the kNN
+        operator runs the sharded batched engine (every shard searched
+        at once, one global merge); ``alive`` (bool[S], default all
+        alive) quorum-masks the merge so dead shards contribute nothing.
         """
         # builders carry their own bound query vector
         bound = getattr(plan, "bound_query", None)
@@ -244,27 +255,40 @@ class NavixDB:
             mask = np.stack([np.ones(n, bool) if m is None
                              else np.asarray(m, bool) for m in masks])
         return self._execute_knn(parts, table, query, mask,
-                                 sigma, timings, max_batch, engine)
+                                 sigma, timings, max_batch, engine, alive)
 
     def _execute_knn(self, parts, table, query, mask, sigma, timings,
-                     max_batch, engine="batched") -> ResultSet:
+                     max_batch, engine="batched", alive=None) -> ResultSet:
         knn = parts.knn
         entry = self._resolve(knn, table)
         idx = entry.index
-        if idx.graph.n != self.store.node(table).n:
-            raise ValueError(f"index {entry.name!r} covers {idx.graph.n} "
+        sharded = isinstance(idx, ShardedNavix)
+        n_rows = idx.n_total if sharded else idx.graph.n
+        if n_rows != self.store.node(table).n:
+            raise ValueError(f"index {entry.name!r} covers {n_rows} "
                              f"rows but table {table!r} has "
                              f"{self.store.node(table).n}")
+        if sharded and engine != "batched":
+            raise ValueError(f"sharded index {entry.name!r} runs the "
+                             f"batched engine only, not {engine!r}")
+        if alive is not None and not sharded:
+            raise ValueError(f"alive= quorum-masks sharded indexes; "
+                             f"{entry.name!r} is unsharded")
 
         # stage 2: semimask packing (the SIP handoff to the device)
         t0 = time.perf_counter()
-        sel = idx.full_semimask() if mask is None else idx.pack_semimask(mask)
+        if sharded:
+            sel = (idx.full_semimask() if mask is None
+                   else idx.shard_semimask(mask))
+        else:
+            sel = (idx.full_semimask() if mask is None
+                   else idx.pack_semimask(mask))
         sel.block_until_ready()
         timings.pack_ms = (time.perf_counter() - t0) * 1e3
 
         # per-lane masks carry per-lane selectivities
         sigmas = None
-        if sel.ndim == 2:
+        if sel.ndim == (3 if sharded else 2):
             sigmas = np.asarray(idx.sigma(sel))
             sigma = float(sigmas.mean())
 
@@ -273,7 +297,10 @@ class NavixDB:
         params = idx._params(k, knn.efs or 2 * k, knn.heuristic)
         t0 = time.perf_counter()
         single = query.ndim == 1
-        if single:
+        if sharded:
+            res = self._run_sharded(idx, query, sel, params, max_batch,
+                                    alive)
+        elif single:
             res = self.programs.search(idx.graph, idx._prep_query(query),
                                        sel, params, sigma)
         else:
@@ -295,6 +322,37 @@ class NavixDB:
         return ResultSet(table=table, ids=ids, dists=dists, columns=columns,
                          sigma=sigma, timings=timings, stats=res.stats,
                          mask=mask, sigmas=sigmas)
+
+    def _run_sharded(self, sn, query, sel, params, max_batch, alive):
+        """Sharded kNN through the program cache's ``sharded`` arm; a
+        single query is lifted to a one-lane batch and sliced back."""
+        import jax
+        import jax.numpy as jnp
+
+        single = query.ndim == 1
+        Q = jnp.atleast_2d(sn._prep_query(query))
+        alive = (np.ones(sn.n_shards, bool) if alive is None
+                 else np.asarray(alive, bool))
+        if alive.shape != (sn.n_shards,):
+            raise ValueError(f"alive mask has shape {alive.shape}; index "
+                             f"has {sn.n_shards} shards")
+        alive_j = jnp.asarray(alive)
+
+        def run(Qc, selc):
+            return self.programs.search_sharded(sn, Qc, selc, alive_j,
+                                                params)
+
+        if not max_batch or Q.shape[0] <= max_batch:
+            res = run(Q, sel)
+        else:
+            chunks = [run(Q[i:i + max_batch],
+                          sel[:, i:i + max_batch] if sel.ndim == 3 else sel)
+                      for i in range(0, Q.shape[0], max_batch)]
+            res = jax.tree_util.tree_map(
+                lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+                *chunks)
+        return (jax.tree_util.tree_map(lambda a: a[0], res) if single
+                else res)
 
     def _run_batch(self, idx, query, sel, params, sigma, max_batch,
                    engine="batched"):

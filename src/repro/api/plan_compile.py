@@ -11,7 +11,9 @@ layer makes compilation explicit:
   ``(n, dim, k, efs, heuristic, metric, batch_shape, engine)`` plus the
   minor search knobs -- so executing a cached program can never retrace;
   the ``engine`` arm keeps the batched-frontier engine ("batched") and
-  the vmap reference oracle ("vmap") as distinct programs;
+  the vmap reference oracle ("vmap") as distinct programs, and the
+  ``sharded`` arm does the same for ShardedNavix shard_map programs
+  (:meth:`ProgramCache.search_sharded`);
 * batch shapes are bucketed to the next power of two (queries are padded
   with their first row and the result sliced back), so a serving engine
   draining groups of 17, then 19, then 23 requests compiles once, not
@@ -54,6 +56,8 @@ class ProgramKey(NamedTuple):
                                    # two batch engines are distinct programs
     per_lane_sel: bool = False     # [B, W] per-lane semimasks (mixed-plan
                                    # batches) vs one shared [W] mask
+    sharded: int = 0               # shard count S of a ShardedNavix
+                                   # program (0 = unsharded)
 
 
 @dataclasses.dataclass
@@ -177,6 +181,61 @@ class ProgramCache:
                         per_lane_sel=per_lane)
         prog = self._get(key, fn, graph, Q, sel_bits, params, sigma_g)
         res = prog(graph, Q, sel_bits, sigma_g=sigma_g)
+        if bb != b:
+            res = jax.tree_util.tree_map(lambda a: a[:b], res)
+        return res
+
+    def search_sharded(self, sn, Q: jax.Array, sel_bits: jax.Array,
+                       alive: jax.Array, params: SearchParams
+                       ) -> SearchResult:
+        """Sharded batched search through the cache (the ``sharded`` key
+        arm). The program is the ShardedNavix's shard_map search: the
+        batched-frontier engine on every shard + one global merge.
+
+        ``sel_bits`` is shared ``[S, W]`` or per-lane ``[S, B, W]``
+        (padded along the lane axis with the batch bucket). Stored as
+        the memoized jitted callable rather than an AOT ``Compiled`` --
+        shard_map programs re-dispatch safely when input shardings vary,
+        and the jit cache still guarantees zero retraces at a fixed plan
+        shape (asserted via the hit/miss stats).
+        """
+        per_lane = sel_bits.ndim == 3
+        b = Q.shape[0]
+        bb = _bucket(b)
+        if bb != b:
+            pad = bb - b
+            Q = jnp.concatenate(
+                [Q, jnp.broadcast_to(Q[:1], (pad,) + Q.shape[1:])])
+            if per_lane:
+                sel_bits = jnp.concatenate(
+                    [sel_bits,
+                     jnp.broadcast_to(sel_bits[:, :1],
+                                      (sel_bits.shape[0], pad,
+                                       sel_bits.shape[2]))], axis=1)
+        key = ProgramKey(
+            n=sn.n_total, dim=sn.dim, k=params.k, efs=params.efs,
+            heuristic=params.heuristic, metric=params.metric,
+            batch_shape=bb,
+            knobs=(params.ub, params.lf, params.two_hop_cap,
+                   params.max_iters, sn.n_local,
+                   int(sn.graphs.lower.shape[-1]),
+                   int(sn.graphs.upper_ids.shape[-1]),
+                   int(sn.graphs.upper.shape[-1]),
+                   sn.model_axis, sn.data_axis,
+                   int(sn.mesh.shape[sn.data_axis]),
+                   # mesh/device identity: the cached program closes over
+                   # the mesh, so two same-shape indexes on different
+                   # device groups must never share an entry
+                   tuple(d.id for d in sn.mesh.devices.flat)),
+            engine="batched", per_lane_sel=per_lane, sharded=sn.n_shards)
+        prog = self._programs.get(key)
+        if prog is None:
+            self.stats.misses += 1
+            prog = sn._program("search", params, per_lane=per_lane)
+            self._programs[key] = prog
+        else:
+            self.stats.hits += 1
+        res = prog(sn.graphs, Q, sel_bits, alive)
         if bb != b:
             res = jax.tree_util.tree_map(lambda a: a[:b], res)
         return res

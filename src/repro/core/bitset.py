@@ -125,8 +125,19 @@ def set_bits_batch(bits: jax.Array, ids: jax.Array) -> jax.Array:
     flat = bits.reshape(-1).at[flat_idx].add(val.reshape(-1))
     return flat.reshape(bsz, w)
 
-#: ([B, W], [B, K]) -> i32[B]: per-lane sigma_l numerators.
-count_members_batch = jax.vmap(count_members)
+def count_members_batch(bits: jax.Array, ids: jax.Array) -> jax.Array:
+    """Leading-dim-matched membership count: ([..., W], [..., K]) -> i32[...].
+
+    The per-lane sigma_l numerators. Any number of leading dims is
+    supported as long as they match (``[B, W]`` lanes, ``[S, B, W]``
+    shard-stacked lanes, ...); integer-exact against ``vmap(count_members)``
+    on the 2-D form. ids < 0 are padding and never count.
+    """
+    safe = jnp.maximum(ids, 0)
+    word = safe >> 5
+    bit = (safe & 31).astype(jnp.uint32)
+    hit = (jnp.take_along_axis(bits, word, axis=-1) >> bit) & jnp.uint32(1)
+    return jnp.where(ids >= 0, hit.astype(jnp.int32), 0).sum(axis=-1)
 
 
 def count_batch(bits: jax.Array) -> jax.Array:
@@ -143,6 +154,19 @@ def broadcast_lanes(bits: jax.Array, bsz: int) -> jax.Array:
     if bits.shape[0] != bsz:
         raise ValueError(f"per-lane semimask has {bits.shape[0]} lanes "
                          f"but the batch has {bsz}")
+    return bits
+
+
+def broadcast_shard_lanes(bits: jax.Array, bsz: int) -> jax.Array:
+    """Normalize a shard-stacked semimask to per-lane form: [S, W] ->
+    [S, B, W] (a broadcast view, like :func:`broadcast_lanes`),
+    [S, B, W] passes through after a lane-count check."""
+    if bits.ndim == 2:
+        s, w = bits.shape
+        return jnp.broadcast_to(bits[:, None, :], (s, bsz, w))
+    if bits.shape[1] != bsz:
+        raise ValueError(f"per-lane sharded semimask has {bits.shape[1]} "
+                         f"lanes but the batch has {bsz}")
     return bits
 
 

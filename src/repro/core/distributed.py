@@ -2,15 +2,40 @@
 
 Production layout (DESIGN.md Section 4): the vector set V is split into
 S shards over the mesh's "model" axis; each shard builds its OWN HNSW
-subgraph over its slice (shard-and-merge ANN). A filtered query runs
-adaptive-local search on every shard in parallel (queries sharded over
-"data", replicated over "model"), then per-shard top-k lists are merged
-into the global top-k (one small all-gather over "model").
+subgraph over its slice (shard-and-merge ANN). Searches are served by the
+**batched-frontier engine** (``repro.core.search_batch``) running inside
+``shard_map`` on every shard at once: ``Q`` is a ``[B, d]`` batch and the
+semimask is either one shared ``[S, W_local]`` bitset (the broadcast fast
+path) or a per-lane ``[S, B, W_local]`` stack -- each lane of each shard
+searches its own selection subquery's S, with lane-local selectivity
+estimates taken against that shard's own slice of S. Mixed-plan request
+batches therefore fuse on a sharded index exactly like they do on a
+single-device one.
+
+Per-shard ``[S, B, k]`` candidate lists are merged into the global top-k
+in one device op: a single lexicographic ``lax.sort`` over the flattened
+shard axis keyed on (distance, global id), quorum-masked so dead shards
+contribute ``+inf`` rows. Tie-breaking toward the smaller global id makes
+the merge deterministic and invariant to shard order (property-tested in
+``tests/test_distributed_batch.py``).
 
 Straggler mitigation = quorum merge: searches carry an ``alive`` shard
 mask; dead/slow shards contribute empty results and the merge proceeds
 when >= quorum shards responded -- recall degrades gracefully instead of
-latency collapsing (tested in tests/test_distributed_search.py).
+latency collapsing.
+
+The ``*_program`` surface at the bottom mirrors the resumable stepping
+API of ``search_batch`` (park / refill / step / finalize) with every
+state leaf carrying a leading shard dim, so the serving tier's
+continuous-batching scheduler runs unchanged over a sharded index --
+refill masks simply gain the shard dimension.
+
+Padded rows: :meth:`ShardedNavix.build` pads the vector set to a
+multiple of S with copies of the last row. Padded ids are excluded from
+every packed semimask AND structurally guarded in the merge path (a
+returned local id whose global id falls past ``n_total`` is dropped), so
+a caller-built all-ones local bitset -- or the ONEHOP_A branch, which
+ignores the semimask -- can never surface a padded id.
 """
 
 from __future__ import annotations
@@ -22,15 +47,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import bitset
+from repro.core import search_batch as sb
 from repro.core.build import BuildParams, build
+from repro.core.distances import normalize
 from repro.core.graph import HnswGraph
 from repro.core.heuristics import Heuristic
 from repro.core.navix import NavixConfig
-from repro.core.search import SearchParams, beam_search_lower, greedy_upper
+from repro.core.search import SearchParams, SearchResult, SearchStats
 
 # jax >= 0.6 exposes top-level jax.shard_map (check_vma=); older releases
 # ship it under jax.experimental.shard_map with the check_rep= spelling
@@ -46,6 +74,78 @@ def _stack_graphs(graphs: list[HnswGraph]) -> HnswGraph:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *graphs)
 
 
+def merge_shard_topk(d: jax.Array, ids: jax.Array, k: int
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard candidates ``([S, B, L], [S, B, L])`` into the
+    global top-k ``([B, k], [B, k])`` in one device op.
+
+    A single lexicographic ``lax.sort`` over the flattened shard axis,
+    keyed on (distance, global id): equal distances break toward the
+    smaller id, so the merge is deterministic and invariant to shard
+    order. Padded/dead slots carry ``+inf`` and sort last; any result
+    slot left at ``+inf`` comes back with id ``-1``. Requires
+    ``k <= S * L``.
+    """
+    s, b, l = d.shape
+    if k > s * l:
+        raise ValueError(f"k={k} > S*L={s * l} merge candidates")
+    d2 = jnp.swapaxes(d, 0, 1).reshape(b, s * l)
+    i2 = jnp.swapaxes(ids, 0, 1).reshape(b, s * l)
+    d_sorted, i_sorted = lax.sort((d2, i2), dimension=1, num_keys=2)
+    out_d = d_sorted[:, :k]
+    return out_d, jnp.where(jnp.isfinite(out_d), i_sorted[:, :k], -1)
+
+
+def per_shard_reference(sn: "ShardedNavix", Q, masks, params: SearchParams,
+                        alive: Optional[np.ndarray] = None):
+    """Host-side oracle for the sharded path (tests + bench drift gate).
+
+    Runs the UNSHARDED batched engine (``search_batch.search_many``)
+    independently on every shard over shard-restricted masks, applies the
+    same structural padded-row guard, and merges with numpy under the
+    same (distance, global id) lexicographic rule. The distributed
+    equivalence suite asserts the device path is lane-for-lane identical
+    to this; ``bench_serving --shards`` gates zero answer drift against
+    it. Returns ``(dists[B, k], ids[B, k], stats)`` with stats summed
+    over the alive shards.
+    """
+    s, nl, n = sn.n_shards, sn.n_local, sn.n_total
+    alive = np.ones(s, bool) if alive is None else np.asarray(alive, bool)
+    masks = np.asarray(masks, bool)
+    Qp = jnp.atleast_2d(sn._prep_query(Q))
+    padded = np.zeros((masks.shape[0], s * nl), bool)
+    padded[:, :n] = masks
+    ds, gs, stats = [], [], []
+    for si in range(s):
+        graph_s = jax.tree.map(lambda x: x[si], sn.graphs)
+        sel_s = bitset.pack(jnp.asarray(padded[:, si * nl:(si + 1) * nl]))
+        res = sb.search_many(graph_s, Qp, sel_s, params)
+        d, ids = np.asarray(res.dists), np.asarray(res.ids)
+        ok = (ids >= 0) & (ids + si * nl < n) & alive[si]
+        ds.append(np.where(ok, d, np.inf))
+        gs.append(np.where(ok, ids + si * nl, -1))
+        stats.append(jax.tree.map(np.asarray, res.stats))
+    D, I = np.concatenate(ds, 1), np.concatenate(gs, 1)
+    k = params.k
+    out_d = np.empty((D.shape[0], k), D.dtype)
+    out_i = np.empty((D.shape[0], k), I.dtype)
+    for b in range(D.shape[0]):
+        order = np.lexsort((I[b], D[b]))[:k]
+        out_d[b] = D[b][order]
+        out_i[b] = np.where(np.isfinite(out_d[b]), I[b][order], -1)
+    stat_sum = jax.tree.map(
+        lambda *xs: sum(x * int(a) for x, a in zip(xs, alive)), *stats)
+    return out_d, out_i, stat_sum
+
+
+def _masked_stats_sum(stats: SearchStats, alive: jax.Array) -> SearchStats:
+    """Sum per-shard stats ([S, B, ...] leaves) over the alive shards."""
+    am = alive.astype(jnp.int32)
+    return jax.tree.map(
+        lambda x: (x * am.reshape((-1,) + (1,) * (x.ndim - 1))).sum(axis=0),
+        stats)
+
+
 @dataclasses.dataclass
 class ShardedNavix:
     mesh: Mesh
@@ -55,10 +155,23 @@ class ShardedNavix:
     config: NavixConfig
     model_axis: str = "model"
     data_axis: str = "data"
+    # set when the index is registered in a NavixDB catalog; routes search
+    # through the shared compiled-program cache (repro.api.plan_compile)
+    program_cache: Optional[object] = None
+    # memoized jitted shard_map programs: (kind, params, per_lane) -> fn
+    _programs: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def n_shards(self) -> int:
         return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def dim(self) -> int:
+        return int(self.graphs.vectors.shape[-1])
+
+    @property
+    def n_words_local(self) -> int:
+        return bitset.n_words(self.n_local)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -70,8 +183,9 @@ class ShardedNavix:
         n_local = -(-n // s)
         pad = s * n_local - n
         if pad:
-            # pad with copies of the last row; padded ids are masked out of
-            # every semimask so they can never be returned
+            # pad with copies of the last row; padded ids are excluded
+            # from every packed semimask AND structurally guarded in the
+            # merge path, so they can never be returned
             vectors = np.concatenate([vectors, np.repeat(vectors[-1:], pad, 0)])
         graphs = []
         for i in range(s):
@@ -85,91 +199,334 @@ class ShardedNavix:
         return cls(mesh=mesh, graphs=stacked, n_local=n_local, n_total=n,
                    config=config, model_axis=model_axis, data_axis=data_axis)
 
-    # ------------------------------------------------------------------
-    def shard_semimask(self, mask: np.ndarray) -> jax.Array:
-        """bool[n_total] -> packed u32[S, W_local] (padded rows excluded)."""
-        s, nl = self.n_shards, self.n_local
-        m = np.zeros(s * nl, dtype=bool)
-        m[: self.n_total] = np.asarray(mask, dtype=bool)
-        packed = bitset.pack(jnp.asarray(m.reshape(s, nl)))
-        return jax.device_put(packed, NamedSharding(
-            self.mesh, P(self.model_axis, None)))
+    # -- semimasks ------------------------------------------------------
+    def shard_semimask(self, mask) -> jax.Array:
+        """Pack a semimask for the shard layout (padded rows excluded).
 
-    # ------------------------------------------------------------------
-    def search_fn(self, k: int, efs: int, heuristic: str = "adaptive_local"):
-        """Returns a jitted (Q, sel_bits, alive) -> (dists, ids) function.
-
-        Q: f32[B, d] (B divisible by the data axis); sel_bits: u32[S, W];
-        alive: bool[S] shard liveness (all True = no stragglers).
-        Output ids are GLOBAL vector ids; quorum merges survivors only.
+        ``bool[n_total]`` -> shared ``u32[S, W_local]``;
+        ``bool[B, n_total]`` (or a list of B masks, ``None`` entries =
+        unfiltered) -> per-lane ``u32[S, B, W_local]``. Pre-packed
+        ``u32[S, W]`` / ``u32[S, B, W]`` pass through after a shape
+        check.
         """
-        mesh = self.mesh
-        params = SearchParams(k=k, efs=max(efs, k), metric=self.config.metric,
-                              heuristic=int(Heuristic.from_name(heuristic)))
-        n_local = self.n_local
-        model_axis, data_axis = self.model_axis, self.data_axis
-        graphs = self.graphs
+        s, nl = self.n_shards, self.n_local
+        if isinstance(mask, (list, tuple)):
+            mask = np.stack([np.ones(self.n_total, bool) if m is None
+                             else np.asarray(m, bool) for m in mask])
+        mask = np.asarray(mask)
+        if mask.dtype == np.uint32:
+            want = (s, self.n_words_local)
+            if mask.ndim not in (2, 3) or (mask.shape[0], mask.shape[-1]) \
+                    != want:
+                raise ValueError(
+                    f"pre-packed sharded semimask has shape {mask.shape}; "
+                    f"this index needs [S={s}, ..., W={want[1]}]")
+            packed = jnp.asarray(mask)
+        else:
+            if mask.shape[-1] != self.n_total:
+                raise ValueError(
+                    f"semimask covers {mask.shape[-1]} nodes but this index "
+                    f"has {self.n_total}")
+            m = np.zeros(mask.shape[:-1] + (s * nl,), bool)
+            m[..., :self.n_total] = mask
+            m = np.moveaxis(m.reshape(mask.shape[:-1] + (s, nl)), -2, 0)
+            packed = bitset.pack(jnp.asarray(m))
+        return jax.device_put(packed, NamedSharding(
+            self.mesh, P(self.model_axis,
+                         *([None] * (packed.ndim - 1)))))
 
-        def local_search(graph_leaves, q_local, sel, alive):
-            graph = jax.tree.unflatten(
-                jax.tree.structure(graphs), graph_leaves)
-            graph = jax.tree.map(lambda x: x[0], graph)      # drop shard dim
-            sel = sel[0]
-            sidx = jax.lax.axis_index(model_axis)
-            my_alive = alive[sidx]
+    def full_semimask(self) -> jax.Array:
+        """Shared all-ones semimask ``u32[S, W_local]`` over the real
+        (non-padded) rows."""
+        return self.shard_semimask(np.ones(self.n_total, bool))
 
-            def one(q):
-                entry, _ = greedy_upper(graph, q, params.metric)
-                d, ids, _ = beam_search_lower(graph, q, sel, entry[None],
-                                              params)
-                return d[:k], ids[:k]
+    def sigma(self, sel_bits: jax.Array):
+        """Selectivity |S| / |V|: float for a shared [S, W] mask, f32[B]
+        per lane for a per-lane [S, B, W] stack."""
+        tot = bitset.count_batch(sel_bits).sum(axis=0)
+        if sel_bits.ndim == 3:
+            return tot.astype(jnp.float32) / self.n_total
+        return float(tot) / self.n_total
 
-            d, ids = jax.vmap(one)(q_local)                  # [b, k]
-            gids = jnp.where(ids >= 0, ids + sidx * n_local, -1)
-            d = jnp.where(my_alive, d, jnp.inf)
-            gids = jnp.where(my_alive, gids, -1)
-            return d[None], gids[None]                       # [1, b, k]
+    # -- params / query prep (mirrors NavixIndex) -----------------------
+    def _params(self, k, efs, heuristic, max_iters=0) -> SearchParams:
+        h = (Heuristic.from_name(heuristic) if isinstance(heuristic, str)
+             else Heuristic(heuristic))
+        return SearchParams(k=k, efs=max(efs, k), heuristic=int(h),
+                            metric=self.config.metric, max_iters=max_iters)
 
-        graph_specs = jax.tree.map(
-            lambda x: P(model_axis, *([None] * (x.ndim - 1))), graphs)
+    def _prep_query(self, q) -> jax.Array:
+        q = jnp.asarray(q, dtype=jnp.float32)
+        if self.config.metric == "cos":
+            q = normalize(q)
+        return q
+
+    # -- shard_map program construction ---------------------------------
+    # Every program takes the graph pytree as an argument (no captured
+    # array constants) and is memoized on self, so repeated drains /
+    # searches of the same plan shape never rebuild or retrace.
+
+    def _graph_specs(self):
+        specs = jax.tree.map(
+            lambda x: P(self.model_axis, *([None] * (x.ndim - 1))),
+            self.graphs)
+        return tuple(jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+
+    def _state_specs(self, bsz: int, params: SearchParams):
+        """shard_map specs for a shard-stacked _BatchState pytree."""
+        template = jax.eval_shape(
+            lambda: sb.parked_state(self.n_local, bsz, params))
+        return jax.tree.map(
+            lambda x: P(self.model_axis, self.data_axis,
+                        *([None] * (x.ndim - 1))), template)
+
+    def _sel_spec(self, per_lane: bool):
+        return (P(self.model_axis, self.data_axis, None) if per_lane
+                else P(self.model_axis, None))
+
+    def _guard(self, local_ids: jax.Array, d: jax.Array, my_alive):
+        """Local ids -> global ids with the padded-row + liveness guard.
+
+        A padded slot duplicates the last real row; its global id falls
+        at/after ``n_total`` and is dropped here even if a caller-built
+        semimask (or the ONEHOP_A branch, which ignores the semimask)
+        let it into the beam.
+        """
+        sidx = lax.axis_index(self.model_axis)
+        gids = local_ids + sidx * self.n_local
+        ok = (local_ids >= 0) & (gids < self.n_total) & my_alive
+        return (jnp.where(ok, d, jnp.inf), jnp.where(ok, gids, -1))
+
+    def _program(self, kind: str, params: SearchParams,
+                 per_lane: bool = True):
+        key = (kind, params, bool(per_lane))
+        fn = self._programs.get(key)
+        if fn is None:
+            fn = getattr(self, f"_build_{kind}")(params, per_lane)
+            self._programs[key] = fn
+        return fn
+
+    def _build_search(self, params: SearchParams, per_lane: bool):
+        """One-shot batched search over every shard + the global merge."""
+        mesh, model, data = self.mesh, self.model_axis, self.data_axis
+        structure = jax.tree.structure(self.graphs)
+        graph_specs = self._graph_specs()
+        k = params.k
+
+        def local(graph_leaves, q, sel, alive):
+            graph = jax.tree.map(
+                lambda x: x[0], jax.tree.unflatten(structure, graph_leaves))
+            # lane-local sigma estimates against this shard's own slice
+            # of S (sigma_g=None -> per-lane |S_local| / n_local)
+            res = sb.search_lanes(graph, q, sel[0], params, sigma_g=None)
+            my_alive = alive[lax.axis_index(model)]
+            d, gids = self._guard(res.ids, res.dists, my_alive)
+            return (d[None], gids[None],
+                    jax.tree.map(lambda x: x[None], res.stats))
+
+        stats_specs = SearchStats(
+            iters=P(model, data), t_dc=P(model, data), s_dc=P(model, data),
+            upper_dc=P(model, data), picks=P(model, data, None))
 
         @jax.jit
-        def run(Q, sel_bits, alive):
-            leaves = jax.tree.leaves(graphs)
-            leaf_specs = jax.tree.leaves(graph_specs,
-                                         is_leaf=lambda x: isinstance(x, P))
-            d, ids = _shard_map(
-                functools.partial(local_search),
-                mesh=mesh,
-                in_specs=(tuple(leaf_specs), P(data_axis, None),
-                          P(model_axis, None), P()),
-                out_specs=(P(model_axis, data_axis, None),
-                           P(model_axis, data_axis, None)),
-                # while-loop beam search inside
+        def run(graphs, Q, sel_bits, alive):
+            d, gids, stats = _shard_map(
+                local, mesh=mesh,
+                in_specs=(graph_specs, P(data, None),
+                          self._sel_spec(per_lane), P()),
+                out_specs=(P(model, data, None), P(model, data, None),
+                           stats_specs),
                 **{_CHECK_REPL_KW: False},
-            )(tuple(leaves), Q, sel_bits, alive)
-            # merge: [S, B, k] -> global top-k per query
-            s, b, _ = d.shape
-            d = d.transpose(1, 0, 2).reshape(b, s * k)
-            ids = ids.transpose(1, 0, 2).reshape(b, s * k)
-            neg, order = jax.lax.top_k(-d, k)
-            out_d = -neg
-            out_i = jnp.take_along_axis(ids, order, axis=1)
-            return out_d, jnp.where(jnp.isfinite(out_d), out_i, -1)
+            )(tuple(jax.tree.leaves(graphs)), Q, sel_bits, alive)
+            out_d, out_i = merge_shard_topk(d, gids, k)
+            return SearchResult(dists=out_d, ids=out_i,
+                                stats=_masked_stats_sum(stats, alive))
+
+        return run
+
+    def _build_refill(self, params: SearchParams, per_lane: bool):
+        mesh, model, data = self.mesh, self.model_axis, self.data_axis
+        structure = jax.tree.structure(self.graphs)
+        graph_specs = self._graph_specs()
+
+        def local(graph_leaves, q, sel, st, udc, refill):
+            graph = jax.tree.map(
+                lambda x: x[0], jax.tree.unflatten(structure, graph_leaves))
+            st = jax.tree.map(lambda x: x[0], st)
+            st2, udc2 = sb.refill_lanes(graph, q, sel[0], st, udc[0],
+                                        refill, params)
+            return jax.tree.map(lambda x: x[None], st2), udc2[None]
+
+        @jax.jit
+        def run(graphs, Q, sel_bits, st, udc, refill):
+            state_specs = self._state_specs(Q.shape[0], params)
+            return _shard_map(
+                local, mesh=mesh,
+                in_specs=(graph_specs, P(data, None),
+                          self._sel_spec(per_lane), state_specs,
+                          P(model, data), P(data)),
+                out_specs=(state_specs, P(model, data)),
+                **{_CHECK_REPL_KW: False},
+            )(tuple(jax.tree.leaves(graphs)), Q, sel_bits, st, udc, refill)
+
+        return run
+
+    def _build_steps(self, params: SearchParams, per_lane: bool):
+        mesh, model, data = self.mesh, self.model_axis, self.data_axis
+        structure = jax.tree.structure(self.graphs)
+        graph_specs = self._graph_specs()
+
+        @functools.partial(jax.jit, static_argnames=("n_steps",))
+        def run(graphs, Q, sel_bits, st, n_steps):
+            def local(graph_leaves, q, sel, stl):
+                graph = jax.tree.map(
+                    lambda x: x[0],
+                    jax.tree.unflatten(structure, graph_leaves))
+                stl = jax.tree.map(lambda x: x[0], stl)
+                # sigma_g=None: each shard's lanes estimate against their
+                # own slice of S, exactly like the one-shot path
+                st2, live = sb.step_lanes(graph, q, sel[0], stl, params,
+                                          n_steps, sigma_g=None)
+                return jax.tree.map(lambda x: x[None], st2), live[None]
+
+            state_specs = self._state_specs(Q.shape[0], params)
+            st2, live = _shard_map(
+                local, mesh=mesh,
+                in_specs=(graph_specs, P(data, None),
+                          self._sel_spec(per_lane), state_specs),
+                out_specs=(state_specs, P(model, data)),
+                **{_CHECK_REPL_KW: False},
+            )(tuple(jax.tree.leaves(graphs)), Q, sel_bits, st)
+            # a lane is live while ANY shard's beam still advances
+            return st2, jnp.any(live, axis=0)
+
+        return run
+
+    def _build_finalize(self, params: SearchParams, per_lane: bool = True):
+        mesh, model, data = self.mesh, self.model_axis, self.data_axis
+        efs = params.efs
+
+        def local(st, udc, alive):
+            st = jax.tree.map(lambda x: x[0], st)
+            res = sb.finalize_lanes(st, udc[0], params)
+            my_alive = alive[lax.axis_index(model)]
+            d, gids = self._guard(res.ids, res.dists, my_alive)
+            return (d[None], gids[None],
+                    jax.tree.map(lambda x: x[None], res.stats))
+
+        stats_specs = SearchStats(
+            iters=P(model, data), t_dc=P(model, data), s_dc=P(model, data),
+            upper_dc=P(model, data), picks=P(model, data, None))
+
+        @jax.jit
+        def run(st, udc, alive):
+            state_specs = self._state_specs(udc.shape[1], params)
+            d, gids, stats = _shard_map(
+                local, mesh=mesh,
+                in_specs=(state_specs, P(model, data), P()),
+                out_specs=(P(model, data, None), P(model, data, None),
+                           stats_specs),
+                **{_CHECK_REPL_KW: False},
+            )(st, udc, alive)
+            out_d, out_i = merge_shard_topk(d, gids, efs)
+            return SearchResult(dists=out_d, ids=out_i,
+                                stats=_masked_stats_sum(stats, alive))
+
+        return run
+
+    # -- resumable stepping surface (the serving tier's device side) ----
+    def parked_state(self, bsz: int, params: SearchParams):
+        """All-parked shard-stacked batch state (+ its [S, B] upper_dc)."""
+        st = sb.parked_state(self.n_local, bsz, params)
+        st = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.n_shards,) + x.shape),
+            st)
+        return st, jnp.zeros((self.n_shards, bsz), jnp.int32)
+
+    def refill_program(self, params: SearchParams, per_lane: bool = True):
+        """(graphs, Q, sel_bits, st, udc, refill[B]) -> (st, udc); the
+        sharded ``engine_refill`` -- the refill mask simply applies to
+        every shard's copy of the lane."""
+        return self._program("refill", params, per_lane)
+
+    def steps_program(self, params: SearchParams, per_lane: bool = True):
+        """(graphs, Q, sel_bits, st, n_steps) -> (st, live[B]); live is
+        the OR over shards of each lane's convergence predicate."""
+        return self._program("steps", params, per_lane)
+
+    def finalize_program(self, params: SearchParams):
+        """(st, udc, alive[S]) -> SearchResult with merged global ids
+        ([B, efs]); dead shards contribute +inf rows to the merge."""
+        return self._program("finalize", params, True)
+
+    # -- one-shot search ------------------------------------------------
+    def search_many(self, Q, semimask=None, k: int = 10, efs: int = 0,
+                    heuristic: str = "adaptive_local",
+                    alive: Optional[np.ndarray] = None, quorum: int = 0
+                    ) -> SearchResult:
+        """Batched filtered search over every shard + one global merge.
+
+        ``semimask``: ``None`` (unfiltered), ``bool[n_total]`` (shared),
+        ``bool[B, n_total]`` / list of B masks (per-lane, the mixed-plan
+        path), or pre-packed ``u32[S, W]`` / ``u32[S, B, W]``. Returns a
+        :class:`SearchResult` with GLOBAL ids ([B, k]) and per-lane stats
+        summed over the alive shards. Raises if fewer than ``quorum``
+        shards are alive.
+        """
+        efs = efs or 2 * k
+        params = self._params(k, efs, heuristic)
+        sel = (self.full_semimask() if semimask is None
+               else self.shard_semimask(semimask))
+        alive = (np.ones(self.n_shards, bool) if alive is None
+                 else np.asarray(alive, bool))
+        if alive.shape != (self.n_shards,):
+            # an out-of-bounds gather inside jit would silently clamp,
+            # handing some shards another shard's liveness
+            raise ValueError(f"alive mask has shape {alive.shape}; this "
+                             f"index has {self.n_shards} shards")
+        if quorum and alive.sum() < quorum:
+            raise RuntimeError(
+                f"quorum not met: {int(alive.sum())}/{self.n_shards} alive, "
+                f"need {quorum}")
+        Qp = jnp.atleast_2d(self._prep_query(Q))
+        alive_j = jnp.asarray(alive)
+        if self.program_cache is not None:
+            return self.program_cache.search_sharded(self, Qp, sel, alive_j,
+                                                     params)
+        fn = self._program("search", params, per_lane=sel.ndim == 3)
+        return fn(self.graphs, Qp, sel, alive_j)
+
+    # -- compatibility wrappers (pre-batched-engine surface) ------------
+    def search_fn(self, k: int, efs: int, heuristic: str = "adaptive_local",
+                  per_lane: bool = False):
+        """Returns a (Q, sel_bits, alive) -> (dists, ids) function.
+
+        Q: f32[B, d] (B divisible by the data axis); sel_bits:
+        u32[S, W] (with ``per_lane=True``, u32[S, B, W] -- a shared
+        [S, W] mask is lane-broadcast first); alive: bool[S]. Output ids
+        are GLOBAL vector ids; kept as the thin compatibility form of
+        :meth:`search_many`'s program.
+        """
+        params = self._params(k, efs, heuristic)
+        fn = self._program("search", params, per_lane=per_lane)
+
+        def run(Q, sel_bits, alive):
+            if per_lane:
+                sel_bits = bitset.broadcast_shard_lanes(sel_bits,
+                                                        Q.shape[0])
+            res = fn(self.graphs, Q, sel_bits, alive)
+            return res.dists, res.ids
 
         return run
 
     def search(self, Q, semimask: np.ndarray, k: int = 100, efs: int = 0,
                heuristic: str = "adaptive_local",
                alive: Optional[np.ndarray] = None, quorum: int = 0):
-        """Convenience wrapper; raises if fewer than ``quorum`` shards are
-        alive (the serving tier's retry/deadline policy decides quorum)."""
-        alive = (np.ones(self.n_shards, bool) if alive is None
-                 else np.asarray(alive, bool))
-        if quorum and alive.sum() < quorum:
-            raise RuntimeError(
-                f"quorum not met: {int(alive.sum())}/{self.n_shards} alive, "
-                f"need {quorum}")
-        fn = self.search_fn(k=k, efs=efs or 2 * k, heuristic=heuristic)
-        sel = self.shard_semimask(semimask)
-        return fn(jnp.asarray(Q, jnp.float32), sel, jnp.asarray(alive))
+        """Convenience wrapper returning ``(dists, ids)``; raises if fewer
+        than ``quorum`` shards are alive (the serving tier's
+        retry/deadline policy decides quorum)."""
+        res = self.search_many(Q, semimask=semimask, k=k, efs=efs,
+                               heuristic=heuristic, alive=alive,
+                               quorum=quorum)
+        return res.dists, res.ids

@@ -416,16 +416,13 @@ def beam_search_lower_batch(
     return _extract_results(st, params.efs)
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
-def search_many(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
-                params: SearchParams, sigma_g=None) -> SearchResult:
-    """Full 2-level filtered search for a [B, d] query batch.
-
-    Lane-for-lane equivalent to ``search.search`` per query with that
-    lane's own semimask (same ids, dists, and stats), at a fraction of
-    the vmap path's per-iteration cost. ``sel_bits`` is ``[W]`` (shared)
-    or ``[B, W]`` (per-lane, the mixed-plan serving path).
-    """
+def search_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                 params: SearchParams, sigma_g=None) -> SearchResult:
+    """Unjitted body of :func:`search_many` -- the full 2-level filtered
+    search for a [B, d] query batch. Exposed so callers embedding the
+    engine in a larger traced program (``repro.core.distributed`` runs it
+    per shard inside ``shard_map``) share one source of truth with the
+    jitted entry point."""
     entry, upper_dc = greedy_upper_batch(graph, Q, params.metric)
     beam_d, beam_id, stats = beam_search_lower_batch(
         graph, Q, sel_bits, entry, params, sigma_g=sigma_g)
@@ -436,6 +433,19 @@ def search_many(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
         # +1: the entry vector's own distance at the lower level
         stats=stats._replace(upper_dc=upper_dc.astype(jnp.int32) + 1),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def search_many(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                params: SearchParams, sigma_g=None) -> SearchResult:
+    """Full 2-level filtered search for a [B, d] query batch.
+
+    Lane-for-lane equivalent to ``search.search`` per query with that
+    lane's own semimask (same ids, dists, and stats), at a fraction of
+    the vmap path's per-iteration cost. ``sel_bits`` is ``[W]`` (shared)
+    or ``[B, W]`` (per-lane, the mixed-plan serving path).
+    """
+    return search_lanes(graph, Q, sel_bits, params, sigma_g=sigma_g)
 
 
 # ---------------------------------------------------------------------------
@@ -470,17 +480,10 @@ def parked_state(n: int, bsz: int, params: SearchParams) -> _BatchState:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
-def engine_refill(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
-                  st: _BatchState, upper_dc: jax.Array, refill: jax.Array,
-                  params: SearchParams) -> tuple[_BatchState, jax.Array]:
-    """Reset the lanes flagged in ``refill`` (bool[B]) to fresh beams.
-
-    Refilled lanes run the greedy upper descent for their (new) query and
-    start a fresh lower-level beam over their (new) per-lane semimask;
-    all other lanes pass through bit-identically. Returns the merged
-    state and the updated per-lane ``upper_dc`` accounting.
-    """
+def refill_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                 st: _BatchState, upper_dc: jax.Array, refill: jax.Array,
+                 params: SearchParams) -> tuple[_BatchState, jax.Array]:
+    """Unjitted body of :func:`engine_refill` (shard_map-embeddable)."""
     bsz = Q.shape[0]
     sel2 = bitset.broadcast_lanes(sel_bits, bsz)
     sel2, _, _ = _resolve_branching(sel2, params, None, graph.n,
@@ -496,18 +499,24 @@ def engine_refill(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
     return merged, jnp.where(refill, dc.astype(jnp.int32) + 1, upper_dc)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "n_steps"))
-def engine_steps(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
-                 st: _BatchState, params: SearchParams, n_steps: int,
-                 sigma_g=None) -> tuple[_BatchState, jax.Array]:
-    """Advance the batch by at most ``n_steps`` loop iterations
-    (``n_steps=0``: unbounded -- run to whole-batch convergence, the
-    right call when the request queue is empty and there is nothing to
-    refill between chunks).
+@functools.partial(jax.jit, static_argnames=("params",))
+def engine_refill(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                  st: _BatchState, upper_dc: jax.Array, refill: jax.Array,
+                  params: SearchParams) -> tuple[_BatchState, jax.Array]:
+    """Reset the lanes flagged in ``refill`` (bool[B]) to fresh beams.
 
-    Returns ``(state, live[B])``; a lane with ``live == False`` has
-    converged (or is parked) and is safe to finalize and refill.
+    Refilled lanes run the greedy upper descent for their (new) query and
+    start a fresh lower-level beam over their (new) per-lane semimask;
+    all other lanes pass through bit-identically. Returns the merged
+    state and the updated per-lane ``upper_dc`` accounting.
     """
+    return refill_lanes(graph, Q, sel_bits, st, upper_dc, refill, params)
+
+
+def step_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+               st: _BatchState, params: SearchParams, n_steps: int,
+               sigma_g=None) -> tuple[_BatchState, jax.Array]:
+    """Unjitted body of :func:`engine_steps` (shard_map-embeddable)."""
     bsz = Q.shape[0]
     sel2 = bitset.broadcast_lanes(sel_bits, bsz)
     sel2, mode, global_branch = _resolve_branching(
@@ -527,15 +536,37 @@ def engine_steps(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
     return st, lane_cond(st)
 
 
+@functools.partial(jax.jit, static_argnames=("params", "n_steps"))
+def engine_steps(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                 st: _BatchState, params: SearchParams, n_steps: int,
+                 sigma_g=None) -> tuple[_BatchState, jax.Array]:
+    """Advance the batch by at most ``n_steps`` loop iterations
+    (``n_steps=0``: unbounded -- run to whole-batch convergence, the
+    right call when the request queue is empty and there is nothing to
+    refill between chunks).
+
+    Returns ``(state, live[B])``; a lane with ``live == False`` has
+    converged (or is parked) and is safe to finalize and refill.
+    """
+    return step_lanes(graph, Q, sel_bits, st, params, n_steps,
+                      sigma_g=sigma_g)
+
+
+def finalize_lanes(st: _BatchState, upper_dc: jax.Array,
+                   params: SearchParams) -> SearchResult:
+    """Unjitted body of :func:`engine_finalize` (shard_map-embeddable)."""
+    out_d, out_id, stats = _extract_results(st, params.efs)
+    return SearchResult(
+        dists=out_d, ids=out_id,
+        stats=stats._replace(upper_dc=upper_dc.astype(jnp.int32)))
+
+
 @functools.partial(jax.jit, static_argnames=("params",))
 def engine_finalize(st: _BatchState, upper_dc: jax.Array,
                     params: SearchParams) -> SearchResult:
     """Extract per-lane results from a (possibly partially converged)
     batch state: full-efs beams, the host slices each lane to its own k."""
-    out_d, out_id, stats = _extract_results(st, params.efs)
-    return SearchResult(
-        dists=out_d, ids=out_id,
-        stats=stats._replace(upper_dc=upper_dc.astype(jnp.int32)))
+    return finalize_lanes(st, upper_dc, params)
 
 
 #: the multi-row execution engines (name -> raw jitted entry point);

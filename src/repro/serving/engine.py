@@ -23,9 +23,15 @@ unified :class:`repro.api.NavixDB` pipeline:
     protocol (warm-up + repeats) is implemented in the benchmark harness
     on top of this engine.
 
-Straggler-robust distributed mode: when constructed over a ShardedNavix,
-the engine searches with a shard-liveness mask and a quorum (DESIGN.md
-Section 4); dead shards degrade recall, not availability.
+Straggler-robust distributed mode: the engine serves a
+:class:`~repro.core.distributed.ShardedNavix` through the same
+schedulers -- the continuous scheduler's lane state simply gains a shard
+dimension (per-lane semimasks become ``[S, B, W_local]``, refill masks
+apply to every shard's copy of a lane) and converged lanes are merged
+across shards at finalize time under the engine's ``alive`` mask. A
+shard marked dead mid-drain degrades recall, not availability: responses
+finalized under a partial quorum are flagged ``degraded`` and contain no
+ids from dead shards.
 """
 
 from __future__ import annotations
@@ -33,12 +39,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import defaultdict, deque
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
 from repro.api.db import NavixDB
 from repro.api.plan_compile import _bucket
+from repro.core.distributed import ShardedNavix
 from repro.core.navix import NavixIndex
 from repro.query.operators import (KnnSearch, Plan, is_selection,
                                    output_table, split_pipeline)
@@ -65,6 +72,98 @@ class Response:
                                   # prefilter wall time (shared only with
                                   # requests carrying the same Q_S)
     sigma: float                  # this request's own |S| / |V|
+    degraded: bool = False        # finalized under a partial shard quorum
+                                  # (sharded indexes only): some shards
+                                  # were dead, so recall may be reduced
+
+
+class _FlatLanes:
+    """Device-side lane operations of the continuous scheduler over an
+    unsharded :class:`NavixIndex` (the ``search_batch`` stepping API)."""
+
+    n_shards = 0
+
+    def __init__(self, idx: NavixIndex, params):
+        from repro.core import bitset
+
+        self.idx, self.graph, self.params = idx, idx.graph, params
+        self._words = bitset.n_words(idx.graph.n)
+
+    def full_row(self) -> np.ndarray:
+        return np.asarray(self.idx.full_semimask())            # [W]
+
+    def pack_row(self, mask) -> np.ndarray:
+        return np.asarray(self.idx.pack_semimask(mask))        # [W]
+
+    def sel_buffer(self, bsz: int) -> np.ndarray:
+        return np.zeros((bsz, self._words), np.uint32)
+
+    def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
+        selh[i] = row
+
+    def parked(self, bsz: int):
+        import jax.numpy as jnp
+
+        from repro.core import search_batch as sb
+        return (sb.parked_state(self.graph.n, bsz, self.params),
+                jnp.zeros((bsz,), jnp.int32))
+
+    def refill(self, Qj, selj, st, udc, refill):
+        from repro.core import search_batch as sb
+        return sb.engine_refill(self.graph, Qj, selj, st, udc, refill,
+                                self.params)
+
+    def steps(self, Qj, selj, st, n_steps, sigj):
+        from repro.core import search_batch as sb
+        return sb.engine_steps(self.graph, Qj, selj, st, self.params,
+                               n_steps, sigma_g=sigj)
+
+    def finalize(self, st, udc, alive):
+        from repro.core import search_batch as sb
+        return sb.engine_finalize(st, udc, self.params)
+
+
+class _ShardLanes:
+    """The same lane operations over a :class:`ShardedNavix`: every
+    buffer gains a leading shard dim ([S, B, W] semimasks, [S, B]
+    upper_dc, shard-stacked beam state) and ``finalize`` merges the
+    per-shard beams into global top-k under the current ``alive`` mask.
+    Per-lane k/efs capping and lane refill are untouched."""
+
+    def __init__(self, sn: ShardedNavix, params):
+        self.sn, self.params = sn, params
+        self.n_shards = sn.n_shards
+        self._refill = sn.refill_program(params)
+        self._steps = sn.steps_program(params)
+        self._finalize = sn.finalize_program(params)
+
+    def full_row(self) -> np.ndarray:
+        return np.asarray(self.sn.full_semimask())             # [S, W]
+
+    def pack_row(self, mask) -> np.ndarray:
+        return np.asarray(self.sn.shard_semimask(mask))        # [S, W]
+
+    def sel_buffer(self, bsz: int) -> np.ndarray:
+        return np.zeros((self.n_shards, bsz, self.sn.n_words_local),
+                        np.uint32)
+
+    def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
+        selh[:, i] = row
+
+    def parked(self, bsz: int):
+        return self.sn.parked_state(bsz, self.params)
+
+    def refill(self, Qj, selj, st, udc, refill):
+        return self._refill(self.sn.graphs, Qj, selj, st, udc, refill)
+
+    def steps(self, Qj, selj, st, n_steps, sigj):
+        # sigj unused: each shard's lanes estimate selectivity against
+        # their own slice of S (lane-local, shard-local)
+        return self._steps(self.sn.graphs, Qj, selj, st, n_steps)
+
+    def finalize(self, st, udc, alive):
+        import jax.numpy as jnp
+        return self._finalize(st, udc, jnp.asarray(alive))
 
 
 @dataclasses.dataclass
@@ -73,9 +172,11 @@ class SearchEngine:
 
     Construct either from a ``db`` (preferred; serves declarative plans
     against its catalog) or from a bare ``index`` (+ optional ``store``),
-    which is wrapped into a single-index NavixDB automatically.
+    which is wrapped into a single-index NavixDB automatically. ``index``
+    may also be a :class:`ShardedNavix`: both schedulers then run the
+    sharded batched engine, honoring the engine's ``alive`` shard mask.
     """
-    index: Optional[NavixIndex] = None
+    index: Optional[object] = None
     store: Optional[GraphStore] = None
     heuristic: str = "adaptive_local"
     efs: int = 0
@@ -97,6 +198,16 @@ class SearchEngine:
     refill_threshold: int = 0              # min free lanes before a refill
                                            # (compaction) is worth a device
                                            # call; 0 = auto (batch size / 2)
+    alive: Optional[np.ndarray] = None     # shard liveness (sharded indexes
+                                           # only): bool[S], None = all
+                                           # alive; may flip mid-drain --
+                                           # lanes finalized under a partial
+                                           # quorum come back degraded
+    step_hook: Optional[Callable] = None   # called after every continuous-
+                                           # scheduler device step with a
+                                           # progress dict (telemetry /
+                                           # liveness probes can flip
+                                           # ``alive`` here mid-drain)
 
     def __post_init__(self):
         if self.db is None:
@@ -202,21 +313,37 @@ class SearchEngine:
                                          heuristic, items))
         return out
 
-    def _serve_fused(self, idx: NavixIndex, heuristic: str,
+    def _current_alive(self, backend) -> np.ndarray:
+        if self.alive is None:
+            return np.ones(max(backend.n_shards, 1), bool)
+        if not backend.n_shards:
+            # mirror NavixDB.execute: silently ignoring a quorum mask on
+            # an unsharded index would hide the caller's intent
+            raise ValueError("engine.alive quorum-masks sharded indexes; "
+                             "this drain targets an unsharded index")
+        alive = np.asarray(self.alive, bool)
+        if alive.shape != (backend.n_shards,):
+            raise ValueError(f"engine.alive has shape {alive.shape}; the "
+                             f"index has {backend.n_shards} shards")
+        return alive
+
+    def _serve_fused(self, idx, heuristic: str,
                      items: list[tuple[Request, Any]]) -> list[Response]:
         import jax.numpy as jnp
 
-        from repro.core import bitset
-        from repro.core.search_batch import (engine_finalize, engine_refill,
-                                             engine_steps, parked_state)
-
-        graph = idx.graph
-        n = graph.n
+        # per-lane k/efs, capped to the batch max: one static program
+        # serves every fused request; lanes slice their own k at the end
+        k_cap = max(p.knn.k for _, p in items)
+        efs_cap = max(max(p.knn.efs or 2 * p.knn.k for _, p in items), k_cap)
+        params = idx._params(k_cap, efs_cap, heuristic)
+        backend = (_ShardLanes(idx, params)
+                   if isinstance(idx, ShardedNavix)
+                   else _FlatLanes(idx, params))
 
         # one prefilter per DISTINCT selection subquery; its wall time is
         # shared only by the requests that carry it
         sel_info: dict[Any, list] = {}   # Q_S -> [packed_row, sigma, ms, cnt]
-        full_row = np.asarray(idx.full_semimask())
+        full_row = backend.full_row()
         for r, parts in items:
             s = parts.selection
             if s not in sel_info:
@@ -224,15 +351,9 @@ class SearchEngine:
                     sel_info[s] = [full_row, 1.0, 0.0, 0]
                 else:
                     qres = self.db.prefilter(s)
-                    sel_info[s] = [np.asarray(idx.pack_semimask(qres.mask)),
+                    sel_info[s] = [backend.pack_row(qres.mask),
                                    qres.selectivity, qres.seconds * 1e3, 0]
             sel_info[s][3] += 1
-
-        # per-lane k/efs, capped to the batch max: one static program
-        # serves every fused request; lanes slice their own k at the end
-        k_cap = max(p.knn.k for _, p in items)
-        efs_cap = max(max(p.knn.efs or 2 * p.knn.k for _, p in items), k_cap)
-        params = idx._params(k_cap, efs_cap, heuristic)
 
         # selectivity-sorted admission: lanes running together then carry
         # similar-sigma subqueries, so whole step chunks pass in which no
@@ -249,16 +370,15 @@ class SearchEngine:
             np.stack([r.query for r, _ in items])), np.float32)
 
         bsz = _bucket(max(1, min(self.max_batch, len(items))))
-        Qh = np.zeros((bsz, graph.dim), np.float32)
-        selh = np.zeros((bsz, bitset.n_words(n)), np.uint32)
+        Qh = np.zeros((bsz, prepped.shape[1]), np.float32)
+        selh = backend.sel_buffer(bsz)
         sigh = np.ones((bsz,), np.float32)
         lane_req: list[Optional[tuple[Request, Any]]] = [None] * bsz
         lane_t0 = [0.0] * bsz
         pending = deque((r, parts, prepped[j])
                         for j, (r, parts) in enumerate(items))
 
-        st = parked_state(n, bsz, params)
-        udc = jnp.zeros((bsz,), jnp.int32)
+        st, udc = backend.parked(bsz)
         Qj, selj, sigj = (jnp.asarray(Qh), jnp.asarray(selh),
                           jnp.asarray(sigh))
 
@@ -266,13 +386,18 @@ class SearchEngine:
         responses: list[Response] = []
         done: dict[int, float] = {}    # converged lane -> t_done (state
                                        # stays frozen until flushed)
+        n_devsteps = 0
 
         def flush():
             """Finalize + emit every converged-but-unemitted lane (one
-            device call for any number of them), freeing their lanes."""
+            device call for any number of them), freeing their lanes.
+            Sharded backends merge across shards under the CURRENT alive
+            mask; a partial quorum flags the responses degraded."""
             if not done:
                 return
-            fin = engine_finalize(st, udc, params)
+            alive = self._current_alive(backend)
+            degraded = backend.n_shards > 0 and not alive.all()
+            fin = backend.finalize(st, udc, alive)
             ids, dists = np.asarray(fin.ids), np.asarray(fin.dists)
             for i, t_done in done.items():
                 r, parts = lane_req[i]
@@ -285,7 +410,8 @@ class SearchEngine:
                 responses.append(Response(
                     rid=r.rid, ids=ids[i, :k_r], dists=dists[i, :k_r],
                     queue_ms=queue_ms, exec_ms=exec_ms,
-                    prefilter_ms=pf_share, sigma=float(sigma)))
+                    prefilter_ms=pf_share, sigma=float(sigma),
+                    degraded=degraded))
                 lane_req[i] = None
             done.clear()
 
@@ -305,15 +431,15 @@ class SearchEngine:
                     r, parts, qrow = pending.popleft()
                     row, sigma, _, _ = sel_info[parts.selection]
                     Qh[i] = qrow
-                    selh[i] = row
+                    backend.set_lane(selh, i, row)
                     sigh[i] = sigma
                     lane_req[i] = (r, parts)
                     lane_t0[i] = time.perf_counter()
                     refill[i] = True
                 Qj, selj, sigj = (jnp.asarray(Qh), jnp.asarray(selh),
                                   jnp.asarray(sigh))
-                st, udc = engine_refill(graph, Qj, selj, st, udc,
-                                        jnp.asarray(refill), params)
+                st, udc = backend.refill(Qj, selj, st, udc,
+                                         jnp.asarray(refill))
             elif n_running == 0:
                 # queue empty (a non-empty queue with zero running lanes
                 # always takes the refill branch): only frozen converged
@@ -323,9 +449,14 @@ class SearchEngine:
             # with an empty queue there is nothing to refill between
             # chunks: run the remaining lanes straight to convergence
             n_steps = self.step_iters if pending else 0
-            st, live = engine_steps(graph, Qj, selj, st, params,
-                                    n_steps, sigma_g=sigj)
+            st, live = backend.steps(Qj, selj, st, n_steps, sigj)
             live_np = np.asarray(live)
+            n_devsteps += 1
+            if self.step_hook is not None:
+                self.step_hook({"step": n_devsteps,
+                                "live": int(live_np.sum()),
+                                "pending": len(pending),
+                                "done": len(done)})
             now = time.perf_counter()
             for i in range(bsz):
                 if (lane_req[i] is not None and i not in done
@@ -336,9 +467,21 @@ class SearchEngine:
 
     def _serve_group(self, plan: Plan, reqs: list[Request]) -> list[Response]:
         Q = np.stack([r.query for r in reqs])
+        parts = split_pipeline(plan)
+        entry = self.db._resolve(parts.knn,
+                                 output_table(plan, self.db.store))
+        sharded = isinstance(entry.index, ShardedNavix)
+        if self.alive is not None and not sharded:
+            raise ValueError("engine.alive quorum-masks sharded indexes; "
+                             f"index {entry.name!r} is unsharded")
+        alive = self.alive if sharded else None
+        degraded = bool(sharded and alive is not None
+                        and not np.asarray(alive, bool).all())
         t1 = time.perf_counter()
+        # engine passes through: db.execute rejects "vmap" on a sharded
+        # index rather than this layer silently overriding it
         rs = self.db.execute(plan, query=Q, max_batch=self.max_batch,
-                             engine=self.engine)
+                             engine=self.engine, alive=alive)
         # the prefilter ran once for the whole group: amortize its cost
         # (and the semimask pack) across the group's requests so the
         # latency summary reflects what each request actually paid
@@ -352,7 +495,8 @@ class SearchEngine:
             responses.append(Response(
                 rid=r.rid, ids=rs.ids[j], dists=rs.dists[j],
                 queue_ms=queue_ms, exec_ms=exec_ms,
-                prefilter_ms=pf_share, sigma=rs.sigma))
+                prefilter_ms=pf_share, sigma=rs.sigma,
+                degraded=degraded))
         return responses
 
     def latency_summary(self) -> dict:

@@ -1,6 +1,12 @@
-"""Shared fixtures. NOTE: tests run with the real single CPU device --
-XLA_FLAGS device-count overrides belong ONLY to the dry-run (and the
-subprocess-based distributed tests)."""
+"""Shared fixtures.
+
+NOTE on devices: most tests run identically at any host device count.
+The in-process distributed tests (tests/test_distributed_batch.py and
+the sharded half of tests/test_serving.py) exercise shard counts up to
+the number of available devices and skip above it -- CI runs tier-1 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so S in {1, 2, 4}
+all execute. The legacy subprocess-based distributed test keeps its own
+device-count override."""
 
 import numpy as np
 import pytest
@@ -32,3 +38,28 @@ def queries(clustered):
     rng = np.random.default_rng(7)
     base = centers[rng.integers(0, len(centers), size=12)]
     return (base + 0.3 * rng.normal(size=base.shape)).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def shard_env():
+    """Small clustered dataset + memoized ShardedNavix builds per shard
+    count (host mesh ``(data=1, model=S)``). Tests requesting S beyond
+    the available device count must skip at the call site."""
+    import jax
+
+    from repro.core.distributed import ShardedNavix
+
+    X, _, centers = gaussian_mixture(640, 16, 8, seed=0)
+    rng = np.random.default_rng(7)
+    base = centers[rng.integers(0, len(centers), size=8)]
+    qs = (base + 0.25 * rng.normal(size=base.shape)).astype(np.float32)
+    cfg = NavixConfig(m_u=8, ef_construction=48, metric="l2", seed=0)
+    built: dict[int, ShardedNavix] = {}
+
+    def factory(s: int) -> ShardedNavix:
+        if s not in built:
+            mesh = jax.make_mesh((1, s), ("data", "model"))
+            built[s] = ShardedNavix.build(X, cfg, mesh)
+        return built[s]
+
+    return X, qs, factory

@@ -1,3 +1,4 @@
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -122,3 +123,47 @@ def test_full_mask_tail_bits():
     for n in (1, 31, 32, 33, 64, 100):
         bits = bitset.full_mask(n)
         assert int(bitset.count(bits)) == n
+
+
+# -- shard-aware [S, B, W] primitives (sharded mixed-plan batching) ----------
+
+
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 90),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_shard_lane_roundtrip(s, b, n, seed):
+    """pack/unpack already map over leading dims: a [S, B, n] mask stack
+    round-trips through [S, B, W] and count_batch counts per (s, b)."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random((s, b, n)) < 0.4
+    bits = bitset.pack(jnp.asarray(mask))
+    assert bits.shape == (s, b, bitset.n_words(n))
+    np.testing.assert_array_equal(
+        np.asarray(bitset.unpack(bits, n)), mask)
+    np.testing.assert_array_equal(
+        np.asarray(bitset.count_batch(bits)), mask.sum(axis=-1))
+
+
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(8, 90),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_count_members_batch_shard_lanes_match_numpy(s, b, n, seed):
+    """count_members_batch over any leading dims: each (shard, lane)
+    counts membership against its OWN bitset; ids < 0 never count."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random((s, b, n)) < 0.5
+    ids = rng.integers(-2, n, size=(s, b, 7)).astype(np.int32)
+    got = np.asarray(bitset.count_members_batch(
+        bitset.pack(jnp.asarray(mask)), jnp.asarray(ids)))
+    expect = np.zeros((s, b), np.int64)
+    for i in range(s):
+        for j in range(b):
+            sel = ids[i, j][ids[i, j] >= 0]
+            expect[i, j] = mask[i, j][sel].sum()
+    np.testing.assert_array_equal(got, expect)
+
+
+# NOTE: the deterministic shard-aware tests (count_members_batch vmap
+# oracle, broadcast_shard_lanes) live in tests/test_distributed_batch.py
+# -- this module's top-level hypothesis importorskip would skip them in
+# hypothesis-less environments, and the oracle check must always run.

@@ -1,0 +1,389 @@
+"""Sharded mixed-plan batching: distributed equivalence + properties.
+
+The contract: ``ShardedNavix.search_many`` with per-lane masks is
+lane-for-lane identical (ids, dists, aggregated stats) to the unsharded
+batched engine (``core.search_batch.search_many``) run per shard over
+shard-restricted masks and merged host-side under the same
+(distance, global id) lexicographic rule -- for every heuristic and
+shard count, with sigma in {0, small, 1} lanes fused in one batch.
+Quorum drops are exactly "restrict the reference to the alive shards",
+and padded rows (ShardedNavix.build pads with copies of the last row)
+can never surface, even under a caller-built all-ones local bitset or
+the semimask-ignoring ONEHOP_A branch.
+
+S > 1 cases need host devices: run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (CI does; the
+merge property tests are device-count independent).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitset
+from repro.core.distributed import (ShardedNavix, merge_shard_topk,
+                                    per_shard_reference)
+from repro.core.navix import NavixConfig
+
+HEURISTICS = ["onehop_s", "directed", "blind", "adaptive_g",
+              "adaptive_local", "onehop_a"]
+#: sigma=0 and sigma=1 lanes fused with mid/low selectivities in one batch
+SIGMAS = [1.0, 0.4, 0.1, 0.0, 0.03, 0.7]
+K, EFS = 6, 24
+
+
+def _need(s):
+    return pytest.mark.skipif(
+        len(jax.devices()) < s,
+        reason=f"needs {s} host devices "
+               f"(XLA_FLAGS=--xla_force_host_platform_device_count={s})")
+
+
+SHARD_COUNTS = [pytest.param(1), pytest.param(2, marks=_need(2)),
+                pytest.param(4, marks=_need(4))]
+
+STAT_FIELDS = ("iters", "t_dc", "s_dc", "upper_dc", "picks")
+
+
+def _lane_masks(n, sigmas, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in sigmas:
+        if s >= 1.0:
+            out.append(np.ones(n, bool))
+        elif s <= 0.0:
+            out.append(np.zeros(n, bool))
+        else:
+            out.append(rng.random(n) < s)
+    return np.stack(out)
+
+
+# -- lane-for-lane equivalence ----------------------------------------------
+# (the oracle is repro.core.distributed.per_shard_reference: the unsharded
+# batched engine per shard + numpy lexicographic merge -- shared with the
+# bench_serving --shards drift gate so the contract has ONE definition)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("heuristic", HEURISTICS)
+def test_sharded_matches_per_shard_reference(shard_env, n_shards, heuristic):
+    X, queries, factory = shard_env
+    sn = factory(n_shards)
+    n = sn.n_total
+    masks = _lane_masks(n, SIGMAS, seed=3)
+    Q = queries[:len(SIGMAS)]
+    params = sn._params(K, EFS, heuristic)
+
+    res = sn.search_many(Q, semimask=masks, k=K, efs=EFS,
+                         heuristic=heuristic)
+    ref_d, ref_i, ref_stats = per_shard_reference(sn, Q, masks, params)
+    np.testing.assert_array_equal(np.asarray(res.ids), ref_i,
+                                  err_msg=f"ids ({heuristic}, S={n_shards})")
+    np.testing.assert_array_equal(np.asarray(res.dists), ref_d)
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.stats, f)), getattr(ref_stats, f),
+            err_msg=f"stats.{f} ({heuristic}, S={n_shards})")
+    if heuristic != "onehop_a":          # onehop_a ignores the semimask
+        # every returned id is in that lane's own S
+        ids = np.asarray(res.ids)
+        for b in range(len(SIGMAS)):
+            row = ids[b][ids[b] >= 0]
+            assert masks[b][row].all(), f"lane {b} returned unselected ids"
+        assert (ids[3] == -1).all(), "sigma=0 lane must come back empty"
+
+
+@pytest.mark.parametrize("n_shards", [pytest.param(2, marks=_need(2)),
+                                      pytest.param(4, marks=_need(4))])
+def test_quorum_dead_shard_equals_alive_restricted(shard_env, n_shards):
+    """One dead shard => results identical to the reference merged over
+    the alive shards only (the unsharded search restricted to the alive
+    shards' vectors), and no dead-shard id appears."""
+    X, queries, factory = shard_env
+    sn = factory(n_shards)
+    masks = _lane_masks(sn.n_total, [0.5, 1.0, 0.08, 0.3], seed=11)
+    Q = queries[:4]
+    params = sn._params(K, EFS, "adaptive_local")
+    dead = n_shards - 1
+    alive = np.ones(n_shards, bool)
+    alive[dead] = False
+
+    res = sn.search_many(Q, semimask=masks, k=K, efs=EFS, alive=alive,
+                         quorum=n_shards - 1)
+    ref_d, ref_i, ref_stats = per_shard_reference(sn, Q, masks, params,
+                                                  alive=alive)
+    np.testing.assert_array_equal(np.asarray(res.ids), ref_i)
+    np.testing.assert_array_equal(np.asarray(res.dists), ref_d)
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(res.stats, f)),
+                                      getattr(ref_stats, f))
+    ids = np.asarray(res.ids)
+    shard_of = ids[ids >= 0] // sn.n_local
+    assert (shard_of != dead).all(), "dead shard leaked ids into the merge"
+
+    with pytest.raises(RuntimeError, match="quorum"):
+        sn.search_many(Q, semimask=masks, k=K, alive=alive,
+                       quorum=n_shards)
+    with pytest.raises(ValueError, match="alive"):
+        # a wrong-length mask would silently clamp inside jit
+        sn.search_many(Q, semimask=masks, k=K, alive=alive[:1])
+
+
+@pytest.mark.parametrize("n_shards", [pytest.param(2, marks=_need(2))])
+def test_shared_mask_fast_path_matches_per_lane(shard_env, n_shards):
+    """A shared bool[n] semimask (the [S, W] broadcast fast path) returns
+    exactly what the per-lane stack of B copies returns."""
+    X, queries, factory = shard_env
+    sn = factory(n_shards)
+    mask = _lane_masks(sn.n_total, [0.35], seed=5)[0]
+    Q = queries[:4]
+    a = sn.search_many(Q, semimask=mask, k=K, efs=EFS)
+    b = sn.search_many(Q, semimask=np.broadcast_to(mask, (4, sn.n_total)),
+                       k=K, efs=EFS)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    # and a per-lane search_fn lane-broadcasts a shared [S, W] mask
+    fn = sn.search_fn(K, EFS, per_lane=True)
+    d, ids = fn(sn._prep_query(Q), sn.shard_semimask(mask),
+                jnp.ones(n_shards, bool))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(a.ids))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(a.dists))
+
+
+@pytest.mark.parametrize("n_shards", [pytest.param(2, marks=_need(2))])
+def test_search_compat_wrapper(shard_env, n_shards):
+    """The legacy (dists, ids) surface rides the batched engine now."""
+    X, queries, factory = shard_env
+    sn = factory(n_shards)
+    mask = _lane_masks(sn.n_total, [0.4], seed=9)[0]
+    d, ids = sn.search(queries[:4], mask, k=K, efs=EFS)
+    res = sn.search_many(queries[:4], semimask=mask, k=K, efs=EFS)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(res.ids))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(res.dists))
+    sel = np.asarray(ids)
+    assert mask[sel[sel >= 0]].all()
+
+
+# -- padded rows (ShardedNavix.build pads with copies of the last row) -------
+
+
+@pytest.fixture(scope="module")
+def padded_sn():
+    """An index whose row count does NOT divide the shard count: 641
+    rows over 2 shards -> n_local=321, one padded copy of row 640."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 host devices")
+    from repro.data.synthetic import gaussian_mixture
+    X, _, centers = gaussian_mixture(641, 16, 8, seed=2)
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    sn = ShardedNavix.build(
+        X, NavixConfig(m_u=8, ef_construction=48, metric="l2", seed=0), mesh)
+    assert sn.n_shards * sn.n_local > sn.n_total, "fixture must pad"
+    rng = np.random.default_rng(3)
+    Q = (centers[:4] + 0.25 * rng.normal(size=(4, 16))).astype(np.float32)
+    return sn, Q
+
+
+@pytest.mark.parametrize("heuristic", ["adaptive_local", "onehop_a"])
+def test_padded_index_all_ones_mask_never_returns_padded_id(
+        padded_sn, heuristic):
+    """Regression (ISSUE 4 satellite): an all-ones semimask on a padded
+    index can never return a padded id -- including ONEHOP_A, which
+    ignores the semimask entirely."""
+    sn, Q = padded_sn
+    res = sn.search_many(Q, semimask=None, k=K, efs=EFS,
+                         heuristic=heuristic)
+    ids = np.asarray(res.ids)
+    assert (ids < sn.n_total).all(), "padded id surfaced"
+    for b in range(ids.shape[0]):
+        row = ids[b][ids[b] >= 0]
+        assert len(set(row.tolist())) == len(row), \
+            "padded duplicate of the last row surfaced twice"
+
+
+def test_padded_index_caller_built_full_local_bitset_is_guarded(padded_sn):
+    """The dangerous path: a caller hand-packs full_mask(n_local) per
+    shard, which marks the padded rows selected. The structural guard in
+    the merge must still drop them."""
+    sn, Q = padded_sn
+    full_local = jnp.broadcast_to(bitset.full_mask(sn.n_local),
+                                  (sn.n_shards, sn.n_words_local))
+    assert int(bitset.count_batch(full_local).sum()) \
+        == sn.n_shards * sn.n_local      # padded bits genuinely set
+    res = sn.search_many(Q, semimask=np.asarray(full_local), k=K, efs=EFS)
+    ids = np.asarray(res.ids)
+    assert (ids < sn.n_total).all(), "padded id surfaced past the guard"
+    for b in range(ids.shape[0]):
+        row = ids[b][ids[b] >= 0]
+        assert len(set(row.tolist())) == len(row)
+
+
+# -- NavixDB routing + the `sharded` program-cache arm -----------------------
+
+
+@pytest.mark.parametrize("n_shards", [pytest.param(2, marks=_need(2))])
+def test_db_execute_routes_sharded_with_per_query_masks(shard_env, n_shards):
+    from repro.api import NavixDB
+    from repro.query.operators import KnnSearch
+
+    X, queries, factory = shard_env
+    sn = factory(n_shards)
+    n = sn.n_total
+    db = NavixDB()
+    db.register_index("default", sn)
+    masks = [np.arange(n) < n // 4, None, np.arange(n) % 2 == 0]
+    plan = KnnSearch(child=None, table="default", k=5, efs=30)
+    rs = db.execute(plan, query=queries[:3], masks=masks)
+    assert rs.ids.shape == (3, 5)
+    assert rs.sigmas is not None
+    assert rs.sigmas[0] == pytest.approx(0.25, abs=0.01)
+    assert rs.sigmas[1] == pytest.approx(1.0)
+    ids0 = rs.ids[0][rs.ids[0] >= 0]
+    assert (ids0 < n // 4).all()
+    ids2 = rs.ids[2][rs.ids[2] >= 0]
+    assert (ids2 % 2 == 0).all()
+
+    # identical to the direct sharded engine call
+    ref = sn.search_many(queries[:3],
+                         semimask=[masks[0], None, masks[2]], k=5, efs=30)
+    np.testing.assert_array_equal(rs.ids, np.asarray(ref.ids))
+
+    # the sharded arm caches: a same-shape re-execution compiles nothing
+    before = db.programs.stats.misses
+    rs2 = db.execute(plan, query=queries[:3], masks=masks)
+    assert db.programs.stats.misses == before, \
+        "same-shape sharded plan must be a cache hit"
+    np.testing.assert_array_equal(rs.ids, rs2.ids)
+
+    # single-query lift + alive threading
+    rs3 = db.execute(plan, query=queries[0])
+    assert rs3.ids.shape == (5,)
+    alive = np.array([True, False])
+    rs4 = db.execute(plan, query=queries[0], alive=alive)
+    ids4 = rs4.ids[rs4.ids >= 0]
+    assert (ids4 < sn.n_local).all(), "dead shard leaked through execute"
+
+    with pytest.raises(ValueError, match="batched"):
+        db.execute(plan, query=queries[:3], engine="vmap")
+
+
+# -- shard-merge properties (device-count independent) -----------------------
+
+
+def _random_shard_lists(s, b, l, seed, pad_frac):
+    """Per-shard candidate lists with duplicate distances and random
+    padding; ids unique across (shard, slot) like real shard-local
+    results (shards own disjoint global id ranges)."""
+    rng = np.random.default_rng(seed)
+    # few distinct values => many cross-shard distance ties
+    d = rng.choice([0.0, 0.25, 0.5, 1.0, 2.0], size=(s, b, l))
+    ids = np.broadcast_to(
+        (np.arange(s)[:, None, None] * l + np.arange(l)[None, None, :]),
+        (s, b, l)).copy().astype(np.int32)
+    pad = rng.random((s, b, l)) < pad_frac
+    d = np.where(pad, np.inf, d).astype(np.float32)
+    ids = np.where(pad, -1, ids)
+    return d, ids
+
+
+def test_merge_topk_properties():
+    """Random shard counts / paddings / duplicate distances: the merged
+    top-k is sorted, contains no padded-slot ids, no id twice, and is
+    exactly the numpy lexicographic-(d, id) reference."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(s=st.integers(1, 5), b=st.integers(1, 3), l=st.integers(1, 6),
+           k_frac=st.floats(0.1, 1.5), seed=st.integers(0, 2**31 - 1),
+           pad_frac=st.sampled_from([0.0, 0.3, 0.95]))
+    @settings(max_examples=40, deadline=None)
+    def run(s, b, l, k_frac, seed, pad_frac):
+        k = max(1, min(int(k_frac * s * l), s * l))
+        d, ids = _random_shard_lists(s, b, l, seed, pad_frac)
+        out_d, out_i = merge_shard_topk(jnp.asarray(d), jnp.asarray(ids), k)
+        out_d, out_i = np.asarray(out_d), np.asarray(out_i)
+        flat_d = np.swapaxes(d, 0, 1).reshape(b, s * l)
+        flat_i = np.swapaxes(ids, 0, 1).reshape(b, s * l)
+        for row in range(b):
+            # sorted ascending
+            assert (np.diff(out_d[row]) >= 0).all()
+            finite = np.isfinite(out_d[row])
+            # -1 exactly on the +inf (padded / exhausted) slots
+            np.testing.assert_array_equal(out_i[row] >= 0, finite)
+            got = out_i[row][finite]
+            # no id twice, no padded-slot id
+            assert len(set(got.tolist())) == len(got)
+            assert np.isin(got, flat_i[row][flat_i[row] >= 0]).all()
+            # exactly the numpy lexicographic-(d, id) reference
+            order = np.lexsort((flat_i[row], flat_d[row]))[:k]
+            ref_d = flat_d[row][order]
+            ref_i = np.where(np.isfinite(ref_d), flat_i[row][order], -1)
+            np.testing.assert_array_equal(out_d[row], ref_d)
+            np.testing.assert_array_equal(out_i[row], ref_i)
+
+    run()
+
+
+def test_merge_topk_shard_order_invariant():
+    """Permuting the shard axis never changes the merged output -- the
+    (distance, id) tie-break is shard-order free even with duplicate
+    distances across shards."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(s=st.integers(2, 5), b=st.integers(1, 3), l=st.integers(1, 6),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def run(s, b, l, seed):
+        k = max(1, (s * l) // 2)
+        d, ids = _random_shard_lists(s, b, l, seed, pad_frac=0.3)
+        perm = np.random.default_rng(seed + 1).permutation(s)
+        a_d, a_i = merge_shard_topk(jnp.asarray(d), jnp.asarray(ids), k)
+        p_d, p_i = merge_shard_topk(jnp.asarray(d[perm]),
+                                    jnp.asarray(ids[perm]), k)
+        np.testing.assert_array_equal(np.asarray(a_d), np.asarray(p_d))
+        np.testing.assert_array_equal(np.asarray(a_i), np.asarray(p_i))
+
+    run()
+
+
+# -- shard-aware bitset primitives (deterministic; kept out of
+# test_bitset.py, whose module-level hypothesis importorskip would skip
+# them in hypothesis-less environments) --------------------------------------
+
+
+def test_count_members_batch_matches_vmap_oracle():
+    """The flattened-gather form must stay integer-exact against
+    vmap(count_members) on the 2-D lane form the engine hot loop uses."""
+    rng = np.random.default_rng(0)
+    mask = rng.random((5, 70)) < 0.4
+    ids = rng.integers(-1, 70, size=(5, 9)).astype(np.int32)
+    bits = bitset.pack(jnp.asarray(mask))
+    oracle = jax.vmap(bitset.count_members)(bits, jnp.asarray(ids))
+    np.testing.assert_array_equal(
+        np.asarray(bitset.count_members_batch(bits, jnp.asarray(ids))),
+        np.asarray(oracle))
+
+
+def test_broadcast_shard_lanes():
+    bits = jnp.arange(6, dtype=jnp.uint32).reshape(2, 3)      # [S=2, W=3]
+    out = bitset.broadcast_shard_lanes(bits, 4)
+    assert out.shape == (2, 4, 3)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.tile(np.arange(6, dtype=np.uint32)
+                                          .reshape(2, 1, 3), (1, 4, 1)))
+    # per-lane input passes through; wrong lane count raises
+    np.testing.assert_array_equal(np.asarray(
+        bitset.broadcast_shard_lanes(out, 4)), np.asarray(out))
+    with pytest.raises(ValueError, match="lanes"):
+        bitset.broadcast_shard_lanes(out, 5)
+
+
+def test_merge_topk_rejects_overlong_k():
+    d = jnp.zeros((2, 1, 3), jnp.float32)
+    i = jnp.zeros((2, 1, 3), jnp.int32)
+    with pytest.raises(ValueError, match="merge candidates"):
+        merge_shard_topk(d, i, 7)

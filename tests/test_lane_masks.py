@@ -162,6 +162,12 @@ def test_db_execute_with_per_query_masks(index, queries):
     with pytest.raises(ValueError, match="one entry per query row"):
         db.execute(KnnSearch(child=None, table="default", k=5),
                    query=np.asarray(queries[:3]), masks=masks[:2])
+    # alive= is a sharded-index knob; silently ignoring it would hide a
+    # caller's quorum intent
+    with pytest.raises(ValueError, match="unsharded"):
+        db.execute(KnnSearch(child=None, table="default", k=5),
+                   query=np.asarray(queries[:3]),
+                   alive=np.array([True, False]))
 
 
 def test_program_cache_per_lane_arm_no_collision(index, queries):

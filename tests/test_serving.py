@@ -1,9 +1,15 @@
+import jax
 import numpy as np
 import pytest
 
 from repro.query.operators import Filter, NodeScan
 from repro.serving.engine import SearchEngine
 from repro.storage.columnar import GraphStore
+
+needs_2_devices = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs 2 host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
 
 
 @pytest.fixture()
@@ -95,6 +101,18 @@ def test_unknown_scheduler_rejected(index, queries):
         eng.drain()
 
 
+@pytest.mark.parametrize("sched", ["continuous", "grouped"])
+def test_alive_on_unsharded_index_rejected(index, queries, sched):
+    """A quorum mask on an unsharded index is a misconfiguration; both
+    schedulers must surface it instead of silently ignoring it (same
+    contract as NavixDB.execute(alive=...))."""
+    eng = _mixed_plan_engine(index, scheduler=sched, efs=20)
+    eng.alive = np.array([True, False])
+    eng.submit(queries[0], k=3)
+    with pytest.raises(ValueError, match="unsharded|alive"):
+        eng.drain()
+
+
 def test_batched_requests(engine, queries):
     plan = Filter(NodeScan("Chunk"), "cID", "<", value=engine.index.graph.n // 2)
     rids = [engine.submit(q, plan=plan, k=5) for q in queries]
@@ -110,6 +128,128 @@ def test_batched_requests(engine, queries):
     summary = engine.latency_summary()
     assert summary["n"] == len(rids)
     assert summary["p99_ms"] >= summary["p50_ms"]
+
+
+# -- the continuous scheduler over a SHARDED index ---------------------------
+# (per-lane k/efs capping and lane refill unchanged; lane state gains the
+# shard dim, finalize merges across shards under the engine's alive mask)
+
+
+def _sharded_engine(sn, **kw):
+    store = GraphStore()
+    store.add_node_table("Chunk", sn.n_total,
+                         {"cID": np.arange(sn.n_total)})
+    return SearchEngine(index=sn, store=store, **kw)
+
+
+@needs_2_devices
+def test_sharded_every_rid_exactly_once_under_refill(shard_env):
+    """More distinct-plan requests than lanes on a sharded index: every
+    rid answered exactly once, each response bitwise the one-shot
+    sharded search_many over that request's own S."""
+    X, queries, factory = shard_env
+    sn = factory(2)
+    n = sn.n_total
+    eng = _sharded_engine(sn, efs=30, max_batch=4, scheduler="continuous",
+                          step_iters=3, refill_threshold=1)
+    cutoffs = [n // 10, n // 5, n // 3, n // 2, 2 * n // 3, n,
+               n // 8, n // 4]
+    rids = {}
+    for j, cut in enumerate(cutoffs):
+        plan = Filter(NodeScan("Chunk"), "cID", "<", value=cut)
+        rid = eng.submit(queries[j % len(queries)], plan=plan, k=6)
+        rids[rid] = (j, cut)
+    responses = eng.drain()
+    assert sorted(r.rid for r in responses) == sorted(rids), \
+        "every rid must be answered exactly once"
+    for r in responses:
+        j, cut = rids[r.rid]
+        assert not r.degraded
+        assert r.sigma == pytest.approx(cut / n, abs=1e-6)
+        mask = np.arange(n) < cut
+        ref = sn.search_many(queries[j % len(queries)], semimask=mask,
+                             k=6, efs=30)
+        np.testing.assert_array_equal(r.ids, np.asarray(ref.ids)[0],
+                                      err_msg=f"rid {r.rid} (cut={cut})")
+        np.testing.assert_array_equal(r.dists, np.asarray(ref.dists)[0])
+    assert eng.latency_summary()["n"] == len(cutoffs)
+
+
+@needs_2_devices
+def test_sharded_continuous_matches_grouped(shard_env):
+    """Same mixed workload through both schedulers on a sharded index:
+    identical answers (the grouped path goes through NavixDB.execute's
+    sharded arm, the continuous path through the sharded stepping API)."""
+    X, queries, factory = shard_env
+    sn = factory(2)
+    n = sn.n_total
+    plans = [Filter(NodeScan("Chunk"), "cID", "<", value=c)
+             for c in (n // 4, n // 2, n, n // 3)]
+    results = {}
+    for sched in ("continuous", "grouped"):
+        eng = _sharded_engine(sn, efs=24, max_batch=8, scheduler=sched)
+        rids = [eng.submit(queries[j % len(queries)],
+                           plan=plans[j % len(plans)], k=5)
+                for j in range(8)]
+        by = {r.rid: r for r in eng.drain()}
+        results[sched] = [by[rid] for rid in rids]
+    for a, b in zip(results["continuous"], results["grouped"]):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+        assert a.sigma == pytest.approx(b.sigma)
+        assert not a.degraded and not b.degraded
+
+
+@needs_2_devices
+def test_sharded_straggler_flip_mid_drain_flags_degraded(shard_env):
+    """The alive mask flips after the first device step (a liveness probe
+    would do this from step_hook): every response finalized afterwards is
+    flagged degraded, contains no dead-shard ids, and equals the one-shot
+    search restricted to the alive shards."""
+    X, queries, factory = shard_env
+    sn = factory(2)
+    n = sn.n_total
+    eng = _sharded_engine(sn, efs=30, max_batch=4, scheduler="continuous",
+                          step_iters=2, refill_threshold=1)
+    hooks = []
+
+    def probe(info):
+        hooks.append(dict(info))
+        eng.alive = np.array([True, False])     # shard 1 dies mid-drain
+
+    eng.step_hook = probe
+    cutoffs = [n // 6, n // 3, n // 2, n, n // 4, 2 * n // 3]
+    rids = {}
+    for j, cut in enumerate(cutoffs):
+        plan = Filter(NodeScan("Chunk"), "cID", "<", value=cut)
+        rid = eng.submit(queries[j % len(queries)], plan=plan, k=6)
+        rids[rid] = (j, cut)
+    responses = eng.drain()
+    assert sorted(r.rid for r in responses) == sorted(rids)
+    assert hooks, "step_hook must fire"
+    assert all(r.degraded for r in responses), \
+        "every lane finalized after the flip must be flagged"
+    alive = np.array([True, False])
+    for r in responses:
+        j, cut = rids[r.rid]
+        ids = r.ids[r.ids >= 0]
+        assert (ids < sn.n_local).all(), "dead shard leaked ids"
+        mask = np.arange(n) < cut
+        ref = sn.search_many(queries[j % len(queries)], semimask=mask,
+                             k=6, efs=30, alive=alive)
+        np.testing.assert_array_equal(r.ids, np.asarray(ref.ids)[0])
+        np.testing.assert_array_equal(r.dists, np.asarray(ref.dists)[0])
+    # and the flip genuinely changed answers vs an all-alive engine
+    eng2 = _sharded_engine(sn, efs=30, max_batch=4, scheduler="continuous")
+    rids2 = [eng2.submit(queries[j % len(queries)],
+                         plan=Filter(NodeScan("Chunk"), "cID", "<",
+                                     value=cut), k=6)
+             for j, cut in enumerate(cutoffs)]
+    by2 = {r.rid: r for r in eng2.drain()}
+    assert not any(r.degraded for r in by2.values())
+    healthy = np.concatenate([by2[rid].ids for rid in rids2])
+    assert (healthy[healthy >= 0] >= sn.n_local).any(), \
+        "the healthy drain should use shard-1 vectors somewhere"
 
 
 def test_greedy_generate_shapes():
