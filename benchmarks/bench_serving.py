@@ -20,10 +20,23 @@ answer against the *unsharded batched engine* run per shard over
 shard-restricted masks and merged host-side -- zero drift is a gated
 claim.
 
+The ``--open-loop`` arm serves the same request mix through the LIVE
+:class:`~repro.serving.service.SearchService` (thread driver) under a
+Poisson arrival process, sweeping the offered load as a fraction of the
+measured closed-queue drain QPS. Per-λ rows (p50/p99 latency, timeout
+rate) land next to the closed-queue rows in ``BENCH_serving.json`` so
+``trend.py --check-trend`` can gate open-loop p99 across runs.
+
 Claims gated by validate(): continuous-batching QPS >= 1.3x the
 per-group-drain path (>= 1.0x sanity floor in REPRO_BENCH_QUICK mode,
 where the problem is too small for the margin to be stable), with
-identical per-request answers; and zero sharded answer drift.
+identical per-request answers; zero sharded answer drift; and -- in the
+sharded arm -- a suppressed shard heartbeat flips responses to degraded
+automatically with zero drift vs the alive-restricted reference.
+Open-loop claims (``validate_open_loop``): at offered load <= 0.7x the
+closed-drain QPS with generous deadlines, the timeout rate is 0 and p99
+latency stays bounded by the closed-queue full-drain wall time (i.e. no
+unbounded queue growth).
 """
 
 from __future__ import annotations
@@ -56,6 +69,10 @@ SPEEDUP_FLOOR = 1.0 if common.QUICK else 1.3
 SHARDS = 2                       # the --shards arm run() spawns by default
 #: request selectivities -- each request gets its own predicate
 SELECTIVITIES = (0.05, 0.1, 0.2, 0.35, 0.5, 0.75, 0.9, 1.0)
+#: open-loop offered loads as fractions of the closed-drain QPS
+OPEN_LOOP_FRACS = (0.3, 0.7) if common.QUICK else (0.3, 0.5, 0.7)
+OPEN_LOOP_DEADLINE_S = 60.0      # generous: timeouts at <= 0.7x load are
+                                 # a service bug, not an SLO miss
 
 
 def _requests(n: int, centers, d: int, n_req: int, rng):
@@ -172,6 +189,109 @@ def run() -> list[dict]:
     return rows
 
 
+def run_open_loop(smoke: bool = False) -> list[dict]:
+    """The ``--open-loop`` arm: Poisson arrivals into the live
+    SearchService at offered loads swept as fractions of the measured
+    closed-queue drain QPS. Rows merge into BENCH_serving.json next to
+    the closed-queue rows (kept for trend continuity)."""
+    from repro.api.db import NavixDB
+
+    n, d, n_req, reps = _workload()
+    if smoke:
+        n_req, reps = min(n_req, 16), 1
+    X, reqs = _request_stream(n, d, n_req)
+    index = common.cached_index(f"bench_search_{n}",
+                                X, NavixConfig(m_u=8, ef_construction=64,
+                                               metric="l2", seed=0))
+
+    def make_store() -> GraphStore:
+        store = GraphStore()
+        store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+        return store
+
+    # closed-queue anchor: the continuous scheduler's drain QPS on the
+    # identical stream sets the offered-load scale
+    engine = SearchEngine(index=index, store=make_store(), efs=EFS,
+                          max_batch=MAX_BATCH, scheduler="continuous",
+                          step_iters=STEP_ITERS)
+    _serve(engine, reqs)                            # warm-up compile
+    closed_walls = [_serve(engine, reqs)[0] for _ in range(reps)]
+    closed_drain_ms = float(np.median(closed_walls)) * 1e3
+    closed_qps = n_req / (closed_drain_ms / 1e3)
+
+    db = NavixDB(make_store())
+    db.register_index("default", index)
+    fracs = OPEN_LOOP_FRACS[-1:] if smoke else OPEN_LOOP_FRACS
+    rng = np.random.default_rng(23)
+    rows: list[dict] = []
+    for frac in fracs:
+        lam = frac * closed_qps
+        svc = db.serve(k_cap=K, efs_cap=EFS, max_batch=MAX_BATCH,
+                       step_iters=STEP_ITERS,
+                       default_deadline_s=OPEN_LOOP_DEADLINE_S,
+                       queue_size=max(64, 2 * n_req)).start()
+        # warm the service program before the timed arrival process
+        for f in [svc.submit(q, plan=p, k=K) for q, p in reqs[:2]]:
+            f.result(timeout=600)
+        gaps = rng.exponential(1.0 / lam, size=n_req)
+        t0 = time.perf_counter()
+        futs = []
+        for (q, plan), gap in zip(reqs, gaps):
+            time.sleep(gap)
+            futs.append(svc.submit(q, plan=plan, k=K))
+        resps = [f.result(timeout=600) for f in futs]
+        wall = time.perf_counter() - t0
+        svc.shutdown(drain=True)
+        lats = [r.queue_ms + r.exec_ms + r.prefilter_ms for r in resps]
+        n_timeout = sum(1 for r in resps if r.timeout)
+        rows.append({
+            "sched": "open-loop", "lam_frac": frac, "n_req": n_req,
+            "offered_qps": round(lam, 2),
+            "qps": round(len(resps) / wall, 2),
+            "p50_ms": round(float(np.percentile(lats, 50)), 3),
+            "p99_ms": round(float(np.percentile(lats, 99)), 3),
+            "timeout_rate": round(n_timeout / len(resps), 4),
+        })
+    common.emit(rows, "serving_open_loop")
+
+    # merge next to the closed-queue rows (replacing any previous
+    # open-loop rows) so one file carries the whole serving story
+    payload = (json.loads(JSON_OUT.read_text()) if JSON_OUT.exists()
+               else {"workload": {"n": n, "d": d, "k": K, "efs": EFS,
+                                  "quick": common.QUICK}, "rows": []})
+    payload["rows"] = ([r for r in payload.get("rows", [])
+                        if r.get("sched") != "open-loop"] + rows)
+    payload["open_loop"] = {"closed_drain_ms": round(closed_drain_ms, 2),
+                            "closed_qps": round(closed_qps, 2),
+                            "deadline_s": OPEN_LOOP_DEADLINE_S,
+                            "n_req": n_req, "smoke": smoke}
+    JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
+    JSON_OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    for r in rows:
+        r["_closed_drain_ms"] = closed_drain_ms
+    return rows
+
+
+def validate_open_loop(rows: list[dict]) -> list[str]:
+    """Open-loop gates: 0 timeouts at generous deadlines, and p99
+    bounded by the closed-queue FULL-drain wall time at <= 0.7x load
+    (an unbounded queue would blow straight past it)."""
+    fails: list[str] = []
+    if not rows:
+        return ["open-loop produced no rows"]
+    for r in rows:
+        if r["timeout_rate"] > 0:
+            fails.append(f"open-loop timeout rate {r['timeout_rate']:.2%} "
+                         f"at lam_frac={r['lam_frac']} (deadline "
+                         f"{OPEN_LOOP_DEADLINE_S}s is generous; want 0)")
+        bound = r["_closed_drain_ms"]
+        if r["lam_frac"] <= 0.7 and r["p99_ms"] > bound:
+            fails.append(f"open-loop p99 {r['p99_ms']:.1f}ms exceeds the "
+                         f"closed-drain bound {bound:.1f}ms at lam_frac="
+                         f"{r['lam_frac']} (queue growth?)")
+    return fails
+
+
 def _spawn_sharded(shards: int) -> dict:
     """Run the --shards arm in a subprocess with enough host devices and
     return its JSON payload ({"error": ...} on failure). The parent's
@@ -249,6 +369,8 @@ def run_sharded(shards: int) -> dict:
         if not np.array_equal(answers["sharded"][rid].ids, ref_ids[j]):
             drift += 1
 
+    hb_degraded, hb_drift = _heartbeat_scenario(sn, reqs, params, shards)
+
     med = {name: float(np.median(walls[name])) for name in engines}
     lat = engines["sharded"].latency_summary()
     row = {"sched": "continuous", "shards": shards, "n_req": n_req,
@@ -264,7 +386,64 @@ def run_sharded(shards: int) -> dict:
         "sharded_over_unsharded_qps": round(
             med["unsharded"] / med["sharded"], 3),
         "answer_drift_vs_unsharded_engine": drift,
+        "heartbeat_degraded": hb_degraded,
+        "heartbeat_drift": hb_drift,
     }
+
+
+def _heartbeat_scenario(sn, reqs, params, shards: int) -> tuple[bool, int]:
+    """Straggler-shard drill on the LIVE service: suppress the last
+    shard's heartbeats mid-run; responses finalized after staleness must
+    flip to degraded AUTOMATICALLY (no caller-set alive mask) and equal
+    the alive-restricted per-shard reference. Returns
+    (all_phase2_degraded, phase2_drift_count)."""
+    from repro.api.db import NavixDB
+    from repro.core.distributed import per_shard_reference
+    from repro.serving import HeartbeatMonitor, SearchService
+
+    class _Clk:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clk = _Clk()
+    hb = HeartbeatMonitor(shards, stale_after=2.0, clock=clk)
+    n = sn.n_total
+    store = GraphStore()
+    store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+    db = NavixDB(store)
+    db.register_index("default", sn)
+    svc = SearchService(db, k_cap=K, efs_cap=EFS, max_batch=MAX_BATCH,
+                        step_iters=STEP_ITERS, heartbeats=hb)
+
+    def drive(futs, max_ticks=2000):
+        for _ in range(max_ticks):
+            if all(f.done() for f in futs):
+                return [f.result(timeout=0) for f in futs]
+            svc._tick()
+        raise RuntimeError("heartbeat scenario did not converge")
+
+    sub = reqs[:min(len(reqs), 8)]
+    drive([svc.submit(q, plan=p, k=K) for q, p in sub])    # warm, healthy
+
+    # the straggler: last shard's worker goes silent, heartbeat ages out
+    hb.suppress(shards - 1)
+    clk.t = 10.0
+    for s in range(shards - 1):
+        hb.beat(s)
+    resps = drive([svc.submit(q, plan=p, k=K) for q, p in sub])
+    svc.shutdown(drain=True)
+
+    alive = np.ones(shards, bool)
+    alive[shards - 1] = False
+    Q = np.stack([q for q, _ in sub])
+    masks = np.stack([np.arange(n) < plan.value for _, plan in sub])
+    _, ref_ids, _ = per_shard_reference(sn, Q, masks, params, alive=alive)
+    degraded = all(r.degraded for r in resps)
+    drift = sum(1 for j, r in enumerate(resps)
+                if not np.array_equal(np.asarray(r.ids), ref_ids[j]))
+    return degraded, drift
 
 
 def validate(rows: list[dict]) -> list[str]:
@@ -288,6 +467,14 @@ def validate(rows: list[dict]) -> list[str]:
             f"{sharded['answer_drift_vs_unsharded_engine']} sharded "
             f"responses drifted from the per-shard unsharded-engine "
             f"reference merge")
+    if sharded and "error" not in sharded:
+        if not sharded.get("heartbeat_degraded", True):
+            fails.append("suppressed shard heartbeat did NOT flip "
+                         "responses to degraded automatically")
+        if sharded.get("heartbeat_drift"):
+            fails.append(
+                f"{sharded['heartbeat_drift']} degraded responses "
+                f"drifted from the alive-restricted reference")
     return fails
 
 
@@ -297,10 +484,22 @@ def main() -> None:
                     help="run ONLY the sharded arm in this process "
                          "(needs >= that many host devices) and print "
                          "its JSON payload")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="run the live-service open-loop arm (Poisson "
+                         "arrivals, deadline/timeout gates) and merge "
+                         "its rows into BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --open-loop: single offered load, fewer "
+                         "requests (CI smoke)")
     args = ap.parse_args()
     if args.shards:
         print(json.dumps(run_sharded(args.shards)))
         return
+    if args.open_loop:
+        fails = validate_open_loop(run_open_loop(smoke=args.smoke))
+        for f in fails:
+            print("CLAIM-FAIL:", f)
+        sys.exit(1 if fails else 0)
     fails = validate(run())
     for f in fails:
         print("CLAIM-FAIL:", f)

@@ -23,7 +23,11 @@ _WORKLOAD_KEYS = ("n", "d", "k", "efs", "quick")
 
 #: measured (run-varying) fields excluded from a row's identity
 _METRIC_KEYS = ("qps", "p50_ms", "p95_ms", "p99_ms", "recall", "mean_ms",
-                "drain_ms")
+                "drain_ms", "offered_qps", "timeout_rate")
+
+#: open-loop p99 rows tolerate 2x the QPS tolerance: tail latency under
+#: a random arrival process is noisier than closed-drain throughput
+_P99_TOL_SCALE = 2.0
 
 
 def _row_key(row: dict) -> tuple:
@@ -47,21 +51,36 @@ def compare(current: dict, baseline: dict,
     fails: list[str] = []
     for row in current.get("rows", []):
         prev = base_rows.get(_row_key(row))
-        if prev is None or "qps" not in row or "qps" not in prev:
+        if prev is None:
             continue
-        if prev["qps"] <= 0:
-            continue
-        ratio = row["qps"] / prev["qps"]
         label = ", ".join(f"{k}={row[k]}"
-                          for k in ("engine", "B", "sched", "shards")
+                          for k in ("engine", "B", "sched", "shards",
+                                    "lam_frac")
                           if k in row)
-        if ratio < 1.0 - tol:
-            fails.append(f"QPS regression at ({label}): "
-                         f"{prev['qps']:.1f} -> {row['qps']:.1f} "
-                         f"({ratio:.2f}x, floor {1.0 - tol:.2f}x)")
-        else:
-            notes.append(f"({label}): {prev['qps']:.1f} -> "
-                         f"{row['qps']:.1f} ({ratio:.2f}x) ok")
+        if ("qps" in row and "qps" in prev and prev["qps"] > 0):
+            ratio = row["qps"] / prev["qps"]
+            if ratio < 1.0 - tol:
+                fails.append(f"QPS regression at ({label}): "
+                             f"{prev['qps']:.1f} -> {row['qps']:.1f} "
+                             f"({ratio:.2f}x, floor {1.0 - tol:.2f}x)")
+            else:
+                notes.append(f"({label}): {prev['qps']:.1f} -> "
+                             f"{row['qps']:.1f} ({ratio:.2f}x) ok")
+        # open-loop rows additionally gate tail latency: a p99 blow-up at
+        # fixed offered load means the live service regressed even if
+        # completion QPS (== arrival rate) looks unchanged
+        if (row.get("sched") == "open-loop" and "p99_ms" in row
+                and prev.get("p99_ms", 0) > 0):
+            p99_tol = tol * _P99_TOL_SCALE
+            ratio = row["p99_ms"] / prev["p99_ms"]
+            if ratio > 1.0 + p99_tol:
+                fails.append(f"open-loop p99 regression at ({label}): "
+                             f"{prev['p99_ms']:.1f}ms -> "
+                             f"{row['p99_ms']:.1f}ms ({ratio:.2f}x, "
+                             f"ceiling {1.0 + p99_tol:.2f}x)")
+            else:
+                notes.append(f"({label}) p99: {prev['p99_ms']:.1f}ms -> "
+                             f"{row['p99_ms']:.1f}ms ({ratio:.2f}x) ok")
     return fails, notes
 
 

@@ -1,24 +1,24 @@
-"""End-to-end driver: a filtered vector-search service on the Wiki-like
-graph store serving batched requests (the paper's kind of system is a
-serving system, so the end-to-end driver serves batched requests).
+"""End-to-end driver: a LIVE filtered vector-search service on the
+Wiki-like graph store.
 
-Requests carry declarative plan templates (built with ``repro.api.Q``,
-query vector bound per request by the engine). The default scheduler is
-continuous batching: requests with *different* plans fuse into one
-device batch (each lane carries its own selection subquery's semimask),
-converged lanes are compacted out and refilled from the queue, and each
-distinct prefilter runs exactly once per drain. Latency percentiles are
-reported like a production tier. ``SearchEngine(scheduler="grouped")``
-selects the per-plan reference path (which also exercises the shared
-compiled-program cache through NavixDB.execute).
+Unlike the closed-queue engine demo this used to be, the service here is
+the real long-running shape: a :class:`~repro.serving.service
+.SearchService` device loop runs in a background thread while client
+code ``submit()``s requests against declarative plan templates (built
+with ``repro.api.Q``) under a Poisson arrival process. Between step
+chunks the loop admits new lanes from the bounded submission queue
+(deadline-ordered, selectivity-binned), evicts lanes past their
+deadline (``timeout`` / salvaged ``partial`` responses), and applies
+backpressure when the queue gates. A few doomed requests carry
+millisecond deadlines to show the timeout path; live gauges print at
+the end.
 
-``--shards S`` serves the same workload on a sharded index
-(:class:`repro.core.distributed.ShardedNavix`): the chunk embeddings
-split into S shard-local HNSW subgraphs, every request's semimask
-becomes a ``[S, B, W_local]`` per-lane stack, and per-shard candidates
-merge into the global top-k in one device op. The demo ends by killing
-one shard mid-service: responses degrade gracefully (flagged
-``degraded``, no dead-shard ids) instead of failing.
+``--shards S`` serves on a sharded index
+(:class:`repro.core.distributed.ShardedNavix`) with HEARTBEAT-derived
+shard liveness: a beater thread heartbeats every shard, the demo
+suppresses one shard's beats mid-run (a straggler), and responses flip
+to ``degraded`` automatically -- no caller-set alive mask -- with no
+dead-shard ids.
 
     PYTHONPATH=src python examples/search_service.py [--requests 60]
     PYTHONPATH=src python examples/search_service.py --shards 2
@@ -26,36 +26,68 @@ one shard mid-service: responses degrade gracefully (flagged
 
 import argparse
 import os
+import re
+import sys
+import threading
+import time
+
+
+def _ensure_host_devices(need: int) -> None:
+    """Make sure >= ``need`` host platform devices exist.
+
+    ``--xla_force_host_platform_device_count`` only works if it lands in
+    ``XLA_FLAGS`` BEFORE jax initializes its backend. If some earlier
+    import already initialized jax with too few devices, mutating the
+    env var would be silently ignored -- so detect that and raise a
+    clear error instead of serving on too few devices.
+    """
+    jax_mod = sys.modules.get("jax")
+    if jax_mod is not None:
+        try:
+            from jax._src import xla_bridge
+            initialized = bool(xla_bridge._backends)
+        except Exception:       # private API moved: assume initialized
+            initialized = True
+        if initialized:
+            have = len(jax_mod.devices())
+            if have < need:
+                raise RuntimeError(
+                    f"jax already initialized with {have} host device(s) "
+                    f"but --shards needs {need}; XLA_FLAGS set now would "
+                    f"be ignored. Relaunch with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={need} in "
+                    f"the environment (before any jax import).")
+            return              # enough devices: nothing to do
+    prev = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", prev)
+    if m is None or int(m.group(1)) < need:
+        prev = re.sub(r"--xla_force_host_platform_device_count=\d+",
+                      "", prev)
+        os.environ["XLA_FLAGS"] = (
+            f"{prev} --xla_force_host_platform_device_count={need}"
+        ).strip()
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="offered load (Poisson arrival rate)")
+    ap.add_argument("--deadline", type=float, default=5.0,
+                    help="per-request deadline (seconds)")
     ap.add_argument("--shards", type=int, default=0,
                     help="serve on a ShardedNavix with this many shards "
                          "(spawns placeholder host devices)")
     args = ap.parse_args()
     if args.shards:
-        # must be set before jax initializes its backend; a pre-existing
-        # XLA_FLAGS keeps its other options, and an existing (too-small)
-        # device count is raised rather than trusted
-        import re
-        need = max(4, args.shards)
-        prev = os.environ.get("XLA_FLAGS", "")
-        m = re.search(r"--xla_force_host_platform_device_count=(\d+)", prev)
-        if m is None or int(m.group(1)) < need:
-            prev = re.sub(r"--xla_force_host_platform_device_count=\d+",
-                          "", prev)
-            os.environ["XLA_FLAGS"] = (
-                f"{prev} --xla_force_host_platform_device_count={need}"
-            ).strip()
+        _ensure_host_devices(max(4, args.shards))
 
     import numpy as np
 
     from repro.api import NavixDB, Q
     from repro.core.navix import NavixConfig
     from repro.data.synthetic import make_queries, make_wiki_like
-    from repro.serving.engine import SearchEngine
+    from repro.serving import HeartbeatMonitor
 
     print("== building the Wiki-like graph + index catalog ==")
     data = make_wiki_like(n_person=300, n_resource=1200, d=48, seed=0)
@@ -80,7 +112,22 @@ def main():
             vectors=data.embeddings, config=config)
         print(f"chunks={data.n_chunks} build={stats.seconds:.1f}s")
 
-    engine = SearchEngine(db=db, efs=80)
+    # heartbeat-derived shard liveness: a beater thread stands in for
+    # per-shard workers; the straggler drill below suppresses one shard
+    hb = (HeartbeatMonitor(args.shards, stale_after=0.5)
+          if args.shards else None)
+    stop_beating = threading.Event()
+    if hb is not None:
+        def beater():
+            while not stop_beating.is_set():
+                hb.beat_all()
+                time.sleep(0.1)
+        threading.Thread(target=beater, daemon=True).start()
+
+    svc = db.serve(index="chunk_emb", k_cap=10, efs_cap=80, max_batch=16,
+                   step_iters=16, default_deadline_s=args.deadline,
+                   queue_size=max(64, args.requests), policy="block",
+                   heartbeats=hb).start()
 
     # a mix of production-ish request types, as declarative plan templates
     plans = {
@@ -101,38 +148,57 @@ def main():
     rng = np.random.default_rng(0)
     kinds = list(plans)
     queries = make_queries(data, args.requests, "uncorrelated", seed=7)
+
+    print(f"== open-loop serving: {args.requests} requests at "
+          f"~{args.qps:.0f} qps offered ==")
+    futs = []
+    suppressed_at = None
     for i in range(args.requests):
+        time.sleep(rng.exponential(1.0 / args.qps))
         kind = kinds[rng.integers(0, len(kinds))]
-        engine.submit(queries[i], plan=plans[kind], k=10)
+        # a few doomed requests demo the deadline/timeout path: their
+        # deadline passes before (or while) they hold a lane
+        ddl = 0.001 if i % 20 == 19 else None
+        futs.append((kind, svc.submit(queries[i], plan=plans[kind],
+                                      k=10, deadline_s=ddl)))
+        if hb is not None and suppressed_at is None \
+                and i >= args.requests // 2:
+            print(f"== straggler drill: suppressing shard "
+                  f"{args.shards - 1}'s heartbeats mid-run ==")
+            hb.suppress(args.shards - 1)
+            suppressed_at = i
 
-    print(f"== serving {args.requests} requests ==")
-    responses = engine.drain()
-    ok = sum(1 for r in responses if (r.ids >= 0).any())
-    print(f"answered {len(responses)} requests ({ok} non-empty)")
-    for r in responses[:3]:
-        print(f"  rid={r.rid} sigma={r.sigma:.2f} ids={r.ids[:5]}"
-              f" prefilter={r.prefilter_ms:.3f}ms exec={r.exec_ms:.1f}ms")
-    print("latency summary:", engine.latency_summary())
-    # the program cache serves the grouped path + NavixDB.execute; the
-    # continuous scheduler runs the stepping engine's own jit programs
-    print("program cache:", db.programs.info())
+    responses = [(kind, f.result(timeout=300)) for kind, f in futs]
+    svc.shutdown(drain=True)
+    stop_beating.set()
 
-    if args.shards:
+    by_status: dict = {}
+    for kind, r in responses:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    print(f"answered {len(responses)} requests: {by_status}")
+    for kind, r in responses[:3]:
+        print(f"  rid={r.rid} kind={kind} sigma={r.sigma:.2f} "
+              f"ids={np.asarray(r.ids)[:5]} queue={r.queue_ms:.1f}ms "
+              f"exec={r.exec_ms:.1f}ms")
+    for kind, r in responses:
+        if r.timeout:
+            print(f"  rid={r.rid} TIMED OUT (deadline demo): "
+                  f"ids={np.asarray(r.ids)[:5]} (all -1, never partial)")
+            break
+    print("gauges:", svc.gauges())
+
+    if hb is not None:
         sn = db.index("chunk_emb")
-        print(f"== quorum demo: killing shard {sn.n_shards - 1} ==")
-        alive = np.ones(sn.n_shards, bool)
-        alive[-1] = False
-        engine.alive = alive
-        for i in range(8):
-            engine.submit(queries[i % len(queries)],
-                          plan=plans["id_filter"], k=10)
-        degraded = engine.drain()
         dead_lo = (sn.n_shards - 1) * sn.n_local
-        leaked = sum(int(((r.ids >= dead_lo) & (r.ids >= 0)).sum())
+        after = [r for kind, r in responses[suppressed_at + 1:]]
+        degraded = [r for r in after if r.degraded]
+        leaked = sum(int(((np.asarray(r.ids) >= dead_lo)
+                          & (np.asarray(r.ids) >= 0)).sum())
                      for r in degraded)
-        print(f"served {len(degraded)} requests degraded="
-              f"{all(r.degraded for r in degraded)} "
-              f"dead-shard ids leaked={leaked} (must be 0)")
+        print(f"== straggler drill: {len(degraded)}/{len(after)} "
+              f"post-suppression responses degraded automatically, "
+              f"dead-shard ids leaked={leaked} (must be 0) ==")
+        print("heartbeats:", hb.snapshot())
 
 
 if __name__ == "__main__":

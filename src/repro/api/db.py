@@ -186,6 +186,17 @@ class NavixDB:
                              f"KnnSearch(index=...)")
         return matches[0]
 
+    # -- serving -------------------------------------------------------------
+    def serve(self, index: Optional[str] = None, **kw):
+        """Construct a live :class:`~repro.serving.service.SearchService`
+        over one catalog entry (default: the first registered index).
+        Keyword args pass through -- k/efs caps, batch size, deadlines,
+        backpressure policy, heartbeat monitor; see ``SearchService``.
+        Call ``.start()`` (or use as a context manager) to spawn the
+        device loop."""
+        from repro.serving.service import SearchService
+        return SearchService(self, index=index, **kw)
+
     # -- execution ----------------------------------------------------------
     def prefilter(self, plan: Plan) -> QueryResult:
         """Run a selection subquery alone (mask + wall time)."""

@@ -460,6 +460,18 @@ class ShardedNavix:
         ([B, efs]); dead shards contribute +inf rows to the merge."""
         return self._program("finalize", params, True)
 
+    def evict_program(self, params: SearchParams):
+        """(st, udc, evict[B]) -> (st, udc) with the flagged lanes parked
+        on EVERY shard (empty converged beams, zeroed upper_dc) -- the
+        sharded ``engine_evict``. The eviction merge is elementwise over
+        lanes, so the shape-generic :func:`search_batch.engine_evict`
+        serves the shard-stacked ``[S, B, ...]`` state directly (jit
+        propagates the model-axis sharding; no shard_map round-trip).
+        ``params`` is unused -- kept so the surface mirrors the other
+        ``*_program`` constructors."""
+        del params
+        return sb.engine_evict
+
     # -- one-shot search ------------------------------------------------
     def search_many(self, Q, semimask=None, k: int = 10, efs: int = 0,
                     heuristic: str = "adaptive_local",

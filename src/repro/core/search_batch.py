@@ -552,6 +552,57 @@ def engine_steps(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
                       sigma_g=sigma_g)
 
 
+def evict_lanes(st: _BatchState, upper_dc: jax.Array, evict: jax.Array
+                ) -> tuple[_BatchState, jax.Array]:
+    """Park the lanes flagged in ``evict`` (bool[B]): their beams become
+    empty and converged (ids -1, sel False, d +inf), so they stop
+    contributing work in ``engine_steps`` (their ``live`` predicate is
+    False -- an un-evicted overdue lane would keep an ``n_steps=0`` call
+    spinning forever), finalize to all ``-1`` ids, and are immediately
+    refillable. The serving tier uses this for deadline eviction: it
+    finalizes first (to salvage a partial beam), then parks the lane.
+
+    Works on both state layouts: flat ``[B, ...]`` leaves and the
+    shard-stacked ``[S, B, ...]`` leaves of :class:`ShardedNavix`
+    (detected from ``st.it``'s rank -- the lane axis is the last leading
+    axis), so one op serves ``engine_evict`` and the sharded
+    ``evict_program`` without a ``shard_map`` round-trip: the merge is
+    elementwise over lanes and preserves the state's sharding.
+    """
+    lead = st.it.ndim          # 1 = flat [B], 2 = shard-stacked [S, B]
+    bsz = st.it.shape[-1]
+
+    def merge(new, old):
+        sel_b = evict.reshape((1,) * (lead - 1) + (bsz,)
+                              + (1,) * (old.ndim - lead))
+        return jnp.where(sel_b, new, old)
+
+    parked = _BatchState(
+        d=jnp.full_like(st.d, jnp.inf),
+        ids=jnp.full_like(st.ids, -1),
+        exp=jnp.ones_like(st.exp),
+        sel=jnp.zeros_like(st.sel),
+        visited=jnp.zeros_like(st.visited),
+        it=jnp.zeros_like(st.it),
+        t_dc=jnp.zeros_like(st.t_dc),
+        s_dc=jnp.zeros_like(st.s_dc),
+        picks=jnp.zeros_like(st.picks),
+    )
+    udc = merge(jnp.zeros_like(upper_dc), upper_dc)
+    return jax.tree_util.tree_map(merge, parked, st), udc
+
+
+@jax.jit
+def engine_evict(st: _BatchState, upper_dc: jax.Array, evict: jax.Array
+                 ) -> tuple[_BatchState, jax.Array]:
+    """Jitted :func:`evict_lanes`: park the flagged lanes in place.
+
+    No static arguments -- one compiled program per state shape serves
+    every params/heuristic combination.
+    """
+    return evict_lanes(st, upper_dc, evict)
+
+
 def finalize_lanes(st: _BatchState, upper_dc: jax.Array,
                    params: SearchParams) -> SearchResult:
     """Unjitted body of :func:`engine_finalize` (shard_map-embeddable)."""

@@ -1,0 +1,25 @@
+"""The serving tier: closed-queue engine + live front door.
+
+* :class:`SearchEngine` -- closed-queue drains (submit everything, then
+  ``drain()``); the continuous-batching scheduler's reference driver.
+* :class:`SearchService` -- the live loop: ``submit() -> Future`` while
+  the device steps, deadlines, backpressure, heartbeat shard liveness.
+* Both run the same :class:`~repro.serving.lanes.LaneBatch` device core,
+  so their per-lane answers stay in bitwise lockstep.
+"""
+
+from repro.serving.engine import (Request, Response, SearchEngine,
+                                  canonical_plan, greedy_generate,
+                                  resolve_alive)
+from repro.serving.heartbeat import HeartbeatMonitor
+from repro.serving.lanes import LaneBatch
+from repro.serving.queues import (QueueFull, QueueItem, ServiceClosed,
+                                  SubmissionQueue, sigma_bin)
+from repro.serving.service import SearchService
+
+__all__ = [
+    "HeartbeatMonitor", "LaneBatch", "QueueFull", "QueueItem", "Request",
+    "Response", "SearchEngine", "SearchService", "ServiceClosed",
+    "SubmissionQueue", "canonical_plan", "greedy_generate",
+    "resolve_alive", "sigma_bin",
+]

@@ -49,6 +49,7 @@ from repro.core.distributed import ShardedNavix
 from repro.core.navix import NavixIndex
 from repro.query.operators import (KnnSearch, Plan, is_selection,
                                    output_table, split_pipeline)
+from repro.serving.lanes import LaneBatch, _FlatLanes, _ShardLanes  # noqa: F401
 from repro.storage.columnar import GraphStore
 
 
@@ -75,95 +76,77 @@ class Response:
     degraded: bool = False        # finalized under a partial shard quorum
                                   # (sharded indexes only): some shards
                                   # were dead, so recall may be reduced
+    status: str = "ok"            # terminal state: "ok" (converged),
+                                  # "partial" (deadline hit but the beam
+                                  # already covered k candidates -- a
+                                  # best-effort answer), "timeout"
+                                  # (deadline hit first; ids are all -1,
+                                  # NEVER a truncated id list)
+
+    @property
+    def timeout(self) -> bool:
+        return self.status == "timeout"
 
 
-class _FlatLanes:
-    """Device-side lane operations of the continuous scheduler over an
-    unsharded :class:`NavixIndex` (the ``search_batch`` stepping API)."""
-
-    n_shards = 0
-
-    def __init__(self, idx: NavixIndex, params):
-        from repro.core import bitset
-
-        self.idx, self.graph, self.params = idx, idx.graph, params
-        self._words = bitset.n_words(idx.graph.n)
-
-    def full_row(self) -> np.ndarray:
-        return np.asarray(self.idx.full_semimask())            # [W]
-
-    def pack_row(self, mask) -> np.ndarray:
-        return np.asarray(self.idx.pack_semimask(mask))        # [W]
-
-    def sel_buffer(self, bsz: int) -> np.ndarray:
-        return np.zeros((bsz, self._words), np.uint32)
-
-    def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
-        selh[i] = row
-
-    def parked(self, bsz: int):
-        import jax.numpy as jnp
-
-        from repro.core import search_batch as sb
-        return (sb.parked_state(self.graph.n, bsz, self.params),
-                jnp.zeros((bsz,), jnp.int32))
-
-    def refill(self, Qj, selj, st, udc, refill):
-        from repro.core import search_batch as sb
-        return sb.engine_refill(self.graph, Qj, selj, st, udc, refill,
-                                self.params)
-
-    def steps(self, Qj, selj, st, n_steps, sigj):
-        from repro.core import search_batch as sb
-        return sb.engine_steps(self.graph, Qj, selj, st, self.params,
-                               n_steps, sigma_g=sigj)
-
-    def finalize(self, st, udc, alive):
-        from repro.core import search_batch as sb
-        return sb.engine_finalize(st, udc, self.params)
+def canonical_plan(db: NavixDB, default_index: Optional[str],
+                   plan: Optional[Plan], k: int, efs: int,
+                   heuristic: str) -> Plan:
+    """Normalize a submission to a hashable KnnSearch-rooted plan -- the
+    fuse/group key: same plan => one prefilter + one compiled program.
+    Shared by the closed-queue engine and the live SearchService."""
+    builder_plan = getattr(plan, "plan", None)
+    if callable(builder_plan):
+        plan = builder_plan()
+    if plan is None:
+        # resolve lazily: the catalog may be populated after __init__
+        name = default_index or next(iter(db.catalog), None)
+        if name is None or name not in db.catalog:
+            raise ValueError("unfiltered request but the NavixDB "
+                             "catalog has no index; create one with "
+                             "db.create_index(...)")
+        entry = db.catalog[name]
+        return KnnSearch(child=None, table=entry.table, k=k,
+                         index=name, efs=efs, heuristic=heuristic)
+    if is_selection(plan):
+        return KnnSearch(child=plan, k=k, efs=efs, heuristic=heuristic)
+    return plan                    # already declarative
 
 
-class _ShardLanes:
-    """The same lane operations over a :class:`ShardedNavix`: every
-    buffer gains a leading shard dim ([S, B, W] semimasks, [S, B]
-    upper_dc, shard-stacked beam state) and ``finalize`` merges the
-    per-shard beams into global top-k under the current ``alive`` mask.
-    Per-lane k/efs capping and lane refill are untouched."""
+def resolve_alive(n_shards: int, alive, heartbeats,
+                  now: Optional[float] = None) -> np.ndarray:
+    """The serving tier's single source of shard liveness.
 
-    def __init__(self, sn: ShardedNavix, params):
-        self.sn, self.params = sn, params
-        self.n_shards = sn.n_shards
-        self._refill = sn.refill_program(params)
-        self._steps = sn.steps_program(params)
-        self._finalize = sn.finalize_program(params)
-
-    def full_row(self) -> np.ndarray:
-        return np.asarray(self.sn.full_semimask())             # [S, W]
-
-    def pack_row(self, mask) -> np.ndarray:
-        return np.asarray(self.sn.shard_semimask(mask))        # [S, W]
-
-    def sel_buffer(self, bsz: int) -> np.ndarray:
-        return np.zeros((self.n_shards, bsz, self.sn.n_words_local),
-                        np.uint32)
-
-    def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
-        selh[:, i] = row
-
-    def parked(self, bsz: int):
-        return self.sn.parked_state(bsz, self.params)
-
-    def refill(self, Qj, selj, st, udc, refill):
-        return self._refill(self.sn.graphs, Qj, selj, st, udc, refill)
-
-    def steps(self, Qj, selj, st, n_steps, sigj):
-        # sigj unused: each shard's lanes estimate selectivity against
-        # their own slice of S (lane-local, shard-local)
-        return self._steps(self.sn.graphs, Qj, selj, st, n_steps)
-
-    def finalize(self, st, udc, alive):
-        import jax.numpy as jnp
-        return self._finalize(st, udc, jnp.asarray(alive))
+    ``heartbeats`` (a :class:`repro.serving.heartbeat.HeartbeatMonitor`)
+    takes the place of a caller-set ``alive`` mask: the mask is DERIVED
+    from per-shard heartbeat staleness at the moment of each finalize,
+    so straggler shards degrade responses automatically. Setting both is
+    ambiguous and raises; either on an unsharded index raises (same
+    contract as ``NavixDB.execute(alive=...)``).
+    """
+    if heartbeats is not None:
+        if alive is not None:
+            raise ValueError("set either a heartbeat monitor or a static "
+                             "alive mask, not both")
+        if not n_shards:
+            raise ValueError("heartbeat liveness quorum-masks sharded "
+                             "indexes; this index is unsharded")
+        mask = np.asarray(heartbeats.alive(now), bool)
+        if mask.shape != (n_shards,):
+            raise ValueError(f"heartbeat monitor tracks {mask.shape[0]} "
+                             f"shards; the index has {n_shards}")
+        return mask
+    if alive is None:
+        return np.ones(max(n_shards, 1), bool)
+    if not n_shards:
+        # mirror NavixDB.execute: silently ignoring a quorum mask on
+        # an unsharded index would hide the caller's intent
+        raise ValueError("alive quorum-masks sharded indexes; "
+                         "this drain targets an unsharded index")
+    mask = np.asarray(alive, bool)
+    if mask.shape != (n_shards,):
+        raise ValueError(f"alive has shape {mask.shape}; the "
+                         f"index has {n_shards} shards")
+    return mask
 
 
 @dataclasses.dataclass
@@ -203,6 +186,12 @@ class SearchEngine:
                                            # alive; may flip mid-drain --
                                            # lanes finalized under a partial
                                            # quorum come back degraded
+    heartbeats: Optional[object] = None    # a HeartbeatMonitor: shard
+                                           # liveness DERIVED from per-shard
+                                           # heartbeat staleness at every
+                                           # finalize instead of a caller-
+                                           # set mask (mutually exclusive
+                                           # with ``alive``)
     step_hook: Optional[Callable] = None   # called after every continuous-
                                            # scheduler device step with a
                                            # progress dict (telemetry /
@@ -225,6 +214,15 @@ class SearchEngine:
         self._queue: deque[Request] = deque()
         self._next_rid = 0
         self.latencies_ms: list[float] = []
+        # queue-wait vs service-time split of the same requests, recorded
+        # in lockstep with latencies_ms (service = exec + prefilter share)
+        self.queue_waits_ms: list[float] = []
+        self.service_ms: list[float] = []
+
+    def _record_latency(self, queue_ms: float, service_ms: float) -> None:
+        self.latencies_ms.append(queue_ms + service_ms)
+        self.queue_waits_ms.append(queue_ms)
+        self.service_ms.append(service_ms)
 
     # -- client API ---------------------------------------------------------
     def submit(self, query, plan: Optional[Plan] = None, k: int = 10) -> int:
@@ -269,24 +267,8 @@ class SearchEngine:
     def _canonical(self, plan: Optional[Plan], k: int) -> Plan:
         """Normalize every submit to a hashable KnnSearch-rooted plan --
         the group key: same plan => one prefilter + one compiled program."""
-        builder_plan = getattr(plan, "plan", None)
-        if callable(builder_plan):
-            plan = builder_plan()
-        if plan is None:
-            # resolve lazily: the catalog may be populated after __init__
-            name = self.default_index or next(iter(self.db.catalog), None)
-            if name is None or name not in self.db.catalog:
-                raise ValueError("unfiltered request but the NavixDB "
-                                 "catalog has no index; create one with "
-                                 "db.create_index(...)")
-            entry = self.db.catalog[name]
-            return KnnSearch(child=None, table=entry.table, k=k,
-                             index=name, efs=self.efs,
-                             heuristic=self.heuristic)
-        if is_selection(plan):
-            return KnnSearch(child=plan, k=k, efs=self.efs,
-                             heuristic=self.heuristic)
-        return plan                # already declarative
+        return canonical_plan(self.db, self.default_index, plan, k,
+                              self.efs, self.heuristic)
 
     # -- continuous batching (mixed-plan fusing + lane refill) ---------------
     def _drain_continuous(self, reqs: list[Request]) -> list[Response]:
@@ -314,36 +296,21 @@ class SearchEngine:
         return out
 
     def _current_alive(self, backend) -> np.ndarray:
-        if self.alive is None:
-            return np.ones(max(backend.n_shards, 1), bool)
-        if not backend.n_shards:
-            # mirror NavixDB.execute: silently ignoring a quorum mask on
-            # an unsharded index would hide the caller's intent
-            raise ValueError("engine.alive quorum-masks sharded indexes; "
-                             "this drain targets an unsharded index")
-        alive = np.asarray(self.alive, bool)
-        if alive.shape != (backend.n_shards,):
-            raise ValueError(f"engine.alive has shape {alive.shape}; the "
-                             f"index has {backend.n_shards} shards")
-        return alive
+        return resolve_alive(backend.n_shards, self.alive, self.heartbeats)
 
     def _serve_fused(self, idx, heuristic: str,
                      items: list[tuple[Request, Any]]) -> list[Response]:
-        import jax.numpy as jnp
-
         # per-lane k/efs, capped to the batch max: one static program
         # serves every fused request; lanes slice their own k at the end
         k_cap = max(p.knn.k for _, p in items)
         efs_cap = max(max(p.knn.efs or 2 * p.knn.k for _, p in items), k_cap)
-        params = idx._params(k_cap, efs_cap, heuristic)
-        backend = (_ShardLanes(idx, params)
-                   if isinstance(idx, ShardedNavix)
-                   else _FlatLanes(idx, params))
+        bsz = _bucket(max(1, min(self.max_batch, len(items))))
+        lanes = LaneBatch(idx, heuristic, k_cap, efs_cap, bsz)
 
         # one prefilter per DISTINCT selection subquery; its wall time is
         # shared only by the requests that carry it
         sel_info: dict[Any, list] = {}   # Q_S -> [packed_row, sigma, ms, cnt]
-        full_row = backend.full_row()
+        full_row = lanes.backend.full_row()
         for r, parts in items:
             s = parts.selection
             if s not in sel_info:
@@ -351,7 +318,7 @@ class SearchEngine:
                     sel_info[s] = [full_row, 1.0, 0.0, 0]
                 else:
                     qres = self.db.prefilter(s)
-                    sel_info[s] = [backend.pack_row(qres.mask),
+                    sel_info[s] = [lanes.backend.pack_row(qres.mask),
                                    qres.selectivity, qres.seconds * 1e3, 0]
             sel_info[s][3] += 1
 
@@ -369,18 +336,8 @@ class SearchEngine:
         prepped = np.asarray(idx._prep_query(
             np.stack([r.query for r, _ in items])), np.float32)
 
-        bsz = _bucket(max(1, min(self.max_batch, len(items))))
-        Qh = np.zeros((bsz, prepped.shape[1]), np.float32)
-        selh = backend.sel_buffer(bsz)
-        sigh = np.ones((bsz,), np.float32)
-        lane_req: list[Optional[tuple[Request, Any]]] = [None] * bsz
-        lane_t0 = [0.0] * bsz
         pending = deque((r, parts, prepped[j])
                         for j, (r, parts) in enumerate(items))
-
-        st, udc = backend.parked(bsz)
-        Qj, selj, sigj = (jnp.asarray(Qh), jnp.asarray(selh),
-                          jnp.asarray(sigh))
 
         refill_thr = self.refill_threshold or max(1, bsz // 2)
         responses: list[Response] = []
@@ -395,51 +352,38 @@ class SearchEngine:
             mask; a partial quorum flags the responses degraded."""
             if not done:
                 return
-            alive = self._current_alive(backend)
-            degraded = backend.n_shards > 0 and not alive.all()
-            fin = backend.finalize(st, udc, alive)
-            ids, dists = np.asarray(fin.ids), np.asarray(fin.dists)
+            alive = self._current_alive(lanes.backend)
+            degraded = lanes.n_shards > 0 and not alive.all()
+            ids, dists = lanes.finalize(alive)
             for i, t_done in done.items():
-                r, parts = lane_req[i]
+                r, parts, t0 = lanes.meta[i]
                 _, sigma, pf_ms, cnt = sel_info[parts.selection]
                 pf_share = pf_ms / cnt
-                queue_ms = (lane_t0[i] - r.t_enqueue) * 1e3
-                exec_ms = (t_done - lane_t0[i]) * 1e3
-                self.latencies_ms.append(queue_ms + exec_ms + pf_share)
+                queue_ms = (t0 - r.t_enqueue) * 1e3
+                exec_ms = (t_done - t0) * 1e3
+                self._record_latency(queue_ms, exec_ms + pf_share)
                 k_r = parts.knn.k
                 responses.append(Response(
                     rid=r.rid, ids=ids[i, :k_r], dists=dists[i, :k_r],
                     queue_ms=queue_ms, exec_ms=exec_ms,
                     prefilter_ms=pf_share, sigma=float(sigma),
                     degraded=degraded))
-                lane_req[i] = None
+                lanes.release(i)
             done.clear()
 
-        while pending or any(lane_req):
-            n_running = sum(1 for i in range(bsz)
-                            if lane_req[i] is not None) - len(done)
-            n_free = bsz - n_running - len(done)
+        while pending or lanes.occupied_count():
+            n_running = lanes.occupied_count() - len(done)
+            n_free = lanes.free_count() - len(done)
             if pending and (n_free + len(done) >= refill_thr
                             or n_running == 0):
                 flush()                 # compact converged lanes out ...
-                refill = np.zeros(bsz, bool)
-                for i in range(bsz):    # ... and refill from the queue
-                    if not pending:
-                        break
-                    if lane_req[i] is not None:
-                        continue
+                entries = []            # ... and refill from the queue
+                now = time.perf_counter()
+                while pending and len(entries) < lanes.free_count():
                     r, parts, qrow = pending.popleft()
                     row, sigma, _, _ = sel_info[parts.selection]
-                    Qh[i] = qrow
-                    backend.set_lane(selh, i, row)
-                    sigh[i] = sigma
-                    lane_req[i] = (r, parts)
-                    lane_t0[i] = time.perf_counter()
-                    refill[i] = True
-                Qj, selj, sigj = (jnp.asarray(Qh), jnp.asarray(selh),
-                                  jnp.asarray(sigh))
-                st, udc = backend.refill(Qj, selj, st, udc,
-                                         jnp.asarray(refill))
+                    entries.append(((r, parts, now), qrow, row, sigma))
+                lanes.admit(entries)
             elif n_running == 0:
                 # queue empty (a non-empty queue with zero running lanes
                 # always takes the refill branch): only frozen converged
@@ -449,8 +393,7 @@ class SearchEngine:
             # with an empty queue there is nothing to refill between
             # chunks: run the remaining lanes straight to convergence
             n_steps = self.step_iters if pending else 0
-            st, live = backend.steps(Qj, selj, st, n_steps, sigj)
-            live_np = np.asarray(live)
+            live_np = lanes.step(n_steps)
             n_devsteps += 1
             if self.step_hook is not None:
                 self.step_hook({"step": n_devsteps,
@@ -459,7 +402,7 @@ class SearchEngine:
                                 "done": len(done)})
             now = time.perf_counter()
             for i in range(bsz):
-                if (lane_req[i] is not None and i not in done
+                if (lanes.meta[i] is not None and i not in done
                         and not live_np[i]):
                     done[i] = now
         flush()
@@ -491,7 +434,7 @@ class SearchEngine:
         responses = []
         for j, r in enumerate(reqs):
             queue_ms = (t1 - r.t_enqueue) * 1e3
-            self.latencies_ms.append(queue_ms + exec_ms + pf_share)
+            self._record_latency(queue_ms, exec_ms + pf_share)
             responses.append(Response(
                 rid=r.rid, ids=rs.ids[j], dists=rs.dists[j],
                 queue_ms=queue_ms, exec_ms=exec_ms,
@@ -500,13 +443,23 @@ class SearchEngine:
         return responses
 
     def latency_summary(self) -> dict:
+        """End-to-end p50/p95/p99 plus the queue-wait vs service-time
+        split of the same requests (service = exec + prefilter share;
+        queue = t_dequeue - Request.t_enqueue)."""
         if not self.latencies_ms:
             return {}
         arr = np.asarray(self.latencies_ms)
+        qarr = np.asarray(self.queue_waits_ms)
+        sarr = np.asarray(self.service_ms)
         return {"n": len(arr), "p50_ms": float(np.percentile(arr, 50)),
                 "p95_ms": float(np.percentile(arr, 95)),
                 "p99_ms": float(np.percentile(arr, 99)),
-                "mean_ms": float(arr.mean())}
+                "mean_ms": float(arr.mean()),
+                "queue_p50_ms": float(np.percentile(qarr, 50)),
+                "queue_p99_ms": float(np.percentile(qarr, 99)),
+                "service_p50_ms": float(np.percentile(sarr, 50)),
+                "service_p95_ms": float(np.percentile(sarr, 95)),
+                "service_p99_ms": float(np.percentile(sarr, 99))}
 
 
 def greedy_generate(cfg, params, prompt_tokens: np.ndarray, n_new: int,

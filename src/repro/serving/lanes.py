@@ -1,0 +1,256 @@
+"""The device-side lane core shared by every serving driver.
+
+Both serving drivers -- the closed-queue ``SearchEngine.drain()`` and the
+live :class:`~repro.serving.service.SearchService` loop -- run the same
+machine: a fixed ``[B]``-lane batch over the resumable stepping API of
+``repro.core.search_batch`` (``parked_state`` / ``engine_refill`` /
+``engine_steps`` / ``engine_finalize`` / ``engine_evict``), shard-aware
+through the mirrored ``*_program`` surface of
+:class:`~repro.core.distributed.ShardedNavix`. This module holds that
+machine so the two drivers stay in bitwise lockstep:
+
+* ``_FlatLanes`` / ``_ShardLanes`` -- the backend split: identical lane
+  operations over an unsharded :class:`NavixIndex` or a
+  :class:`ShardedNavix` (whose buffers gain a leading shard dim and whose
+  ``finalize`` merges per-shard beams under an ``alive`` quorum mask);
+* :class:`LaneBatch` -- host-side buffer management + the device calls:
+  ``admit`` (compact free lanes, refill them with new requests), ``step``
+  (advance ``n_steps`` loop iterations, report per-lane liveness),
+  ``finalize`` (extract every lane's current beam), ``evict`` (park
+  overdue lanes so they stop burning device work and become refillable).
+
+Scheduling policy -- what to admit, when to flush, which lanes are past
+deadline -- stays in the drivers; ``LaneBatch`` owns no policy beyond
+"fill free lanes in ascending order", which both drivers rely on.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.distributed import ShardedNavix
+from repro.core.navix import NavixIndex
+from repro.storage.columnar import GraphStore  # noqa: F401  (re-export site)
+
+
+class _FlatLanes:
+    """Device-side lane operations of the continuous scheduler over an
+    unsharded :class:`NavixIndex` (the ``search_batch`` stepping API)."""
+
+    n_shards = 0
+
+    def __init__(self, idx: NavixIndex, params):
+        from repro.core import bitset
+
+        self.idx, self.graph, self.params = idx, idx.graph, params
+        self._words = bitset.n_words(idx.graph.n)
+
+    def full_row(self) -> np.ndarray:
+        return np.asarray(self.idx.full_semimask())            # [W]
+
+    def pack_row(self, mask) -> np.ndarray:
+        return np.asarray(self.idx.pack_semimask(mask))        # [W]
+
+    def sel_buffer(self, bsz: int) -> np.ndarray:
+        return np.zeros((bsz, self._words), np.uint32)
+
+    def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
+        selh[i] = row
+
+    def parked(self, bsz: int):
+        import jax.numpy as jnp
+
+        from repro.core import search_batch as sb
+        return (sb.parked_state(self.graph.n, bsz, self.params),
+                jnp.zeros((bsz,), jnp.int32))
+
+    def refill(self, Qj, selj, st, udc, refill):
+        from repro.core import search_batch as sb
+        return sb.engine_refill(self.graph, Qj, selj, st, udc, refill,
+                                self.params)
+
+    def steps(self, Qj, selj, st, n_steps, sigj):
+        from repro.core import search_batch as sb
+        return sb.engine_steps(self.graph, Qj, selj, st, self.params,
+                               n_steps, sigma_g=sigj)
+
+    def finalize(self, st, udc, alive):
+        from repro.core import search_batch as sb
+        return sb.engine_finalize(st, udc, self.params)
+
+    def evict(self, st, udc, evict):
+        import jax.numpy as jnp
+
+        from repro.core import search_batch as sb
+        return sb.engine_evict(st, udc, jnp.asarray(evict))
+
+
+class _ShardLanes:
+    """The same lane operations over a :class:`ShardedNavix`: every
+    buffer gains a leading shard dim ([S, B, W] semimasks, [S, B]
+    upper_dc, shard-stacked beam state) and ``finalize`` merges the
+    per-shard beams into global top-k under the current ``alive`` mask.
+    Per-lane k/efs capping and lane refill are untouched."""
+
+    def __init__(self, sn: ShardedNavix, params):
+        self.sn, self.params = sn, params
+        self.n_shards = sn.n_shards
+        self._refill = sn.refill_program(params)
+        self._steps = sn.steps_program(params)
+        self._finalize = sn.finalize_program(params)
+        self._evict = sn.evict_program(params)
+
+    def full_row(self) -> np.ndarray:
+        return np.asarray(self.sn.full_semimask())             # [S, W]
+
+    def pack_row(self, mask) -> np.ndarray:
+        return np.asarray(self.sn.shard_semimask(mask))        # [S, W]
+
+    def sel_buffer(self, bsz: int) -> np.ndarray:
+        return np.zeros((self.n_shards, bsz, self.sn.n_words_local),
+                        np.uint32)
+
+    def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
+        selh[:, i] = row
+
+    def parked(self, bsz: int):
+        return self.sn.parked_state(bsz, self.params)
+
+    def refill(self, Qj, selj, st, udc, refill):
+        return self._refill(self.sn.graphs, Qj, selj, st, udc, refill)
+
+    def steps(self, Qj, selj, st, n_steps, sigj):
+        # sigj unused: each shard's lanes estimate selectivity against
+        # their own slice of S (lane-local, shard-local)
+        return self._steps(self.sn.graphs, Qj, selj, st, n_steps)
+
+    def finalize(self, st, udc, alive):
+        import jax.numpy as jnp
+        return self._finalize(st, udc, jnp.asarray(alive))
+
+    def evict(self, st, udc, evict):
+        import jax.numpy as jnp
+        return self._evict(st, udc, jnp.asarray(evict))
+
+
+def make_backend(idx, params):
+    """The backend split: ShardedNavix -> _ShardLanes, else _FlatLanes."""
+    return (_ShardLanes(idx, params) if isinstance(idx, ShardedNavix)
+            else _FlatLanes(idx, params))
+
+
+class LaneBatch:
+    """A resumable ``[B]``-lane device batch with host-side bookkeeping.
+
+    Each lane is free (``meta[i] is None``) or carries one in-flight
+    request's opaque driver payload. Device state (`st`, `udc`) and the
+    host mirrors of the lane buffers (query rows, packed per-lane
+    semimasks, per-lane sigma) live here; drivers decide *when* to call
+    ``admit`` / ``step`` / ``finalize`` / ``evict`` and what the payloads
+    mean. Admission fills free lanes in ascending index order.
+    """
+
+    def __init__(self, idx, heuristic: str, k_cap: int, efs_cap: int,
+                 bsz: int):
+        import jax.numpy as jnp
+
+        self.params = idx._params(k_cap, efs_cap, heuristic)
+        self.backend = make_backend(idx, self.params)
+        self.bsz = bsz
+        self.k_cap, self.efs_cap = k_cap, efs_cap
+        dim = (idx.dim if isinstance(idx, ShardedNavix)
+               else int(idx.graph.vectors.shape[-1]))
+        self.Qh = np.zeros((bsz, dim), np.float32)
+        self.selh = self.backend.sel_buffer(bsz)
+        self.sigh = np.ones((bsz,), np.float32)
+        self.meta: list[Optional[Any]] = [None] * bsz
+        self.st, self.udc = self.backend.parked(bsz)
+        self.Qj = jnp.asarray(self.Qh)
+        self.selj = jnp.asarray(self.selh)
+        self.sigj = jnp.asarray(self.sigh)
+
+    @property
+    def n_shards(self) -> int:
+        return self.backend.n_shards
+
+    def occupied(self) -> list[int]:
+        return [i for i in range(self.bsz) if self.meta[i] is not None]
+
+    def occupied_count(self) -> int:
+        return sum(1 for m in self.meta if m is not None)
+
+    def free_count(self) -> int:
+        return self.bsz - self.occupied_count()
+
+    def release(self, i: int) -> None:
+        """Free a lane host-side. Its frozen device state is inert (a
+        converged/parked lane never advances) and the next ``admit``
+        overwrites it."""
+        self.meta[i] = None
+
+    # -- device calls ---------------------------------------------------
+    def admit(self, entries) -> list[int]:
+        """Fill free lanes (ascending) from ``entries`` -- an iterable of
+        ``(meta, qrow, sel_row, sigma)`` -- and run ONE device refill for
+        all of them. Returns the lane indices used; raises if more
+        entries arrive than there are free lanes."""
+        import jax.numpy as jnp
+
+        refill = np.zeros(self.bsz, bool)
+        used: list[int] = []
+        it = iter(entries)
+        entry = next(it, None)
+        for i in range(self.bsz):
+            if entry is None:
+                break
+            if self.meta[i] is not None:
+                continue
+            meta, qrow, row, sigma = entry
+            self.Qh[i] = qrow
+            self.backend.set_lane(self.selh, i, row)
+            self.sigh[i] = sigma
+            self.meta[i] = meta
+            refill[i] = True
+            used.append(i)
+            entry = next(it, None)
+        if entry is not None:
+            raise ValueError("more entries than free lanes; size the "
+                             "admission to LaneBatch.free_count()")
+        if not used:
+            return used
+        self.Qj = jnp.asarray(self.Qh)
+        self.selj = jnp.asarray(self.selh)
+        self.sigj = jnp.asarray(self.sigh)
+        self.st, self.udc = self.backend.refill(
+            self.Qj, self.selj, self.st, self.udc, jnp.asarray(refill))
+        return used
+
+    def step(self, n_steps: int) -> np.ndarray:
+        """Advance every lane by at most ``n_steps`` loop iterations
+        (0 = run to whole-batch convergence); returns live bool[B]."""
+        self.st, live = self.backend.steps(self.Qj, self.selj, self.st,
+                                           n_steps, self.sigj)
+        return np.asarray(live)
+
+    def finalize(self, alive) -> tuple[np.ndarray, np.ndarray]:
+        """Extract every lane's current beam under ``alive`` (sharded
+        backends merge across shards; a flat backend ignores it).
+        Returns host ``(ids[B, efs], dists[B, efs])``."""
+        fin = self.backend.finalize(self.st, self.udc, alive)
+        return np.asarray(fin.ids), np.asarray(fin.dists)
+
+    def evict(self, lane_ids) -> None:
+        """Park the given lanes (one device call) and free them. Parked
+        lanes report live=False and finalize to all ``-1`` ids until the
+        next admit overwrites them -- finalize BEFORE evicting to salvage
+        a partial beam."""
+        lane_ids = list(lane_ids)
+        if not lane_ids:
+            return
+        mask = np.zeros(self.bsz, bool)
+        mask[lane_ids] = True
+        self.st, self.udc = self.backend.evict(self.st, self.udc, mask)
+        for i in lane_ids:
+            self.meta[i] = None

@@ -1,0 +1,460 @@
+"""Live serving subsystem: queue backpressure, deadline eviction,
+heartbeat shard liveness, exactly-once shutdown.
+
+The deterministic tests drive ``SearchService._tick()`` by hand with an
+injected fake clock -- no threads, no sleeps -- so deadline semantics
+are exact: a deadline that passes in-queue or mid-flight must produce
+``Response.timeout`` with ALL ids ``-1`` (never a truncated id list),
+unless the evicted lane's beam already covers k valid candidates
+(``"partial"``). The sharded test reuses the distributed suite's oracle
+(``per_shard_reference``): heartbeat staleness flipping ``alive``
+mid-service must equal the alive-restricted reference bitwise.
+"""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api.db import NavixDB
+from repro.core.distributed import per_shard_reference
+from repro.query.operators import Filter, NodeScan
+from repro.serving import (HeartbeatMonitor, LaneBatch, QueueFull,
+                           SearchService, ServiceClosed, SubmissionQueue,
+                           resolve_alive, sigma_bin)
+from repro.storage.columnar import GraphStore
+
+needs_2_devices = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs 2 host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _db(idx, n):
+    store = GraphStore()
+    store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+    db = NavixDB(store)
+    db.register_index("default", idx)
+    return db
+
+
+def _cut_plan(cut):
+    return Filter(NodeScan("Chunk"), "cID", "<", value=cut)
+
+
+def _drive(svc, futs, max_ticks=500):
+    """Tick the service until every future resolves (manual driver)."""
+    for _ in range(max_ticks):
+        if all(f.done() for f in futs):
+            return
+        svc._tick()
+    raise AssertionError("service did not resolve all futures")
+
+
+# -- SubmissionQueue ---------------------------------------------------------
+
+def test_sigma_bins_are_geometric():
+    assert sigma_bin(1.0, 4) == 0
+    assert sigma_bin(0.6, 4) == 0
+    assert sigma_bin(0.4, 4) == 1
+    assert sigma_bin(0.2, 4) == 2
+    assert sigma_bin(0.01, 4) == 3          # clamped to the last bin
+    assert sigma_bin(0.0, 4) == 3
+
+
+def test_queue_backpressure_reject_with_hysteresis():
+    q = SubmissionQueue(maxsize=8, policy="reject",
+                        high_watermark=3, low_watermark=1)
+    for j in range(3):
+        q.put(1.0, None, meta=j)
+    with pytest.raises(QueueFull):
+        q.put(1.0, None, meta=99)
+    assert q.gauges()["gated"] and q.gauges()["rejected"] == 1
+    # hysteresis: popping to depth 2 (> low) keeps the gate closed ...
+    assert len(q.pop_batch(1)) == 1
+    with pytest.raises(QueueFull):
+        q.put(1.0, None, meta=99)
+    # ... and reaching the low watermark reopens it
+    assert len(q.pop_batch(1)) == 1
+    q.put(1.0, None, meta=100)
+    assert not q.gauges()["gated"]
+
+
+def test_queue_backpressure_block_unblocks_at_low_watermark():
+    q = SubmissionQueue(maxsize=8, policy="block",
+                        high_watermark=2, low_watermark=1)
+    q.put(1.0, None, meta=0)
+    q.put(1.0, None, meta=1)
+    got = []
+    t = threading.Thread(
+        target=lambda: got.append(q.put(1.0, None, meta=2)))
+    t.start()
+    t.join(0.2)
+    assert t.is_alive(), "put must block while gated"
+    q.pop_batch(1)                           # depth 1 == low -> reopen
+    t.join(5.0)
+    assert not t.is_alive() and got[0].meta == 2
+    q.pop_batch(1)                           # back below the gate
+    q.put(1.0, None, meta=3)                 # depth 2 again
+    # a blocked put with a timeout gives up as QueueFull
+    with pytest.raises(QueueFull):
+        q.put(1.0, None, meta=4, timeout=0.05)
+
+
+def test_queue_close_wakes_blocked_putter_with_service_closed():
+    q = SubmissionQueue(maxsize=4, policy="block", high_watermark=1)
+    q.put(1.0, None, meta=0)
+    err = []
+
+    def blocked():
+        try:
+            q.put(1.0, None, meta=1)
+        except ServiceClosed as e:
+            err.append(e)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    t.join(0.2)
+    assert t.is_alive()
+    q.close()
+    t.join(5.0)
+    assert not t.is_alive() and len(err) == 1
+    with pytest.raises(ServiceClosed):
+        q.put(1.0, None, meta=2)
+    # queued items remain drainable after close
+    assert [it.meta for it in q.drain_remaining()] == [0]
+
+
+def test_queue_pop_is_deadline_ordered_and_bin_affine():
+    q = SubmissionQueue(maxsize=16)
+    q.put(1.0, 10.0, meta="a")               # bin 0, later deadline
+    q.put(0.9, None, meta="b")               # bin 0, no deadline
+    q.put(0.10, 5.0, meta="c")               # bin 3, EARLIEST deadline
+    q.put(0.12, None, meta="d")              # bin 3
+    # the urgent item (c) anchors the bin; d rides along before a/b
+    assert [it.meta for it in q.pop_batch(2)] == ["c", "d"]
+    assert [it.meta for it in q.pop_batch(4)] == ["a", "b"]
+    # prefer_sigma overrides the anchor (running-lane affinity)
+    q.put(1.0, 10.0, meta="a")
+    q.put(0.1, 5.0, meta="c")
+    assert [it.meta for it in q.pop_batch(1, prefer_sigma=1.0)] == ["a"]
+
+
+def test_queue_expire_removes_past_deadline_items():
+    q = SubmissionQueue(maxsize=8)
+    q.put(1.0, 5.0, meta="dead")
+    q.put(1.0, 50.0, meta="ok")
+    q.put(1.0, None, meta="forever")
+    dead = q.expire(now=10.0)
+    assert [it.meta for it in dead] == ["dead"]
+    assert len(q) == 2
+
+
+# -- liveness config ---------------------------------------------------------
+
+def test_resolve_alive_validation():
+    hb = HeartbeatMonitor(2, stale_after=1.0)
+    with pytest.raises(ValueError, match="not both"):
+        resolve_alive(2, np.ones(2, bool), hb)
+    with pytest.raises(ValueError, match="unsharded"):
+        resolve_alive(0, None, hb)
+    with pytest.raises(ValueError, match="unsharded|alive"):
+        resolve_alive(0, np.ones(2, bool), None)
+    with pytest.raises(ValueError, match="shards"):
+        resolve_alive(3, None, hb)
+    np.testing.assert_array_equal(resolve_alive(2, None, hb),
+                                  [True, True])
+
+
+def test_heartbeat_staleness_and_suppression():
+    clk = FakeClock(100.0)
+    hb = HeartbeatMonitor(2, stale_after=2.0, clock=clk)
+    assert hb.alive().all()
+    clk.t = 101.0
+    hb.beat(0)
+    clk.t = 103.0                            # shard 1's last beat: t=100
+    np.testing.assert_array_equal(hb.alive(), [True, False])
+    hb.beat(1)
+    assert hb.alive().all()
+    hb.suppress(1)                           # straggler: beats dropped
+    clk.t = 105.0
+    hb.beat(0)
+    hb.beat(1)                               # dropped: shard 1 stays at 103
+    clk.t = 106.0
+    np.testing.assert_array_equal(hb.alive(), [True, False])
+    hb.restore(1)
+    assert hb.alive().all()
+
+
+# -- lane eviction (device op) -----------------------------------------------
+
+def test_evict_lanes_parks_only_flagged_lanes(index, queries):
+    lanes = LaneBatch(index, "adaptive_local", k_cap=6, efs_cap=24, bsz=2)
+    full = lanes.backend.full_row()
+    lanes.admit([(("a",), np.asarray(index._prep_query(queries[0][None]))[0],
+                  full, 1.0),
+                 (("b",), np.asarray(index._prep_query(queries[1][None]))[0],
+                  full, 1.0)])
+    lanes.step(2)
+    lanes.evict([0])
+    assert lanes.meta[0] is None and lanes.meta[1] is not None
+    live = lanes.step(0)                     # run lane 1 to convergence
+    assert not live.any(), "evicted lanes must report live=False"
+    ids, dists = lanes.finalize(np.ones(1, bool))
+    assert (ids[0] == -1).all(), "an evicted lane finalizes to all -1"
+    single = index.search(queries[1], k=6, efs=24)
+    np.testing.assert_array_equal(ids[1][:6], np.asarray(single.ids),
+                                  err_msg="surviving lane must be intact")
+
+
+# -- SearchService (manual driver, fake clock) -------------------------------
+
+def test_service_serves_and_matches_single_query_oracle(index, queries):
+    n = index.graph.n
+    db = _db(index, n)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=4, step_iters=4)
+    futs, cuts = [], [n // 8, n // 3, n // 2, n, 2 * n // 3, n // 5]
+    for j, cut in enumerate(cuts):
+        futs.append(svc.submit(queries[j], plan=_cut_plan(cut), k=6))
+    _drive(svc, futs)
+    for j, (cut, f) in enumerate(zip(cuts, futs)):
+        r = f.result(timeout=0)
+        assert r.status == "ok" and not r.degraded
+        single = index.search(queries[j], k=6, efs=24,
+                              semimask=np.arange(n) < cut)
+        np.testing.assert_array_equal(np.asarray(r.ids),
+                                      np.asarray(single.ids))
+    assert {f.result().rid for f in futs} == {r.result().rid for r in futs}
+    svc.shutdown()
+
+
+def test_service_queue_expiry_is_timeout_never_partial_ids(index, queries):
+    """A request whose deadline passes while still queued resolves to
+    Response.timeout with ALL ids -1 -- no lane, no partial id list."""
+    n = index.graph.n
+    db = _db(index, n)
+    clk = FakeClock(0.0)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=1,
+                        step_iters=2, clock=clk)
+    # admission is deadline-ordered: the EARLIER deadline takes the only
+    # lane, leaving f_dead queued past its own deadline
+    f_first = svc.submit(queries[0], k=6, deadline_s=3.0)
+    f_dead = svc.submit(queries[1], k=6, deadline_s=5.0)
+    svc._tick()                                      # admits f_first only
+    assert svc.lanes.occupied_count() == 1 and not f_dead.done()
+    clk.t = 10.0                                     # f_dead expires queued
+    svc._tick()
+    r = f_dead.result(timeout=0)
+    assert r.timeout and r.status == "timeout"
+    assert (np.asarray(r.ids) == -1).all() and np.isinf(r.dists).all()
+    assert r.exec_ms == 0.0, "an expired-in-queue request never ran"
+    assert f_first.done(), "the overdue lane must be evicted too"
+    svc.shutdown()
+
+
+def test_service_midflight_eviction_timeout_when_k_uncovered(index, queries):
+    """A lane evicted mid-flight whose selection holds fewer than k valid
+    nodes can never cover k: it must resolve to timeout (all -1), and its
+    lane must be reusable afterwards."""
+    n = index.graph.n
+    db = _db(index, n)
+    clk = FakeClock(0.0)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=1,
+                        step_iters=1, clock=clk)
+    f = svc.submit(queries[0], plan=_cut_plan(3), k=6,   # |S|=3 < k=6
+                   deadline_s=5.0)
+    svc._tick()                                      # admit + 1 chunk
+    assert svc.lanes.occupied_count() == 1
+    clk.t = 10.0
+    svc._tick()                                      # overdue -> evict
+    r = f.result(timeout=0)
+    assert r.status == "timeout" and (np.asarray(r.ids) == -1).all()
+    assert svc.lanes.occupied_count() == 0, "evicted lane must free up"
+    f2 = svc.submit(queries[1], k=6)                 # lane is reusable
+    _drive(svc, [f2])
+    assert f2.result(timeout=0).status == "ok"
+    assert svc.n_timeout == 1
+    svc.shutdown()
+
+
+def test_service_midflight_eviction_salvages_partial(index, queries):
+    """An evicted lane whose beam already covers k valid candidates comes
+    back status='partial' with k real ids (best-effort answer)."""
+    n = index.graph.n
+    db = _db(index, n)
+    clk = FakeClock(0.0)
+    svc = SearchService(db, k_cap=4, efs_cap=16, max_batch=1,
+                        step_iters=8, clock=clk)
+    f = svc.submit(queries[0], k=4, deadline_s=5.0)  # unfiltered: beam
+    svc._tick()                                      # fills fast
+    if f.done():                                     # converged already:
+        assert f.result().status == "ok"             # nothing to evict
+        svc.shutdown()
+        return
+    clk.t = 10.0
+    svc._tick()
+    r = f.result(timeout=0)
+    assert r.status == "partial" and not r.timeout
+    assert (np.asarray(r.ids) >= 0).all() and len(r.ids) == 4
+    svc.shutdown()
+
+
+def test_service_shutdown_drains_every_rid_exactly_once(index, queries):
+    n = index.graph.n
+    db = _db(index, n)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=2, step_iters=3)
+    futs = [svc.submit(queries[j % len(queries)],
+                       plan=_cut_plan(n // (j + 2)), k=6)
+            for j in range(9)]
+    svc.shutdown(drain=True)                 # manual driver drains inline
+    rids = [f.result(timeout=0).rid for f in futs]
+    assert sorted(rids) == sorted(set(rids)) and len(rids) == 9
+    assert all(f.result().status == "ok" for f in futs)
+    assert svc.n_done == 9 and svc.n_submitted == 9
+    with pytest.raises(ServiceClosed):
+        svc.submit(queries[0], k=6)
+    svc.shutdown()                           # idempotent
+
+
+def test_service_shutdown_without_drain_cancels(index, queries):
+    db = _db(index, index.graph.n)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=1, step_iters=1)
+    f_run = svc.submit(queries[0], k=6)
+    f_queued = svc.submit(queries[1], k=6)
+    svc._tick()                              # f_run takes the lane
+    svc.shutdown(drain=False)
+    assert f_run.cancelled() and f_queued.cancelled()
+    assert svc.lanes.occupied_count() == 0
+
+
+def test_service_backpressure_reject_via_submit(index, queries):
+    db = _db(index, index.graph.n)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=1,
+                        queue_size=4, policy="reject",
+                        high_watermark=2, low_watermark=1)
+    svc.submit(queries[0], k=6)
+    svc.submit(queries[1], k=6)
+    with pytest.raises(QueueFull):
+        svc.submit(queries[2], k=6)
+    assert svc.gauges()["queue"]["gated"]
+    svc.shutdown(drain=True)
+
+
+def test_service_rejects_requests_exceeding_program_caps(index, queries):
+    db = _db(index, index.graph.n)
+    svc = SearchService(db, k_cap=6, efs_cap=24)
+    with pytest.raises(ValueError, match="caps"):
+        svc.submit(queries[0], k=7)
+    with pytest.raises(ValueError, match="heuristic"):
+        from repro.query.operators import KnnSearch
+        svc.submit(queries[0],
+                   plan=KnnSearch(child=None, table="Chunk", k=4,
+                                  heuristic="onehop_a"))
+    svc.shutdown()
+
+
+def test_service_thread_driver_end_to_end(index, queries):
+    n = index.graph.n
+    db = _db(index, n)
+    with db.serve(k_cap=6, efs_cap=24, max_batch=4, step_iters=4) as svc:
+        futs = [svc.submit(queries[j], plan=_cut_plan(n // (j + 1)), k=6)
+                for j in range(6)]
+        out = [f.result(timeout=120) for f in futs]
+    assert all(r.status == "ok" for r in out)
+    assert svc.closed and svc.n_done == 6
+    g = svc.gauges()
+    assert g["in_flight"] == 0 and g["queue"]["depth"] == 0
+    assert g["p50_ms"] >= 0 and g["p99_ms"] >= g["p50_ms"]
+
+
+# -- heartbeat liveness on a sharded service ---------------------------------
+
+@needs_2_devices
+def test_heartbeat_staleness_equals_alive_restricted_reference(shard_env,
+                                                               queries):
+    """Suppressing one shard's heartbeats mid-service flips responses to
+    degraded AUTOMATICALLY (no caller-set alive mask), and the answers
+    equal the per-shard host oracle restricted to the alive shards --
+    the same contract as the distributed suite's quorum test."""
+    X, qs, factory = shard_env
+    sn = factory(2)
+    n = sn.n_total
+    db = _db(sn, n)
+    clk = FakeClock(0.0)
+    hb = HeartbeatMonitor(2, stale_after=2.0, clock=clk)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=4,
+                        step_iters=4, heartbeats=hb)
+    params = sn._params(6, 24, "adaptive_local")
+    cuts = [n // 3, n // 2, n, n // 5]
+    masks = np.stack([np.arange(n) < c for c in cuts])
+    Q = qs[:4]
+
+    # phase 1: all shards beating -> full-quorum answers
+    futs = [svc.submit(Q[j], plan=_cut_plan(cuts[j]), k=6)
+            for j in range(4)]
+    _drive(svc, futs)
+    ref_d, ref_i, _ = per_shard_reference(sn, Q, masks, params)
+    for j, f in enumerate(futs):
+        r = f.result(timeout=0)
+        assert r.status == "ok" and not r.degraded
+        np.testing.assert_array_equal(np.asarray(r.ids), ref_i[j])
+        np.testing.assert_array_equal(np.asarray(r.dists), ref_d[j])
+
+    # phase 2: shard 1's worker goes silent; its heartbeat ages out and
+    # every response finalized afterwards is degraded + alive-restricted
+    hb.suppress(1)
+    clk.t = 10.0
+    hb.beat(0)
+    alive = np.array([True, False])
+    futs = [svc.submit(Q[j], plan=_cut_plan(cuts[j]), k=6)
+            for j in range(4)]
+    _drive(svc, futs)
+    ref_d, ref_i, _ = per_shard_reference(sn, Q, masks, params,
+                                          alive=alive)
+    for j, f in enumerate(futs):
+        r = f.result(timeout=0)
+        assert r.status == "ok" and r.degraded, \
+            "stale heartbeat must degrade responses automatically"
+        np.testing.assert_array_equal(
+            np.asarray(r.ids), ref_i[j],
+            err_msg=f"lane {j} != alive-restricted reference")
+        np.testing.assert_array_equal(np.asarray(r.dists), ref_d[j])
+        ids = np.asarray(r.ids)
+        assert (ids[ids >= 0] // sn.n_local != 1).all(), \
+            "dead shard leaked ids"
+    svc.shutdown()
+
+
+# -- latency summary satellite (closed-queue engine) -------------------------
+
+def test_latency_summary_splits_queue_and_service(index, queries):
+    from repro.serving.engine import SearchEngine
+    store = GraphStore()
+    store.add_node_table("Chunk", index.graph.n,
+                         {"cID": np.arange(index.graph.n)})
+    eng = SearchEngine(index=index, store=store, efs=24)
+    for j in range(5):
+        eng.submit(queries[j], plan=_cut_plan(index.graph.n // (j + 1)),
+                   k=5)
+    eng.drain()
+    s = eng.latency_summary()
+    assert s["n"] == 5
+    for key in ("p50_ms", "p95_ms", "p99_ms", "mean_ms", "queue_p50_ms",
+                "queue_p99_ms", "service_p50_ms", "service_p95_ms",
+                "service_p99_ms"):
+        assert key in s and np.isfinite(s[key]) and s[key] >= 0.0, key
+    assert s["p99_ms"] >= s["p50_ms"]
+    # the split is recorded in lockstep with the totals
+    assert len(eng.queue_waits_ms) == len(eng.service_ms) == 5
+    np.testing.assert_allclose(
+        np.asarray(eng.queue_waits_ms) + np.asarray(eng.service_ms),
+        np.asarray(eng.latencies_ms))
