@@ -373,7 +373,13 @@ class SearchEngine:
 
         while pending or lanes.occupied_count():
             n_running = lanes.occupied_count() - len(done)
-            n_free = lanes.free_count() - len(done)
+            # free_count() already excludes converged-but-unflushed lanes
+            # (their meta stays set until flush), so the reclaimable lane
+            # count is free + done -- subtracting done here would reduce
+            # the admission test to free >= thr, which never passes while
+            # the batch is full, silently degrading continuous scheduling
+            # to whole-batch convergence
+            n_free = lanes.free_count()
             if pending and (n_free + len(done) >= refill_thr
                             or n_running == 0):
                 flush()                 # compact converged lanes out ...

@@ -110,24 +110,30 @@ class SubmissionQueue:
         with self._lock:
             if self._closed:
                 raise ServiceClosed("queue is closed")
-            if len(self._items) >= self.high:
-                self._gated = True
-            if self._gated:
+            t_end = None
+            # re-evaluate the gate each time a blocked putter wakes: N
+            # putters woken together would otherwise all append after
+            # one ungate, pushing depth to low + N past the high
+            # watermark (and potentially past maxsize)
+            while True:
+                if len(self._items) >= self.high:
+                    self._gated = True
+                if not self._gated:
+                    break
                 if self.policy == "reject":
                     self.n_rejected += 1
                     raise QueueFull(
                         f"queue gated at depth {len(self._items)} "
                         f"(high={self.high}; reopens at low={self.low})")
-                t_end = (None if timeout is None
-                         else time.monotonic() + timeout)
-                while self._gated and not self._closed:
-                    remaining = (None if t_end is None
-                                 else t_end - time.monotonic())
-                    if remaining is not None and remaining <= 0:
-                        self.n_rejected += 1
-                        raise QueueFull("blocked put timed out under "
-                                        "backpressure")
-                    self._space.wait(remaining)
+                if timeout is not None and t_end is None:
+                    t_end = time.monotonic() + timeout
+                remaining = (None if t_end is None
+                             else t_end - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    self.n_rejected += 1
+                    raise QueueFull("blocked put timed out under "
+                                    "backpressure")
+                self._space.wait(remaining)
                 if self._closed:
                     raise ServiceClosed("queue closed while blocked on "
                                         "backpressure")

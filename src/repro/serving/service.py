@@ -34,7 +34,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -93,7 +93,7 @@ class SearchService:
                  alive: Optional[np.ndarray] = None,
                  heartbeats: Optional[object] = None,
                  clock: Callable[[], float] = time.perf_counter,
-                 window: int = 1024):
+                 window: int = 1024, sel_cache_size: int = 128):
         self.db = db
         name = index if index is not None else next(iter(db.catalog), None)
         if name is None or name not in db.catalog:
@@ -117,8 +117,17 @@ class SearchService:
         self.queue = queue if queue is not None else SubmissionQueue(
             maxsize=queue_size, policy=policy,
             high_watermark=high_watermark, low_watermark=low_watermark)
-        self._sel_cache: dict[Any, tuple] = {}   # Q_S -> (row, sigma, ms)
+        # Q_S -> (row, sigma, ms), LRU-bounded: each packed row is
+        # ~n/32 words (per shard), so an unbounded cache leaks memory on
+        # a long-running service with many distinct selections. An
+        # evicted Q_S is simply re-prefiltered on its next submission
+        # (whose carrier then pays the wall time again).
+        if sel_cache_size < 1:
+            raise ValueError("sel_cache_size must be >= 1")
+        self.sel_cache_size = sel_cache_size
+        self._sel_cache: "OrderedDict[Any, tuple]" = OrderedDict()
         self._submit_lock = threading.Lock()
+        self._lat_lock = threading.Lock()
         self._next_rid = 0
         self.n_submitted = 0
         self.n_done = 0
@@ -176,7 +185,10 @@ class SearchService:
                         self.lanes.backend.pack_row(qres.mask),
                         qres.selectivity, qres.seconds * 1e3)
                 row, sigma, pf_ms = self._sel_cache[s]
+                while len(self._sel_cache) > self.sel_cache_size:
+                    self._sel_cache.popitem(last=False)
             else:
+                self._sel_cache.move_to_end(s)
                 row, sigma, _ = self._sel_cache[s]
                 pf_ms = 0.0
             rid = self._next_rid
@@ -215,8 +227,11 @@ class SearchService:
         if not pend.fut.done():
             pend.fut.set_result(resp)
             self.n_done += 1
-            self._lat.append(resp.queue_ms + resp.exec_ms
-                             + resp.prefilter_ms)
+            # gauges() iterates this deque from other threads; an
+            # unguarded append can tear that iteration mid-poll
+            with self._lat_lock:
+                self._lat.append(resp.queue_ms + resp.exec_ms
+                                 + resp.prefilter_ms)
             if resp.status == "timeout":
                 self.n_timeout += 1
             elif resp.status == "partial":
@@ -338,21 +353,28 @@ class SearchService:
                 self.queue.wait_nonempty(0.01)
 
     def shutdown(self, drain: bool = True,
-                 timeout: Optional[float] = None) -> None:
+                 timeout: Optional[float] = None) -> bool:
         """Close the front door. ``drain=True`` first answers every
         submitted rid exactly once (blocked putters wake with
         :class:`ServiceClosed`); ``drain=False`` cancels every
-        outstanding future. Idempotent."""
+        outstanding future. Returns True once fully shut down; False if
+        the background thread is still draining when ``timeout`` expires
+        -- the thread keeps sole ownership of the lane state (ticking it
+        inline here would race it), so call ``shutdown`` again to keep
+        waiting. Idempotent."""
         if self.closed:
-            return
+            return True
         self.queue.close()
         self._draining = drain
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout)
+            if self._thread.is_alive():
+                return False
             self._thread = None
         if drain:
-            # manual-driver (or join-timed-out) path: finish inline
+            # manual-driver path (no thread ever ran, or it exited
+            # before finishing a non-drain stop): finish inline
             while len(self.queue) or self.lanes.occupied_count():
                 self._tick()
         else:
@@ -363,6 +385,7 @@ class SearchService:
                 self._cancel(self.lanes.meta[i])
             self.lanes.evict(occ)
         self.closed = True
+        return True
 
     @staticmethod
     def _cancel(pend: _Pending) -> None:
@@ -385,8 +408,10 @@ class SearchService:
              "lanes": self.lanes.bsz,
              "submitted": self.n_submitted, "done": self.n_done,
              "timeouts": self.n_timeout, "partials": self.n_partial}
-        if self._lat:
-            arr = np.asarray(self._lat)
+        with self._lat_lock:
+            lat = list(self._lat)
+        if lat:
+            arr = np.asarray(lat)
             g["p50_ms"] = float(np.percentile(arr, 50))
             g["p99_ms"] = float(np.percentile(arr, 99))
         return g

@@ -58,6 +58,38 @@ def test_continuous_scheduler_mixed_plans_exactly_once(index, queries):
     assert eng.latency_summary()["n"] == len(cutoffs)
 
 
+def test_refill_admits_while_other_lanes_still_live(index, queries):
+    """Continuous scheduling, not batch-convergence scheduling: with
+    more requests than lanes and refill_threshold=1, a converged lane
+    must be flushed and refilled from the queue while OTHER lanes are
+    still running -- i.e. some step must shrink `pending` with live
+    lanes carried over from the previous step. (Regression: counting
+    converged-but-unflushed lanes out of free_count() made the
+    admission test collapse to free >= thr, deferring every refill to
+    whole-batch convergence.)"""
+    n = index.graph.n
+    eng = _mixed_plan_engine(index, efs=30, max_batch=4,
+                             scheduler="continuous", step_iters=1,
+                             refill_threshold=1)
+    hooks = []
+    eng.step_hook = lambda info: hooks.append(dict(info))
+    # widely mixed selectivities so lane convergence staggers
+    cutoffs = [n // 20, n, n // 10, n // 2, n // 3, n, n // 4,
+               n // 5, 3 * n // 4, n // 8, n, n // 6]
+    rids = set()
+    for j, cut in enumerate(cutoffs):
+        plan = Filter(NodeScan("Chunk"), "cID", "<", value=cut)
+        rids.add(eng.submit(queries[j % len(queries)], plan=plan, k=6))
+    responses = eng.drain()
+    assert sorted(r.rid for r in responses) == sorted(rids)
+    staggered = [j for j in range(1, len(hooks))
+                 if hooks[j]["pending"] < hooks[j - 1]["pending"]
+                 and hooks[j - 1]["live"] > 0]
+    assert staggered, (
+        "every refill waited for whole-batch convergence (live==0); "
+        f"hooks={[(h['pending'], h['live'], h['done']) for h in hooks]}")
+
+
 def test_continuous_matches_grouped_reference(index, queries):
     """Same mixed workload through both schedulers: identical answers."""
     n = index.graph.n

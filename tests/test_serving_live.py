@@ -110,6 +110,44 @@ def test_queue_backpressure_block_unblocks_at_low_watermark():
         q.put(1.0, None, meta=4, timeout=0.05)
 
 
+def test_queue_block_woken_putters_recheck_depth():
+    """N putters blocked on the gate must NOT all append when it
+    reopens: each woken putter re-checks depth, so the documented bound
+    (depth never exceeds the high watermark) holds even under a
+    thundering herd."""
+    q = SubmissionQueue(maxsize=4, policy="block",
+                        high_watermark=2, low_watermark=1)
+    q.put(1.0, None, meta=0)
+    q.put(1.0, None, meta=1)                 # depth == high -> gated
+    n_blocked = 3
+    started = []
+    threads = [threading.Thread(
+        target=lambda j=j: started.append(q.put(1.0, None, meta=10 + j)))
+        for j in range(n_blocked)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(0.2)
+    assert all(t.is_alive() for t in threads), "puts must block gated"
+    q.pop_batch(1)                           # depth 1 == low -> reopen
+    deadline = 5.0
+    import time as _time
+    t0 = _time.monotonic()
+    while len(started) < 1 and _time.monotonic() - t0 < deadline:
+        _time.sleep(0.01)
+    _time.sleep(0.1)                         # let the herd race the gate
+    assert len(q) <= 2, ("woken putters must re-check depth; got depth "
+                         f"{len(q)} > high=2")
+    # drain: every blocked putter eventually gets in, one reopen at a time
+    while len(started) < n_blocked and _time.monotonic() - t0 < deadline:
+        q.pop_batch(2)
+        _time.sleep(0.01)
+    for t in threads:
+        t.join(deadline)
+    assert len(started) == n_blocked
+    assert len(q) <= 2
+
+
 def test_queue_close_wakes_blocked_putter_with_service_closed():
     q = SubmissionQueue(maxsize=4, policy="block", high_watermark=1)
     q.put(1.0, None, meta=0)
@@ -334,6 +372,64 @@ def test_service_shutdown_without_drain_cancels(index, queries):
     svc.shutdown(drain=False)
     assert f_run.cancelled() and f_queued.cancelled()
     assert svc.lanes.occupied_count() == 0
+
+
+def test_service_shutdown_join_timeout_leaves_thread_owner(index, queries):
+    """If join() times out, the background thread still owns the lane
+    state: shutdown must NOT tick inline (that would race it), must
+    keep the thread handle, and must report not-drained (False). A
+    later shutdown call finishes once the thread has exited."""
+    n = index.graph.n
+    db = _db(index, n)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=2, step_iters=3)
+    futs = [svc.submit(queries[j % len(queries)],
+                       plan=_cut_plan(n // (j + 2)), k=6)
+            for j in range(5)]
+    # stand-in for a device loop that outlives the join timeout: a
+    # thread we gate explicitly, so the race window is deterministic
+    release = threading.Event()
+    stuck = threading.Thread(target=release.wait)
+    stuck.start()
+    svc._thread = stuck
+    assert svc.shutdown(drain=True, timeout=0.05) is False
+    assert not svc.closed and svc._thread is stuck
+    assert not any(f.done() for f in futs), \
+        "shutdown must not drain inline while the thread is alive"
+    release.set()
+    assert svc.shutdown(drain=True, timeout=5.0) is True
+    assert svc.closed
+    rids = [f.result(timeout=0).rid for f in futs]
+    assert sorted(rids) == sorted(set(rids)) and len(rids) == 5
+
+
+def test_service_sel_cache_is_lru_bounded(index, queries):
+    """The prefilter memo is an LRU with a size cap: distinct selection
+    subqueries beyond the cap evict the oldest entry, and an evicted
+    Q_S is re-prefiltered (its next carrier pays wall time again)."""
+    n = index.graph.n
+    db = _db(index, n)
+    svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=4,
+                        step_iters=4, sel_cache_size=2)
+    cuts = [n // 2, n // 3, n // 4]          # 3 distinct Q_S, cap 2
+    futs = [svc.submit(queries[j], plan=_cut_plan(c), k=6)
+            for j, c in enumerate(cuts)]
+    assert len(svc._sel_cache) == 2, "cache must stay at its cap"
+    assert all(f.result(timeout=0).prefilter_ms > 0 for f in
+               (_drive(svc, futs) or futs)), \
+        "each first carrier pays its prefilter"
+    # cuts[0] was evicted by cuts[2]; re-submitting it re-prefilters
+    f_again = svc.submit(queries[0], plan=_cut_plan(cuts[0]), k=6)
+    assert f_again not in futs
+    _drive(svc, [f_again])
+    assert f_again.result(timeout=0).prefilter_ms > 0, \
+        "an evicted Q_S must be re-prefiltered, not served stale"
+    # a still-cached Q_S is a hit: no prefilter charge
+    f_hit = svc.submit(queries[1], plan=_cut_plan(cuts[0]), k=6)
+    _drive(svc, [f_hit])
+    assert f_hit.result(timeout=0).prefilter_ms == 0.0
+    n_ans = svc.n_done
+    svc.shutdown(drain=True)
+    assert svc.n_done == n_ans, "shutdown answers nothing twice"
 
 
 def test_service_backpressure_reject_via_submit(index, queries):
