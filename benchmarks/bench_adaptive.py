@@ -4,8 +4,6 @@ heuristic-pick distributions and the correlation-ratio (ce) table."""
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, measure, n_queries
 from benchmarks.datasets import wiki_dataset
 from repro.configs.navix_paper import CORR_SELECTIVITIES

@@ -6,11 +6,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import QUICK, emit
 from repro.core.build import BuildParams, build
-from repro.core.navix import NavixConfig
 from repro.data.synthetic import gaussian_mixture
 
 

@@ -23,7 +23,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import bitset
-from repro.core.navix import NavixConfig, NavixIndex
+from repro.core.navix import NavixConfig
 from repro.core.search import SearchParams, search_batch
 from repro.core.search_batch import search_many
 from repro.data.synthetic import gaussian_mixture

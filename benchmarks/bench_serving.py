@@ -193,7 +193,18 @@ def run_open_loop(smoke: bool = False) -> list[dict]:
     """The ``--open-loop`` arm: Poisson arrivals into the live
     SearchService at offered loads swept as fractions of the measured
     closed-queue drain QPS. Rows merge into BENCH_serving.json next to
-    the closed-queue rows (kept for trend continuity)."""
+    the closed-queue rows (kept for trend continuity).
+
+    The whole arm runs under the two runtime guards from
+    ``repro.analysis.runtime``: the compile counter proves the timed
+    steady state compiles NOTHING (every XLA program is built during
+    warmup; a steady-state compile is a silent latency cliff that
+    masquerades as an algorithmic regression), and the lock monitor
+    proves the serving tier's lock acquisition graph stays acyclic
+    under real concurrency. Both land in the JSON payload; the compile
+    counts are drift-checked against the committed
+    ``experiments/bench/COMPILE_baseline.json`` by ``trend.py``."""
+    from repro.analysis.runtime import CompileCounter, instrument_locks
     from repro.api.db import NavixDB
 
     n, d, n_req, reps = _workload()
@@ -209,49 +220,55 @@ def run_open_loop(smoke: bool = False) -> list[dict]:
         store.add_node_table("Chunk", n, {"cID": np.arange(n)})
         return store
 
-    # closed-queue anchor: the continuous scheduler's drain QPS on the
-    # identical stream sets the offered-load scale
-    engine = SearchEngine(index=index, store=make_store(), efs=EFS,
-                          max_batch=MAX_BATCH, scheduler="continuous",
-                          step_iters=STEP_ITERS)
-    _serve(engine, reqs)                            # warm-up compile
-    closed_walls = [_serve(engine, reqs)[0] for _ in range(reps)]
-    closed_drain_ms = float(np.median(closed_walls)) * 1e3
-    closed_qps = n_req / (closed_drain_ms / 1e3)
+    with CompileCounter() as cc, instrument_locks() as locks:
+        # closed-queue anchor: the continuous scheduler's drain QPS on
+        # the identical stream sets the offered-load scale
+        engine = SearchEngine(index=index, store=make_store(), efs=EFS,
+                              max_batch=MAX_BATCH, scheduler="continuous",
+                              step_iters=STEP_ITERS)
+        _serve(engine, reqs)                        # warm-up compile
+        closed_walls = [_serve(engine, reqs)[0] for _ in range(reps)]
+        closed_drain_ms = float(np.median(closed_walls)) * 1e3
+        closed_qps = n_req / (closed_drain_ms / 1e3)
 
-    db = NavixDB(make_store())
-    db.register_index("default", index)
-    fracs = OPEN_LOOP_FRACS[-1:] if smoke else OPEN_LOOP_FRACS
-    rng = np.random.default_rng(23)
-    rows: list[dict] = []
-    for frac in fracs:
-        lam = frac * closed_qps
-        svc = db.serve(k_cap=K, efs_cap=EFS, max_batch=MAX_BATCH,
-                       step_iters=STEP_ITERS,
-                       default_deadline_s=OPEN_LOOP_DEADLINE_S,
-                       queue_size=max(64, 2 * n_req)).start()
-        # warm the service program before the timed arrival process
-        for f in [svc.submit(q, plan=p, k=K) for q, p in reqs[:2]]:
-            f.result(timeout=600)
-        gaps = rng.exponential(1.0 / lam, size=n_req)
-        t0 = time.perf_counter()
-        futs = []
-        for (q, plan), gap in zip(reqs, gaps):
-            time.sleep(gap)
-            futs.append(svc.submit(q, plan=plan, k=K))
-        resps = [f.result(timeout=600) for f in futs]
-        wall = time.perf_counter() - t0
-        svc.shutdown(drain=True)
-        lats = [r.queue_ms + r.exec_ms + r.prefilter_ms for r in resps]
-        n_timeout = sum(1 for r in resps if r.timeout)
-        rows.append({
-            "sched": "open-loop", "lam_frac": frac, "n_req": n_req,
-            "offered_qps": round(lam, 2),
-            "qps": round(len(resps) / wall, 2),
-            "p50_ms": round(float(np.percentile(lats, 50)), 3),
-            "p99_ms": round(float(np.percentile(lats, 99)), 3),
-            "timeout_rate": round(n_timeout / len(resps), 4),
-        })
+        db = NavixDB(make_store())
+        db.register_index("default", index)
+        fracs = OPEN_LOOP_FRACS[-1:] if smoke else OPEN_LOOP_FRACS
+        rng = np.random.default_rng(23)
+        rows: list[dict] = []
+        for frac in fracs:
+            lam = frac * closed_qps
+            cc.mark(f"warmup@{frac}")
+            svc = db.serve(k_cap=K, efs_cap=EFS, max_batch=MAX_BATCH,
+                           step_iters=STEP_ITERS,
+                           default_deadline_s=OPEN_LOOP_DEADLINE_S,
+                           queue_size=max(64, 2 * n_req)).start()
+            # warm the service program before the timed arrival process
+            for f in [svc.submit(q, plan=p, k=K) for q, p in reqs[:2]]:
+                f.result(timeout=600)
+            gaps = rng.exponential(1.0 / lam, size=n_req)
+            cc.mark(f"steady@{frac}")
+            t0 = time.perf_counter()
+            futs = []
+            for (q, plan), gap in zip(reqs, gaps):
+                time.sleep(gap)
+                futs.append(svc.submit(q, plan=plan, k=K))
+            resps = [f.result(timeout=600) for f in futs]
+            wall = time.perf_counter() - t0
+            svc.shutdown(drain=True)
+            lats = [r.queue_ms + r.exec_ms + r.prefilter_ms for r in resps]
+            n_timeout = sum(1 for r in resps if r.timeout)
+            rows.append({
+                "sched": "open-loop", "lam_frac": frac, "n_req": n_req,
+                "offered_qps": round(lam, 2),
+                "qps": round(len(resps) / wall, 2),
+                "p50_ms": round(float(np.percentile(lats, 50)), 3),
+                "p99_ms": round(float(np.percentile(lats, 99)), 3),
+                "timeout_rate": round(n_timeout / len(resps), 4),
+            })
+    steady_compiles = sum(v for k, v in cc.counts.items()
+                          if k.startswith("steady"))
+    lock_report = locks.report()
     common.emit(rows, "serving_open_loop")
 
     # merge next to the closed-queue rows (replacing any previous
@@ -264,21 +281,36 @@ def run_open_loop(smoke: bool = False) -> list[dict]:
     payload["open_loop"] = {"closed_drain_ms": round(closed_drain_ms, 2),
                             "closed_qps": round(closed_qps, 2),
                             "deadline_s": OPEN_LOOP_DEADLINE_S,
-                            "n_req": n_req, "smoke": smoke}
+                            "n_req": n_req, "smoke": smoke,
+                            "compiles": dict(cc.counts),
+                            "steady_compiles": steady_compiles,
+                            "lock_order": lock_report}
     JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
     JSON_OUT.write_text(json.dumps(payload, indent=2) + "\n")
     for r in rows:
         r["_closed_drain_ms"] = closed_drain_ms
+        r["_steady_compiles"] = steady_compiles
+        r["_lock_cycles"] = lock_report["cycles"]
     return rows
 
 
 def validate_open_loop(rows: list[dict]) -> list[str]:
-    """Open-loop gates: 0 timeouts at generous deadlines, and p99
-    bounded by the closed-queue FULL-drain wall time at <= 0.7x load
-    (an unbounded queue would blow straight past it)."""
+    """Open-loop gates: 0 timeouts at generous deadlines, p99 bounded
+    by the closed-queue FULL-drain wall time at <= 0.7x load (an
+    unbounded queue would blow straight past it), ZERO steady-state XLA
+    compiles, and an acyclic lock acquisition graph."""
     fails: list[str] = []
     if not rows:
         return ["open-loop produced no rows"]
+    r0 = rows[0]
+    if r0.get("_steady_compiles"):
+        fails.append(f"{r0['_steady_compiles']} XLA compile(s) in the "
+                     f"open-loop steady state (warmup must build every "
+                     f"program; a steady-state compile is a hidden "
+                     f"latency cliff)")
+    if r0.get("_lock_cycles"):
+        fails.append("lock-order cycles in the serving tier: "
+                     + "; ".join(r0["_lock_cycles"]))
     for r in rows:
         if r["timeout_rate"] > 0:
             fails.append(f"open-loop timeout rate {r['timeout_rate']:.2%} "

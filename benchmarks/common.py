@@ -24,7 +24,6 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitset
 from repro.core.graph import HnswGraph
 from repro.core.navix import NavixConfig, NavixIndex
 

@@ -4,14 +4,13 @@ the Wiki-like graph for correlated/join workloads."""
 from __future__ import annotations
 
 import functools
-import os
 
 import numpy as np
 
 from benchmarks.common import QUICK, cached_index
 from repro.configs.navix_paper import BENCH_INDEX
 from repro.core.navix import NavixConfig
-from repro.data.synthetic import WikiLike, gaussian_mixture, make_wiki_like
+from repro.data.synthetic import gaussian_mixture, make_wiki_like
 
 
 def scale(n: int) -> int:

@@ -55,6 +55,10 @@ def main() -> None:
                          "emitted)")
     ap.add_argument("--trend-tol", type=float, default=None,
                     help="allowed fractional QPS drop (default 0.20)")
+    ap.add_argument("--compile-baseline",
+                    default="experiments/bench/COMPILE_baseline.json",
+                    help="committed compile-count baseline the serving "
+                         "arm's recompile gate checks against")
     args = ap.parse_args()
 
     if args.check_trend:
@@ -66,7 +70,10 @@ def main() -> None:
         rc_serving = trend.check_trend(
             args.serving_current or str(bench_serving.JSON_OUT),
             args.serving_baseline, tol=tol)
-        sys.exit(rc or rc_serving)
+        rc_compiles = trend.check_compiles(
+            args.serving_current or str(bench_serving.JSON_OUT),
+            args.compile_baseline)
+        sys.exit(rc or rc_serving or rc_compiles)
 
     from benchmarks import (bench_adaptive, bench_construction,
                             bench_distributed, bench_heuristics,

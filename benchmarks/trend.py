@@ -84,6 +84,72 @@ def compare(current: dict, baseline: dict,
     return fails, notes
 
 
+#: warmup compile counts may shift across jax versions (CI installs
+#: unpinned jax[cpu]); gate them loosely. Steady-state counts are gated
+#: at exactly the baseline (which commits 0).
+_WARMUP_TOL_SCALE = 2.0
+_WARMUP_TOL_ABS = 8
+
+
+def check_compiles(current_path: str, baseline_path: str) -> int:
+    """Gate the serving arm's XLA compile counts against the committed
+    ``COMPILE_baseline.json``. Two gates with different teeth:
+
+    * ``steady_compiles`` must not exceed the baseline's (0): a compile
+      in the timed steady state is the recompile hazard navilint exists
+      to catch -- hard fail, no tolerance;
+    * total warmup compiles get a generous ceiling (2x + 8 over the
+      baseline) -- warmup counts drift with jax versions, but a blow-up
+      still means the program set grew unintentionally.
+
+    A current file without compile counts (the open-loop arm didn't
+    run) or a missing baseline is a skip, not a failure.
+    """
+    cur_p, base_p = pathlib.Path(current_path), pathlib.Path(baseline_path)
+    if not cur_p.exists():
+        print(f"compiles: no current bench file {cur_p}; skipping")
+        return 0
+    ol = json.loads(cur_p.read_text()).get("open_loop", {})
+    comp = ol.get("compiles")
+    if comp is None:
+        print("compiles: current bench has no compile counts "
+              "(open-loop arm not run); skipping")
+        return 0
+    steady = ol.get("steady_compiles",
+                    sum(v for k, v in comp.items()
+                        if k.startswith("steady")))
+    warmup = sum(comp.values()) - steady
+    if not base_p.exists():
+        print(f"compiles: no baseline at {base_p}; skipping (current: "
+              f"warmup={warmup}, steady={steady})")
+        return 0
+    base = json.loads(base_p.read_text()).get("open_loop_smoke", {})
+    fails: list[str] = []
+    base_steady = base.get("steady_compiles", 0)
+    if steady > base_steady:
+        fails.append(f"steady-state compiles {steady} > baseline "
+                     f"{base_steady}: something recompiles while "
+                     f"serving (bucket/program-cache regression)")
+    base_warmup = base.get("warmup_compiles")
+    if base_warmup is not None:
+        ceiling = base_warmup * _WARMUP_TOL_SCALE + _WARMUP_TOL_ABS
+        if warmup > ceiling:
+            fails.append(f"warmup compiles {warmup} > ceiling "
+                         f"{ceiling:.0f} (baseline {base_warmup}): the "
+                         f"compiled program set grew")
+    cycles = ol.get("lock_order", {}).get("cycles", [])
+    if cycles:
+        fails.append("lock-order cycles recorded during the serving "
+                     "arm: " + "; ".join(cycles))
+    for f in fails:
+        print(f"COMPILE-FAIL: {f}")
+    if not fails:
+        print(f"compiles: warmup={warmup} steady={steady} within "
+              f"baseline (warmup<={base_warmup}, steady<="
+              f"{base_steady}); no lock cycles")
+    return 1 if fails else 0
+
+
 def check_trend(current_path: str, baseline_path: str,
                 tol: float = DEFAULT_TOL) -> int:
     """CLI body: print the diff, return a process exit code."""

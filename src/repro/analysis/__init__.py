@@ -1,0 +1,28 @@
+"""Repo-native static analysis (navilint) + runtime verification guards.
+
+Static side (stdlib-only, no jax import)::
+
+    from repro.analysis import analyze_paths, analyze_source
+
+Runtime side (imports jax lazily, on first use)::
+
+    from repro.analysis.runtime import CompileCounter, instrument_locks
+
+CLI: ``python -m repro.analysis --strict src tests`` (see __main__).
+"""
+
+from repro.analysis.navilint import (  # noqa: F401
+    Finding,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+)
+from repro.analysis.registry import HOT_PATHS  # noqa: F401
+
+__all__ = [
+    "Finding",
+    "analyze_file",
+    "analyze_paths",
+    "analyze_source",
+    "HOT_PATHS",
+]

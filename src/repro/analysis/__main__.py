@@ -1,0 +1,91 @@
+"""One entry point for all repo linting: navilint + (optional) ruff.
+
+Usage::
+
+    python -m repro.analysis [--strict] [--github] [paths ...]
+
+Default paths are ``src`` and ``tests`` (resolved relative to the repo
+root, found by walking up from this file). ``--strict`` exits non-zero
+on any finding; ``--github`` additionally renders findings as GitHub
+Actions ``::error`` annotations so they land on the PR diff.
+
+ruff is invoked when it's on PATH and skipped (with a note) when it
+isn't -- the container image doesn't ship it, CI installs it. navilint's
+own NX4xx hygiene rules keep pyflakes-grade coverage either way.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import shutil
+import subprocess
+import sys
+
+from repro.analysis import navilint
+
+
+def repo_root() -> pathlib.Path:
+    here = pathlib.Path(__file__).resolve()
+    for parent in here.parents:
+        if (parent / "ROADMAP.md").exists() or (parent / ".git").exists():
+            return parent
+    return here.parents[3]
+
+
+def run_ruff(paths: list[str], github: bool) -> int:
+    exe = shutil.which("ruff")
+    if exe is None:
+        print("[analysis] ruff not installed; skipping "
+              "(navilint NX4xx hygiene rules still ran)")
+        return 0
+    fmt = ["--output-format", "github" if github else "concise"]
+    proc = subprocess.run([exe, "check", *fmt, *paths],
+                          capture_output=True, text=True)
+    if proc.stdout.strip():
+        print(proc.stdout.strip())
+    if proc.stderr.strip():
+        print(proc.stderr.strip(), file=sys.stderr)
+    return proc.returncode
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="navilint + ruff over the repo tree")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to analyze (default: src tests)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any finding")
+    ap.add_argument("--github", action="store_true",
+                    help="emit GitHub Actions ::error annotations")
+    ap.add_argument("--no-ruff", action="store_true",
+                    help="run only navilint")
+    args = ap.parse_args(argv)
+
+    paths = args.paths
+    if not paths:
+        root = repo_root()
+        paths = [str(root / "src"), str(root / "tests")]
+        paths = [p for p in paths if pathlib.Path(p).exists()]
+
+    findings = navilint.analyze_paths(paths)
+    for f in findings:
+        print(f.render())
+        if args.github:
+            print(f.github())
+    n_files = len(navilint.iter_python_files(paths))
+    print(f"[analysis] navilint: {len(findings)} finding(s) "
+          f"across {n_files} file(s)")
+
+    ruff_rc = 0 if args.no_ruff else run_ruff(paths, args.github)
+
+    if findings and args.strict:
+        return 1
+    if ruff_rc != 0 and args.strict:
+        return ruff_rc
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

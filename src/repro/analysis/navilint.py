@@ -1,0 +1,555 @@
+"""navilint: repo-native static analysis for the invariants reviews kept
+catching by hand.
+
+Three rule families, all AST-level and lexical (no imports, no
+execution -- safe to run on any tree, fast enough for a pre-commit):
+
+**Hot-loop purity (NX1xx)** -- functions in the hot-path registry
+(:mod:`repro.analysis.registry`) or marked ``# navilint: hot`` may not
+contain host-sync forms (``np.*`` calls, ``.item()``, ``.tolist()``,
+``.block_until_ready()``, ``jax.device_get``) or the CPU-hostile device
+ops PR 3 purged from the engine loop (``lax.scatter*``, ``lax.top_k``,
+``.at[...].set/add/...``). ``time.time()`` is banned *everywhere*
+(deadline/duration math must be monotonic; wall clocks step under NTP).
+
+**Lock discipline (NX2xx)** -- a shared field annotated at its
+``__init__`` assignment with ``# guarded-by: <lock>`` must only be read
+or written lexically inside ``with self.<lock>:`` (or in a method
+annotated ``# navilint: lock-held <lock>``, for helpers documented as
+called with the lock held). This is exactly the bug class of the PR-6
+review fixes: the ``gauges()`` deque race and the woken-putter depth
+race were both unlocked accesses to fields everyone "knew" were guarded.
+
+**Suppression hygiene (NX3xx)** -- every suppression carries a reason
+and must actually suppress something: a stale ``# navilint: sync-ok``
+left behind after the sync call moved is itself a finding, so the
+annotation layer can never drift from the code.
+
+Plus a small built-in hygiene family (NX4xx: unused imports, bare
+``except:``) so the tree gets pyflakes-grade checks even where ruff is
+not installed -- ruff, when present, runs alongside from the same
+``python -m repro.analysis`` entry point.
+
+Suppression syntax (trailing on the offending statement, or on a
+comment-only line directly above it)::
+
+    x = np.asarray(live)   # navilint: sync-ok chunk boundary, host branches
+    # navilint: op-ok single fused top_k merge (the allowed form)
+    neg, order = lax.top_k(-d, efs)
+
+Annotation syntax::
+
+    self.depth = 0         # guarded-by: _lock
+    def _bump(self):       # navilint: lock-held _lock
+    def step(st):          # navilint: hot
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Iterable, Optional
+
+from repro.analysis import registry
+
+# -- rule ids ---------------------------------------------------------------
+SYNC_IN_HOT = "NX101"          # host sync inside a hot-path function
+FORBIDDEN_OP = "NX102"         # CPU-hostile device op in a hot-path function
+WALLCLOCK = "NX103"            # time.time() (monotonic only)
+UNLOCKED_ACCESS = "NX201"      # guarded field touched outside its lock
+UNKNOWN_LOCK = "NX202"         # guarded-by names a lock the class never binds
+STALE_SUPPRESSION = "NX301"    # suppression that suppressed nothing
+MALFORMED_SUPPRESSION = "NX302"  # suppression without a reason
+STALE_REGISTRY = "NX303"       # registry qualname not found in the file
+UNUSED_IMPORT = "NX401"        # module-level import never used
+BARE_EXCEPT = "NX402"          # except: with no exception type
+
+#: suppression kind accepted per rule (None = not suppressible)
+_SUPPRESS_KIND = {
+    SYNC_IN_HOT: "sync-ok",
+    FORBIDDEN_OP: "op-ok",
+    WALLCLOCK: "wallclock-ok",
+    UNLOCKED_ACCESS: "lock-ok",
+}
+
+#: method names whose call on any object is a host sync
+_SYNC_METHODS = ("item", "tolist", "block_until_ready", "copy_to_host")
+#: `.at[...].<setter>(...)` forms PR 3 removed from the engine loop
+_AT_SETTERS = ("set", "add", "mul", "min", "max", "apply", "get")
+#: aliases conventionally bound to the numpy module
+_NUMPY_ROOTS = ("np", "numpy", "onp")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*navilint:\s*(sync-ok|op-ok|wallclock-ok|lock-ok)\b\s*(.*)")
+_HOT_RE = re.compile(r"#\s*navilint:\s*hot\b")
+_LOCK_HELD_RE = re.compile(r"#\s*navilint:\s*lock-held\s+(\w+)")
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*(\w+)")
+_NOQA_RE = re.compile(r"#\s*noqa\b", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def github(self) -> str:
+        """GitHub Actions workflow-command annotation."""
+        return (f"::error file={self.path},line={self.line},"
+                f"title=navilint {self.rule}::{self.message}")
+
+
+@dataclasses.dataclass
+class _Suppression:
+    line: int
+    kind: str
+    reason: str
+    used: bool = False
+
+
+class _Comments:
+    """Per-line comment facts extracted with tokenize (never matches
+    text inside string literals, unlike a regex over raw source)."""
+
+    def __init__(self, source: str):
+        self.suppressions: dict[int, _Suppression] = {}
+        self.hot_lines: set[int] = set()
+        self.lock_held: dict[int, str] = {}
+        self.guarded: dict[int, str] = {}
+        self.noqa_lines: set[int] = set()
+        #: comment-only lines (suppression may sit above its statement)
+        self.standalone: set[int] = set()
+        code_lines: set[int] = set()
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(source).readline))
+        except (tokenize.TokenError, IndentationError):  # pragma: no cover
+            return
+        for tok in tokens:
+            if tok.type == tokenize.COMMENT:
+                line, text = tok.start[0], tok.string
+                m = _SUPPRESS_RE.search(text)
+                if m:
+                    self.suppressions[line] = _Suppression(
+                        line, m.group(1), m.group(2).strip())
+                if _HOT_RE.search(text):
+                    self.hot_lines.add(line)
+                m = _LOCK_HELD_RE.search(text)
+                if m:
+                    self.lock_held[line] = m.group(1)
+                m = _GUARDED_RE.search(text)
+                if m:
+                    self.guarded[line] = m.group(1)
+                if _NOQA_RE.search(text):
+                    self.noqa_lines.add(line)
+            elif tok.type not in (tokenize.NL, tokenize.NEWLINE,
+                                  tokenize.INDENT, tokenize.DEDENT,
+                                  tokenize.ENCODING, tokenize.ENDMARKER):
+                code_lines.add(tok.start[0])
+        self.standalone = {
+            line for line in (set(self.suppressions) | set(self.lock_held)
+                              | set(self.hot_lines))
+            if line not in code_lines}
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """``a.b.c`` -> ["a", "b", "c"]; [] when not a plain name chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return []
+
+
+def _contains_call(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Call) for n in ast.walk(node))
+
+
+class _FileAnalyzer:
+    """One source file's full navilint pass."""
+
+    def __init__(self, path: str, source: str, rel_path: str):
+        self.path = path
+        self.source = source
+        self.rel_path = rel_path
+        self.comments = _Comments(source)
+        self.findings: list[Finding] = []
+        self.hot_registry = set(registry.hot_names_for(rel_path))
+        self.seen_qualnames: set[str] = set()
+        # statement line-span stack: suppressions attach to statements
+        self._stmt_spans: list[tuple[int, int]] = []
+
+    # -- plumbing -------------------------------------------------------
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        span = self._stmt_spans[-1] if self._stmt_spans else (line, line)
+        kind = _SUPPRESS_KIND.get(rule)
+        if kind is not None:
+            for ln in range(span[0] - 1, span[1] + 1):
+                sup = self.comments.suppressions.get(ln)
+                if sup is None or sup.kind != kind:
+                    continue
+                # a comment-only line above the span only binds to the
+                # statement immediately below it
+                if ln == span[0] - 1 and ln not in self.comments.standalone:
+                    continue
+                sup.used = True
+                if not sup.reason:
+                    self.findings.append(Finding(
+                        MALFORMED_SUPPRESSION, self.path, ln,
+                        f"suppression 'navilint: {kind}' needs a reason "
+                        f"(why is this site exempt?)"))
+                return
+        self.findings.append(Finding(rule, self.path, line, message))
+
+    def _fn_annotations(self, node: ast.AST) -> Iterable[int]:
+        """Lines a def-level annotation may sit on: the def line and a
+        comment-only line directly above (or above its decorators)."""
+        first = min([node.lineno]
+                    + [d.lineno for d in getattr(node, "decorator_list",
+                                                 [])])
+        yield node.lineno
+        if first - 1 in self.comments.standalone:
+            yield first - 1
+
+    def _is_marked_hot(self, node: ast.AST) -> bool:
+        return any(ln in self.comments.hot_lines
+                   for ln in self._fn_annotations(node))
+
+    def _lock_held_name(self, node: ast.AST) -> Optional[str]:
+        for ln in self._fn_annotations(node):
+            if ln in self.comments.lock_held:
+                return self.comments.lock_held[ln]
+        return None
+
+    # -- entry ----------------------------------------------------------
+    def run(self) -> list[Finding]:
+        try:
+            tree = ast.parse(self.source, filename=self.path)
+        except SyntaxError as e:
+            return [Finding("NX000", self.path, e.lineno or 1,
+                            f"syntax error: {e.msg}")]
+        self._scan_functions(tree, qual="", hot=False)
+        self._scan_wallclock(tree)
+        self._scan_classes(tree)
+        self._scan_hygiene(tree)
+        self._finish_registry()
+        self._finish_suppressions()
+        return self.findings
+
+    # -- hot-loop purity ------------------------------------------------
+    def _scan_functions(self, node: ast.AST, qual: str, hot: bool) -> None:
+        """Walk the def tree, tracking qualnames and hotness lexically."""
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{qual}{child.name}"
+                self.seen_qualnames.add(q)
+                child_hot = (hot or q in self.hot_registry
+                             or self._is_marked_hot(child))
+                if child_hot and not hot:
+                    self._purity_scan(child)
+                self._scan_functions(child, f"{q}.<locals>.", child_hot)
+            elif isinstance(child, ast.ClassDef):
+                self.seen_qualnames.add(f"{qual}{child.name}")
+                self._scan_functions(child, f"{qual}{child.name}.", hot)
+            else:
+                self._scan_functions(child, qual, hot)
+
+    def _purity_scan(self, fn: ast.AST) -> None:
+        """Flag host syncs and forbidden device ops anywhere lexically
+        inside a hot function (nested closures included)."""
+        self._walk_stmts(fn, self._purity_node)
+
+    def _walk_stmts(self, node: ast.AST, visit) -> None:
+        for child in ast.iter_child_nodes(node):
+            is_stmt = isinstance(child, ast.stmt)
+            if is_stmt:
+                self._stmt_spans.append(
+                    (child.lineno, child.end_lineno or child.lineno))
+            visit(child)
+            self._walk_stmts(child, visit)
+            if is_stmt:
+                self._stmt_spans.pop()
+
+    def _purity_node(self, node: ast.AST) -> None:
+        if not isinstance(node, ast.Call):
+            return
+        chain = _attr_chain(node.func)
+        dotted = ".".join(chain)
+        # host syncs ----------------------------------------------------
+        if chain and chain[0] in _NUMPY_ROOTS:
+            self.emit(SYNC_IN_HOT, node,
+                      f"host call '{dotted}' inside a hot-path function "
+                      f"(move it to a finalize boundary or annotate "
+                      f"'# navilint: sync-ok <reason>')")
+            return
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS):
+            self.emit(SYNC_IN_HOT, node,
+                      f"'.{node.func.attr}()' forces a host sync inside "
+                      f"a hot-path function")
+            return
+        if dotted in ("jax.device_get", "device_get"):
+            self.emit(SYNC_IN_HOT, node,
+                      "'jax.device_get' inside a hot-path function")
+            return
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool") and node.args
+                and _contains_call(node.args[0])):
+            self.emit(SYNC_IN_HOT, node,
+                      f"'{node.func.id}(...)' on a computed value "
+                      f"concretizes (= host-syncs) inside a hot-path "
+                      f"function")
+            return
+        # forbidden device ops ------------------------------------------
+        if len(chain) >= 2 and chain[-2] == "lax" and (
+                chain[-1].startswith("scatter") or chain[-1] == "top_k"):
+            self.emit(FORBIDDEN_OP, node,
+                      f"'{dotted}' in a hot-path function: XLA CPU "
+                      f"serializes it (PR 3 purged these from the engine "
+                      f"loop); use the mask/one-hot/searchsorted forms "
+                      f"or annotate '# navilint: op-ok <reason>'")
+            return
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _AT_SETTERS
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"):
+            self.emit(FORBIDDEN_OP, node,
+                      f"'.at[...].{node.func.attr}(...)' scatter in a "
+                      f"hot-path function: XLA CPU serializes per-lane "
+                      f"scatters; use mask arithmetic")
+
+    # -- wall clock (file-wide) ----------------------------------------
+    def _scan_wallclock(self, tree: ast.AST) -> None:
+        def visit(node: ast.AST) -> None:
+            if not isinstance(node, ast.Call):
+                return
+            if _attr_chain(node.func) == ["time", "time"]:
+                self.emit(WALLCLOCK, node,
+                          "time.time() is a wall clock (steps under NTP); "
+                          "deadline/duration math must use time.monotonic "
+                          "or time.perf_counter")
+        self._walk_stmts(tree, visit)
+
+    # -- lock discipline ------------------------------------------------
+    def _scan_classes(self, tree: ast.AST) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                self._scan_class(node)
+
+    def _class_guard_map(self, cls: ast.ClassDef
+                         ) -> tuple[dict[str, str], set[str]]:
+        """(guarded field -> lock name, all self-assigned names)."""
+        guarded: dict[str, str] = {}
+        bound: set[str] = set()
+        for node in ast.walk(cls):
+            targets: list[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                targets = [node.target]
+            for t in targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    bound.add(t.attr)
+                    lock = self.comments.guarded.get(node.lineno)
+                    if lock:
+                        guarded.setdefault(t.attr, lock)
+        return guarded, bound
+
+    def _scan_class(self, cls: ast.ClassDef) -> None:
+        guarded, bound = self._class_guard_map(cls)
+        if not guarded:
+            return
+        for field, lock in sorted(guarded.items()):
+            if lock not in bound:
+                self.findings.append(Finding(
+                    UNKNOWN_LOCK, self.path, cls.lineno,
+                    f"field '{field}' is guarded-by '{lock}' but "
+                    f"{cls.name} never binds 'self.{lock}'"))
+        for node in cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_method(node, guarded)
+
+    def _scan_method(self, fn: ast.AST, guarded: dict[str, str]) -> None:
+        if fn.name in ("__init__", "__del__"):
+            return                  # construction happens-before sharing
+        held0 = {self._lock_held_name(fn)} - {None}
+
+        def walk(node: ast.AST, held: set) -> None:
+            for child in ast.iter_child_nodes(node):
+                is_stmt = isinstance(child, ast.stmt)
+                if is_stmt:
+                    self._stmt_spans.append(
+                        (child.lineno, child.end_lineno or child.lineno))
+                child_held = held
+                if isinstance(child, ast.With):
+                    acquired = set()
+                    for item in child.items:
+                        ce = item.context_expr
+                        if (isinstance(ce, ast.Attribute)
+                                and isinstance(ce.value, ast.Name)
+                                and ce.value.id == "self"):
+                            acquired.add(ce.attr)
+                    child_held = held | acquired
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    extra = {self._lock_held_name(child)} - {None}
+                    child_held = held | extra
+                if (isinstance(child, ast.Attribute)
+                        and isinstance(child.value, ast.Name)
+                        and child.value.id == "self"
+                        and child.attr in guarded
+                        and guarded[child.attr] not in held):
+                    verb = ("write to" if isinstance(
+                        child.ctx, (ast.Store, ast.Del)) else "read of")
+                    self.emit(UNLOCKED_ACCESS, child,
+                              f"{verb} 'self.{child.attr}' outside 'with "
+                              f"self.{guarded[child.attr]}' (field is "
+                              f"'# guarded-by: {guarded[child.attr]}'; "
+                              f"hold the lock, or annotate the method "
+                              f"'# navilint: lock-held "
+                              f"{guarded[child.attr]}')")
+                walk(child, child_held)
+                if is_stmt:
+                    self._stmt_spans.pop()
+
+        walk(fn, held0)
+
+    # -- hygiene (pyflakes-grade, for trees without ruff) ---------------
+    def _scan_hygiene(self, tree: ast.Module) -> None:
+        if pathlib.Path(self.path).name != "__init__.py":
+            self._scan_unused_imports(tree)
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.ExceptHandler) and node.type is None
+                    and node.lineno not in self.comments.noqa_lines):
+                self.findings.append(Finding(
+                    BARE_EXCEPT, self.path, node.lineno,
+                    "bare 'except:' catches SystemExit/KeyboardInterrupt; "
+                    "name the exception (or 'except Exception:')"))
+
+    def _scan_unused_imports(self, tree: ast.Module) -> None:
+        imported: dict[str, tuple[int, str]] = {}
+        for node in tree.body:
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    imported[name] = (node.lineno, a.name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    name = a.asname or a.name
+                    imported[name] = (node.lineno,
+                                      f"{node.module}.{a.name}")
+        if not imported:
+            return
+        used: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Name) and not isinstance(
+                    node.ctx, ast.Store):
+                used.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                chain = _attr_chain(node)
+                if chain:
+                    used.add(chain[0])
+        # names exported via __all__ are used
+        for node in tree.body:
+            if (isinstance(node, ast.Assign) and node.targets
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "__all__"
+                    and isinstance(node.value, (ast.List, ast.Tuple))):
+                for elt in node.value.elts:
+                    if isinstance(elt, ast.Constant):
+                        used.add(str(elt.value))
+        for name, (line, full) in sorted(imported.items(),
+                                         key=lambda kv: kv[1][0]):
+            if name in used or name == "_":
+                continue
+            if line in self.comments.noqa_lines:
+                continue
+            self.findings.append(Finding(
+                UNUSED_IMPORT, self.path, line,
+                f"'{full}' imported but unused (remove, or mark the "
+                f"re-export with '# noqa: F401')"))
+
+    # -- closers --------------------------------------------------------
+    def _finish_registry(self) -> None:
+        for qual in sorted(self.hot_registry - self.seen_qualnames):
+            self.findings.append(Finding(
+                STALE_REGISTRY, self.path, 1,
+                f"hot-path registry names '{qual}' but {self.rel_path} "
+                f"defines no such function -- update "
+                f"repro/analysis/registry.py alongside the refactor"))
+
+    def _finish_suppressions(self) -> None:
+        for sup in self.comments.suppressions.values():
+            if not sup.used:
+                self.findings.append(Finding(
+                    STALE_SUPPRESSION, self.path, sup.line,
+                    f"stale suppression 'navilint: {sup.kind}': nothing "
+                    f"here triggers that rule any more -- delete the "
+                    f"comment so suppressions stay trustworthy"))
+
+
+# -- public API -------------------------------------------------------------
+
+def analyze_source(source: str, path: str = "<string>",
+                   rel_path: Optional[str] = None) -> list[Finding]:
+    """Analyze one source string (the test-fixture entry point)."""
+    rel = rel_path if rel_path is not None else registry.normalize_path(
+        path)
+    return _FileAnalyzer(path, source, rel).run()
+
+
+def analyze_file(path: pathlib.Path) -> list[Finding]:
+    source = path.read_text(encoding="utf-8")
+    return analyze_source(source, str(path))
+
+
+def iter_python_files(paths: Iterable[str]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for p in paths:
+        root = pathlib.Path(p)
+        if root.is_dir():
+            out.extend(sorted(root.rglob("*.py")))
+        elif root.suffix == ".py":
+            out.append(root)
+    return [p for p in out if "__pycache__" not in p.parts]
+
+
+def analyze_paths(paths: Iterable[str]) -> list[Finding]:
+    """Run navilint over files/directories; findings sorted by location."""
+    findings: list[Finding] = []
+    seen_registry_files = set()
+    for f in iter_python_files(paths):
+        findings.extend(analyze_file(f))
+        seen_registry_files.add(registry.normalize_path(str(f)))
+    # registry entries pointing at files the sweep never saw are stale
+    # only when the sweep actually covered the repro package
+    if any(p.startswith("repro/") for p in seen_registry_files):
+        for rel in sorted(set(registry.HOT_PATHS) - seen_registry_files):
+            if any(p.endswith(rel.split("/")[-1])
+                   for p in seen_registry_files):
+                continue
+            findings.append(Finding(
+                STALE_REGISTRY, rel, 1,
+                f"hot-path registry lists '{rel}' but the sweep found no "
+                f"such file"))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

@@ -1,0 +1,89 @@
+"""Hot-path registry: which functions navilint holds to device-loop purity.
+
+The purity rules (no host syncs, no CPU-hostile device ops) are only
+meaningful on code that runs inside -- or directly drives -- the engine's
+step loop. Enumerating those functions here, by module path and qualified
+name, makes the contract explicit and reviewable: adding a new hot path
+is a one-line diff, and a registry entry whose function disappears in a
+refactor is itself a finding (NX303), so the registry can never silently
+rot.
+
+Two ways a function becomes hot:
+
+* listed in :data:`HOT_PATHS` under its file's repo-relative path
+  (``repro/...``) and its dotted qualname (nested functions use the
+  ``<locals>`` spelling, matching ``__qualname__``);
+* marked inline with ``# navilint: hot`` on its ``def`` line (used by
+  test fixtures and one-off scripts outside the repo layout).
+
+Everything lexically inside a hot function -- including nested closures
+like the engine's loop ``body`` or a ``shard_map`` ``local`` -- inherits
+hotness.
+"""
+
+from __future__ import annotations
+
+#: repo-relative file path -> qualnames held to hot-loop purity
+HOT_PATHS: dict[str, tuple[str, ...]] = {
+    # the batched-frontier engine: the while_loop body and every entry
+    # point of the resumable stepping API (PR 3's scatter/top_k purge
+    # lives here -- the two surviving fused top_k merges are annotated)
+    "repro/core/search_batch.py": (
+        "greedy_upper_batch",
+        "_init_state",
+        "_loop_fns",
+        "_take_first_batch",
+        "_frontier_min",
+        "_r_max",
+        "_resolve_branching",
+        "_extract_results",
+        "beam_search_lower_batch",
+        "search_lanes",
+        "step_lanes",
+        "refill_lanes",
+        "finalize_lanes",
+        "evict_lanes",
+        "parked_state",
+    ),
+    # the shard_map bodies: everything that runs per shard inside the
+    # sharded programs, plus the one-op merge they feed
+    "repro/core/distributed.py": (
+        "merge_shard_topk",
+        "_masked_stats_sum",
+        "ShardedNavix._guard",
+        "ShardedNavix._build_search.<locals>.local",
+        "ShardedNavix._build_refill.<locals>.local",
+        "ShardedNavix._build_steps.<locals>.run.<locals>.local",
+        "ShardedNavix._build_finalize.<locals>.local",
+    ),
+    # the shared device-lane core: step advances the device loop, and
+    # finalize is THE declared host boundary (results cross exactly once)
+    "repro/serving/lanes.py": (
+        "LaneBatch.step",
+        "LaneBatch.finalize",
+    ),
+    # the serving drivers' device loops
+    "repro/serving/service.py": (
+        "SearchService._tick",
+    ),
+    "repro/serving/engine.py": (
+        "SearchEngine._serve_fused",
+    ),
+}
+
+
+def hot_names_for(rel_path: str) -> tuple[str, ...]:
+    """Registered hot qualnames for a repo-relative file path."""
+    return HOT_PATHS.get(rel_path, ())
+
+
+def normalize_path(path: str) -> str:
+    """Map any path to its repo-relative ``repro/...`` registry key.
+
+    Files outside the ``repro`` package (tests, fixtures, scripts) have
+    no registry entries; they can still opt in via ``# navilint: hot``.
+    """
+    parts = path.replace("\\", "/").split("/")
+    if "repro" in parts:
+        return "/".join(parts[parts.index("repro"):])
+    return parts[-1]

@@ -1,0 +1,274 @@
+"""Runtime verification: the invariants static analysis cannot see.
+
+Two guards, both context managers, both designed to wrap an existing
+test or benchmark without changing what it measures:
+
+:class:`CompileCounter` hooks ``jax.monitoring``'s event-duration
+listener stream and counts backend compiles
+(``/jax/core/compile/backend_compile_duration`` fires once per XLA
+compilation). The serving open-loop smoke and the ``db.execute``
+batch-bucket reuse path are supposed to compile a fixed program set up
+front and *zero* programs afterwards -- a recompile in the steady state
+is the silent 100x regression NaviX's robustness argument forbids, and
+this counter turns it into a test failure instead of a mystery latency
+spike.
+
+:class:`LockOrderMonitor` (via :func:`instrument_locks`) swaps
+``threading.Lock`` for a recording wrapper, keeps the per-thread stack
+of held locks, and adds an edge ``A -> B`` whenever B is acquired while
+A is held. Locks are keyed by *creation site* (file:line), lockdep
+style, so every instance of ``SubmissionQueue._lock`` is one node. A
+cycle in the graph is a deadlock that merely hasn't fired yet; the
+PR-6 herd/shutdown/straggler tests run under this monitor.
+
+jax is imported lazily so navilint's AST side stays importable (and
+fast) in environments without an accelerator stack.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+# jax.monitoring has no deregistration API, so register ONE module-level
+# listener the first time a counter starts and fan out to whichever
+# counters are active.
+_active_counters: set["CompileCounter"] = set()
+_listener_installed = False
+_listener_lock = threading.Lock()
+
+
+def _ensure_listener() -> None:
+    global _listener_installed
+    with _listener_lock:
+        if _listener_installed:
+            return
+        import jax
+
+        def _on_event(event: str, duration: float, **kwargs) -> None:
+            if _COMPILE_EVENT not in event:
+                return
+            for counter in tuple(_active_counters):
+                counter._record(event)
+
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _listener_installed = True
+
+
+class CompileCounter:
+    """Counts XLA backend compiles while active.
+
+    >>> with CompileCounter() as cc:
+    ...     warmup()
+    ...     cc.mark("steady")
+    ...     serve_traffic()
+    >>> cc.counts  # {"warmup": 3, "steady": 0}
+
+    ``mark(phase)`` closes the current phase and opens a new one; the
+    per-phase counts are the artifact the zero-recompile gate checks
+    (steady phases must stay at exactly 0).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._phase = "warmup"
+        self.counts: dict[str, int] = {"warmup": 0}
+        self.total = 0
+
+    def _record(self, event: str) -> None:
+        with self._lock:
+            self.counts[self._phase] = self.counts.get(self._phase, 0) + 1
+            self.total += 1
+
+    def mark(self, phase: str) -> None:
+        """Begin a new counting phase (e.g. the post-warmup steady state)."""
+        with self._lock:
+            self._phase = phase
+            self.counts.setdefault(phase, 0)
+
+    def __enter__(self) -> "CompileCounter":
+        _ensure_listener()
+        _active_counters.add(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _active_counters.discard(self)
+
+
+# -- lock-order monitoring ---------------------------------------------------
+
+
+class _InstrumentedLock:
+    """Drop-in ``threading.Lock`` that reports acquisitions to a monitor.
+
+    Also duck-types the private hooks ``threading.Condition`` calls
+    (``_release_save``/``_acquire_restore``/``_is_owned``) by falling
+    back to plain release/acquire, so ``Condition(instrumented_lock)``
+    and the default ``Condition()`` both keep working under
+    instrumentation.
+    """
+
+    def __init__(self, monitor: "LockOrderMonitor", site: str):
+        self._inner = monitor._real_lock()
+        self._monitor = monitor
+        self._site = site
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._monitor._acquired(self._site)
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._monitor._released(self._site)
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # Condition-compatibility fallbacks
+    def _release_save(self):
+        self.release()
+        return None
+
+    def _acquire_restore(self, state) -> None:
+        self.acquire()
+
+    def _is_owned(self) -> bool:
+        # Lock (unlike RLock) has no owner notion; mirror Condition's
+        # own fallback: if we can't acquire without blocking, somebody
+        # (assumed: us) holds it.
+        if self._inner.acquire(False):
+            self._inner.release()
+            return False
+        return True
+
+
+class LockOrderMonitor:
+    """Builds the lock-acquisition graph and detects ordering cycles.
+
+    Nodes are lock *classes* (creation file:line), edges mean "held A
+    while acquiring B". :meth:`cycles` runs a DFS over the edge set;
+    any cycle is a latent deadlock even if this run never interleaved
+    the two threads badly.
+    """
+
+    def __init__(self) -> None:
+        self._real_lock = threading.Lock  # captured before patching
+        self._graph_lock = self._real_lock()
+        self._held = threading.local()
+        #: directed edges with one sample stack for the report
+        self.edges: dict[tuple[str, str], int] = {}
+        self.sites: set[str] = set()
+
+    # -- wrapper callbacks ---------------------------------------------
+    def _stack(self) -> list[str]:
+        if not hasattr(self._held, "stack"):
+            self._held.stack = []
+        return self._held.stack
+
+    def _acquired(self, site: str) -> None:
+        stack = self._stack()
+        with self._graph_lock:
+            self.sites.add(site)
+            for held in stack:
+                if held != site:
+                    edge = (held, site)
+                    self.edges[edge] = self.edges.get(edge, 0) + 1
+        stack.append(site)
+
+    def _released(self, site: str) -> None:
+        stack = self._stack()
+        # release order need not be LIFO; drop the innermost match
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == site:
+                del stack[i]
+                break
+
+    # -- analysis -------------------------------------------------------
+    def cycles(self) -> list[list[str]]:
+        """All elementary cycles reachable in the acquisition graph."""
+        with self._graph_lock:
+            adj: dict[str, list[str]] = {}
+            for (a, b) in self.edges:
+                adj.setdefault(a, []).append(b)
+        out: list[list[str]] = []
+        seen_cycles: set[tuple[str, ...]] = set()
+
+        def dfs(node: str, path: list[str], on_path: set[str]) -> None:
+            for nxt in adj.get(node, ()):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):] + [nxt]
+                    # canonicalize rotation so each cycle reports once
+                    body = cyc[:-1]
+                    k = body.index(min(body))
+                    key = tuple(body[k:] + body[:k])
+                    if key not in seen_cycles:
+                        seen_cycles.add(key)
+                        out.append(cyc)
+                elif nxt not in visited:
+                    visited.add(nxt)
+                    dfs(nxt, path + [nxt], on_path | {nxt})
+
+        visited: set[str] = set()
+        for start in sorted(adj):
+            if start not in visited:
+                visited.add(start)
+                dfs(start, [start], {start})
+        return out
+
+    def report(self) -> dict:
+        """JSON-able summary for bench artifacts."""
+        return {
+            "sites": len(self.sites),
+            "edges": len(self.edges),
+            "cycles": [" -> ".join(c) for c in self.cycles()],
+        }
+
+
+def _creation_site(depth: int = 2) -> str:
+    import sys
+
+    frame = sys._getframe(depth)
+    # walk out of this module so the site names the caller's code
+    while frame is not None and frame.f_globals.get(
+            "__name__") == __name__:
+        frame = frame.f_back
+    if frame is None:  # pragma: no cover
+        return "<unknown>"
+    return f"{frame.f_code.co_filename.rsplit('/', 1)[-1]}:{frame.f_lineno}"
+
+
+@contextlib.contextmanager
+def instrument_locks(monitor: Optional[LockOrderMonitor] = None
+                     ) -> Iterator[LockOrderMonitor]:
+    """Patch ``threading.Lock`` so locks created inside the block feed
+    *monitor*'s acquisition graph. Locks created before (or after) the
+    block are plain locks -- instrument the code under test by creating
+    its objects inside the ``with``.
+
+    ``threading.Condition()``'s default RLock is left unpatched on
+    purpose: it keeps executor/queue internals out of the graph unless
+    the caller passes an instrumented lock explicitly.
+    """
+    mon = monitor if monitor is not None else LockOrderMonitor()
+
+    def make_lock() -> _InstrumentedLock:
+        return _InstrumentedLock(mon, _creation_site())
+
+    orig = threading.Lock
+    threading.Lock = make_lock  # type: ignore[misc,assignment]
+    try:
+        yield mon
+    finally:
+        threading.Lock = orig  # type: ignore[misc]

@@ -34,6 +34,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import HnswGraph
 from repro.core.search import SearchParams, SearchResult
@@ -161,28 +162,34 @@ class ProgramCache:
         ``[B, W]`` stack (the mixed-plan serving path); per-lane masks
         (and a per-lane ``sigma_g`` vector) are padded alongside the
         query rows and compile under a distinct ``per_lane_sel`` key arm.
+
+        Padding and result slicing run in host numpy: eager jnp ops here
+        would each compile a throwaway XLA program keyed on the UNpadded
+        batch size, re-introducing per-size compiles the bucket exists
+        to avoid (caught by the CompileCounter runtime guard).
         """
-        sigma_g = jnp.asarray(sigma_g, dtype=jnp.float32)
+        sigma_g = np.asarray(sigma_g, dtype=np.float32)
         per_lane = sel_bits.ndim == 2
         b = Q.shape[0]
         bb = _bucket(b)
         if bb != b:
             pad = (bb - b,)
-            Q = jnp.concatenate(
-                [Q, jnp.broadcast_to(Q[:1], pad + Q.shape[1:])])
+            Qh = np.asarray(Q)
+            Q = np.concatenate(
+                [Qh, np.broadcast_to(Qh[:1], pad + Qh.shape[1:])])
             if per_lane:
-                sel_bits = jnp.concatenate(
-                    [sel_bits,
-                     jnp.broadcast_to(sel_bits[:1], pad + sel_bits.shape[1:])])
+                sh = np.asarray(sel_bits)
+                sel_bits = np.concatenate(
+                    [sh, np.broadcast_to(sh[:1], pad + sh.shape[1:])])
             if sigma_g.ndim == 1:
-                sigma_g = jnp.concatenate(
-                    [sigma_g, jnp.broadcast_to(sigma_g[:1], pad)])
+                sigma_g = np.concatenate(
+                    [sigma_g, np.broadcast_to(sigma_g[:1], pad)])
         key = self._key(graph, params, bb, engine=engine,
                         per_lane_sel=per_lane)
         prog = self._get(key, fn, graph, Q, sel_bits, params, sigma_g)
         res = prog(graph, Q, sel_bits, sigma_g=sigma_g)
         if bb != b:
-            res = jax.tree_util.tree_map(lambda a: a[:b], res)
+            res = jax.tree_util.tree_map(lambda a: np.asarray(a)[:b], res)
         return res
 
     def search_sharded(self, sn, Q: jax.Array, sel_bits: jax.Array,
@@ -203,15 +210,18 @@ class ProgramCache:
         b = Q.shape[0]
         bb = _bucket(b)
         if bb != b:
+            # host-side padding for the same reason as _run_batched:
+            # eager jnp pads compile per unpadded batch size
             pad = bb - b
-            Q = jnp.concatenate(
-                [Q, jnp.broadcast_to(Q[:1], (pad,) + Q.shape[1:])])
+            Qh = np.asarray(Q)
+            Q = np.concatenate(
+                [Qh, np.broadcast_to(Qh[:1], (pad,) + Qh.shape[1:])])
             if per_lane:
-                sel_bits = jnp.concatenate(
-                    [sel_bits,
-                     jnp.broadcast_to(sel_bits[:, :1],
-                                      (sel_bits.shape[0], pad,
-                                       sel_bits.shape[2]))], axis=1)
+                sh = np.asarray(sel_bits)
+                sel_bits = np.concatenate(
+                    [sh, np.broadcast_to(sh[:, :1],
+                                         (sh.shape[0], pad, sh.shape[2]))],
+                    axis=1)
         key = ProgramKey(
             n=sn.n_total, dim=sn.dim, k=params.k, efs=params.efs,
             heuristic=params.heuristic, metric=params.metric,
@@ -237,5 +247,5 @@ class ProgramCache:
             self.stats.hits += 1
         res = prog(sn.graphs, Q, sel_bits, alive)
         if bb != b:
-            res = jax.tree_util.tree_map(lambda a: a[:b], res)
+            res = jax.tree_util.tree_map(lambda a: np.asarray(a)[:b], res)
         return res

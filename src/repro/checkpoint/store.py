@@ -16,7 +16,6 @@ lists per-leaf SHA1 of the host buffer; a truncated/partial checkpoint
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import pathlib
@@ -48,7 +47,9 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree: Any,
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
-    manifest = {"step": step, "created": time.time(), "extra": extra or {},
+    manifest = {"step": step,
+                "created": time.time(),  # navilint: wallclock-ok manifest timestamp, not duration math
+                "extra": extra or {},
                 "leaves": {}}
     for path, leaf in leaves:
         key = _leaf_key(path)

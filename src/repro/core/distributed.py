@@ -53,7 +53,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import bitset
 from repro.core import search_batch as sb
-from repro.core.build import BuildParams, build
+from repro.core.build import build
 from repro.core.distances import normalize
 from repro.core.graph import HnswGraph
 from repro.core.heuristics import Heuristic

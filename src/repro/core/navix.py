@@ -19,7 +19,7 @@ plan shapes never retrace even through this compatibility API.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

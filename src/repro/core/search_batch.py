@@ -353,6 +353,7 @@ def _loop_fns(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
             [exp, jnp.zeros_like(cand_ids, dtype=bool)], axis=1)
         all_sel = jnp.concatenate([st.sel, cand_ids >= 0], axis=1)
 
+        # navilint: op-ok the single fused beam-merge top_k PR 3 kept
         neg, order2 = lax.top_k(-all_d, efs)
         keep = live[:, None]
         return _BatchState(
@@ -379,6 +380,7 @@ def _extract_results(st: _BatchState, efs: int):
     per-lane stats with upper_dc left zero for the caller to fill)."""
     bsz = st.it.shape[0]
     res_d = jnp.where(st.sel & (st.ids >= 0), st.d, jnp.inf)
+    # navilint: op-ok one top_k per search at extraction, not per step
     neg, order = lax.top_k(-res_d, efs)
     out_d = -neg
     out_id = jnp.where(jnp.isfinite(out_d),

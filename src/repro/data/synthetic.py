@@ -20,11 +20,9 @@ of these datasets synthetically at laptop scale:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
-
 import numpy as np
 
-from repro.query.operators import And, Filter, HopJoin, NodeScan, Plan
+from repro.query.operators import Filter, HopJoin, NodeScan, Plan
 from repro.storage.columnar import GraphStore
 
 

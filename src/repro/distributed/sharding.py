@@ -24,7 +24,6 @@ vocab sizes) rely on GSPMD's padded uneven sharding.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -10,7 +10,6 @@ force interpret-mode kernels on CPU (slow; used by the kernel benchmarks).
 
 from __future__ import annotations
 
-import functools
 import os
 
 import jax

@@ -8,12 +8,8 @@ distribution config is coherent; the compiled artifact feeds the roofline.
 
 from __future__ import annotations
 
-import dataclasses
-import json
-import pathlib
 import time
 import traceback
-from typing import Any
 
 import jax
 import numpy as np

@@ -22,7 +22,6 @@ Shapes in post-SPMD HLO are per-partition, so every figure is per-chip.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 

@@ -18,11 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
-import numpy as np
-
-from repro.common.hardware import TARGET, ChipSpec
+from repro.common.hardware import TARGET
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

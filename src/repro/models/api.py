@@ -16,9 +16,8 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.config.base import (ArchDef, GNNConfig, LMConfig, RecsysConfig,
+from repro.config.base import (GNNConfig, LMConfig, RecsysConfig,
                                ShapeSpec)
 from repro.models import gnn, recsys, transformer
 from repro.training.optimizer import make_optimizer

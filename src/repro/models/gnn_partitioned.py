@@ -22,18 +22,14 @@ real runs lives in repro/data/graph_partition.py.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.config.base import GNNConfig
-from repro.models.gnn import _mlp, init_gnn
+from repro.models.gnn import _mlp
 
 
 def partitioned_input_specs(cfg: GNNConfig, shape, n_parts: int,

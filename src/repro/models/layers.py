@@ -8,7 +8,6 @@ stays compact even for 61-layer trillion-parameter configs.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

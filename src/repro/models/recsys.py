@@ -22,7 +22,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.config.base import RecsysConfig

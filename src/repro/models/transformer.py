@@ -20,7 +20,6 @@ Three entry points per the shape kinds:
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

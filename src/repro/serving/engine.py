@@ -46,7 +46,6 @@ import numpy as np
 from repro.api.db import NavixDB
 from repro.api.plan_compile import _bucket
 from repro.core.distributed import ShardedNavix
-from repro.core.navix import NavixIndex
 from repro.query.operators import (KnnSearch, Plan, is_selection,
                                    output_table, split_pipeline)
 from repro.serving.lanes import LaneBatch, _FlatLanes, _ShardLanes  # noqa: F401
@@ -333,6 +332,7 @@ class SearchEngine:
 
         # prep every query in ONE vectorized device call (a per-request
         # _prep_query inside the refill loop costs a dispatch each)
+        # navilint: sync-ok admission boundary -- queries are host data; prep is one vectorized call before the device loop starts
         prepped = np.asarray(idx._prep_query(
             np.stack([r.query for r, _ in items])), np.float32)
 
@@ -403,6 +403,8 @@ class SearchEngine:
             n_devsteps += 1
             if self.step_hook is not None:
                 self.step_hook({"step": n_devsteps,
+                                # navilint: sync-ok live_np is host-side
+                                # numpy; step() already crossed the boundary
                                 "live": int(live_np.sum()),
                                 "pending": len(pending),
                                 "done": len(done)})

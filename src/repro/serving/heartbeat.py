@@ -42,8 +42,8 @@ class HeartbeatMonitor:
         now = clock()
         # every shard starts freshly beaten: a service that finalizes
         # before the first beat round should not mark the world dead
-        self._last = np.full(n_shards, now, np.float64)
-        self._suppressed = np.zeros(n_shards, bool)
+        self._last = np.full(n_shards, now, np.float64)  # guarded-by: _lock
+        self._suppressed = np.zeros(n_shards, bool)      # guarded-by: _lock
 
     def _check(self, shard: int) -> None:
         if not (0 <= shard < self.n_shards):
@@ -86,7 +86,8 @@ class HeartbeatMonitor:
         with self._lock:
             t = now if now is not None else self.clock()
             age = t - self._last
+            suppressed = self._suppressed.tolist()
         return {"age_s": age.tolist(),
                 "alive": (age <= self.stale_after).tolist(),
-                "suppressed": self._suppressed.tolist(),
+                "suppressed": suppressed,
                 "stale_after": self.stale_after}

@@ -232,6 +232,7 @@ class LaneBatch:
         (0 = run to whole-batch convergence); returns live bool[B]."""
         self.st, live = self.backend.steps(self.Qj, self.selj, self.st,
                                            n_steps, self.sigj)
+        # navilint: sync-ok chunk boundary -- the host scheduler branches on liveness between device chunks (one sync per chunk by design)
         return np.asarray(live)
 
     def finalize(self, alive) -> tuple[np.ndarray, np.ndarray]:
@@ -239,6 +240,7 @@ class LaneBatch:
         backends merge across shards; a flat backend ignores it).
         Returns host ``(ids[B, efs], dists[B, efs])``."""
         fin = self.backend.finalize(self.st, self.udc, alive)
+        # navilint: sync-ok THE declared finalize boundary -- results cross to host exactly once per finalize
         return np.asarray(fin.ids), np.asarray(fin.dists)
 
     def evict(self, lane_ids) -> None:

@@ -88,14 +88,14 @@ class SubmissionQueue:
             raise ValueError(f"need 1 <= low ({self.low}) <= high "
                              f"({self.high}) <= maxsize ({maxsize})")
         self.n_bins = n_bins
-        self._items: list[QueueItem] = []
+        self._items: list[QueueItem] = []               # guarded-by: _lock
         self._lock = threading.Lock()
         self._space = threading.Condition(self._lock)   # putters wait here
         self._data = threading.Condition(self._lock)    # the loop waits here
-        self._gated = False
-        self._closed = False
-        self._seq = 0
-        self.n_rejected = 0
+        self._gated = False                             # guarded-by: _lock
+        self._closed = False                            # guarded-by: _lock
+        self._seq = 0                                   # guarded-by: _lock
+        self.n_rejected = 0                             # guarded-by: _lock
 
     # -- submitter side -----------------------------------------------------
     def put(self, sigma: float, deadline: Optional[float], meta: Any,
@@ -211,7 +211,8 @@ class SubmissionQueue:
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        with self._lock:
+            return self._closed
 
     def __len__(self) -> int:
         with self._lock:
@@ -222,8 +223,7 @@ class SubmissionQueue:
             return {"depth": len(self._items), "gated": self._gated,
                     "rejected": self.n_rejected, "closed": self._closed}
 
-    def _maybe_ungate(self) -> None:
-        # call with the lock held
+    def _maybe_ungate(self) -> None:  # navilint: lock-held _lock
         if self._gated and len(self._items) <= self.low:
             self._gated = False
             self._space.notify_all()

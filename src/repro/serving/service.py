@@ -125,15 +125,15 @@ class SearchService:
         if sel_cache_size < 1:
             raise ValueError("sel_cache_size must be >= 1")
         self.sel_cache_size = sel_cache_size
-        self._sel_cache: "OrderedDict[Any, tuple]" = OrderedDict()
+        self._sel_cache: OrderedDict[Any, tuple] = OrderedDict()  # guarded-by: _submit_lock
         self._submit_lock = threading.Lock()
         self._lat_lock = threading.Lock()
-        self._next_rid = 0
-        self.n_submitted = 0
-        self.n_done = 0
-        self.n_timeout = 0
-        self.n_partial = 0
-        self._lat = deque(maxlen=window)         # total ms, rolling
+        self._next_rid = 0                       # guarded-by: _submit_lock
+        self.n_submitted = 0                     # guarded-by: _lat_lock
+        self.n_done = 0                          # guarded-by: _lat_lock
+        self.n_timeout = 0                       # guarded-by: _lat_lock
+        self.n_partial = 0                       # guarded-by: _lat_lock
+        self._lat = deque(maxlen=window)         # guarded-by: _lat_lock  (total ms, rolling)
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._draining = False
@@ -204,7 +204,8 @@ class SearchService:
                         t_enqueue=now, qrow=qrow, sel_row=row)
         self.queue.put(sigma, pend.deadline, pend,
                        timeout=block_timeout, now=now)
-        self.n_submitted += 1
+        with self._lat_lock:
+            self.n_submitted += 1
         return pend.fut
 
     async def asubmit(self, query, plan=None, k: Optional[int] = None,
@@ -226,16 +227,16 @@ class SearchService:
     def _resolve(self, pend: _Pending, resp: Response) -> None:
         if not pend.fut.done():
             pend.fut.set_result(resp)
-            self.n_done += 1
-            # gauges() iterates this deque from other threads; an
-            # unguarded append can tear that iteration mid-poll
+            # gauges() reads the counters and iterates this deque from
+            # other threads; an unguarded update can tear that poll
             with self._lat_lock:
+                self.n_done += 1
                 self._lat.append(resp.queue_ms + resp.exec_ms
                                  + resp.prefilter_ms)
-            if resp.status == "timeout":
-                self.n_timeout += 1
-            elif resp.status == "partial":
-                self.n_partial += 1
+                if resp.status == "timeout":
+                    self.n_timeout += 1
+                elif resp.status == "partial":
+                    self.n_partial += 1
 
     def _emit_timeout(self, pend: _Pending, now: float) -> None:
         self._resolve(pend, Response(
@@ -292,6 +293,7 @@ class SearchService:
         n_free = self.lanes.free_count()
         if n_free:
             occ = self.lanes.occupied()
+            # navilint: sync-ok sigh is host-side scheduler state (sigma history), never a traced value
             prefer = (float(np.median(self.lanes.sigh[occ]))
                       if occ else None)
             batch = self.queue.pop_batch(n_free, prefer)
@@ -405,10 +407,10 @@ class SearchService:
         lanes, completion counters, and rolling p50/p99 latency."""
         g = {"queue": self.queue.gauges(),
              "in_flight": self.lanes.occupied_count(),
-             "lanes": self.lanes.bsz,
-             "submitted": self.n_submitted, "done": self.n_done,
-             "timeouts": self.n_timeout, "partials": self.n_partial}
+             "lanes": self.lanes.bsz}
         with self._lat_lock:
+            g.update(submitted=self.n_submitted, done=self.n_done,
+                     timeouts=self.n_timeout, partials=self.n_partial)
             lat = list(self._lat)
         if lat:
             arr = np.asarray(lat)

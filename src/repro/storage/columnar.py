@@ -14,7 +14,7 @@ Host-side state is numpy (this is the "disk" side); device payloads
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 

@@ -18,7 +18,6 @@ real slice the wire format is what crosses the pod interconnect
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -18,10 +18,9 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Iterator, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import store
 from repro.models.api import model_api

@@ -7,7 +7,6 @@ Shazeer & Stern 2018) for the trillion-parameter MoE dry-runs where Adam's
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -1,0 +1,409 @@
+"""navilint + runtime-guard coverage.
+
+Fixture snippets live in plain strings: navilint's comment scanner runs
+on tokenize output, so annotation/suppression comments inside THESE
+string literals are invisible when navilint sweeps this test file
+itself -- the fixtures can seed violations without dirtying the tree.
+
+The lock-order scenarios re-run the PR-6 serving drills (thundering
+herd at the backpressure gate, threaded shutdown drain, straggler-shard
+heartbeat) under the instrumented-lock monitor and assert the
+acquisition graph stays acyclic.
+"""
+
+import pathlib
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source
+from repro.analysis.navilint import (BARE_EXCEPT, FORBIDDEN_OP,
+                                     MALFORMED_SUPPRESSION, STALE_REGISTRY,
+                                     STALE_SUPPRESSION, UNKNOWN_LOCK,
+                                     UNLOCKED_ACCESS, UNUSED_IMPORT,
+                                     WALLCLOCK)
+from repro.analysis.runtime import (CompileCounter, LockOrderMonitor,
+                                    instrument_locks)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+needs_2_devices = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs 2 host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def _hits(findings, rule):
+    return [(f.rule, f.line) for f in findings if f.rule == rule]
+
+
+# -- must-flag fixtures ------------------------------------------------------
+
+def test_flags_unlocked_annotated_field():
+    src = """\
+import threading
+
+class Gauge:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.depth = 0   # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self.depth += 1
+
+    def peek(self):
+        return self.depth
+"""
+    findings = analyze_source(src, "fixture_lock.py")
+    assert _hits(findings, UNLOCKED_ACCESS) == [(UNLOCKED_ACCESS, 13)]
+    assert len(findings) == 1, [f.render() for f in findings]
+
+
+def test_flags_wallclock_deadline():
+    src = """\
+import time
+
+def deadline_in(seconds):
+    return time.time() + seconds
+"""
+    findings = analyze_source(src, "fixture_clock.py")
+    assert _hits(findings, WALLCLOCK) == [(WALLCLOCK, 4)]
+    assert len(findings) == 1
+
+
+def test_flags_scatter_in_registered_hot_loop():
+    """A function whose qualname is in the hot-path registry for its
+    file is hot without any inline marker: reintroducing a scatter or
+    top_k there flags even deep inside a nested closure."""
+    src = """\
+import jax.numpy as jnp
+from jax import lax
+
+def step_lanes(st, visit):
+    def body(carry):
+        d = carry.at[0].set(0.0)
+        neg, order = lax.top_k(-d, 4)
+        return lax.scatter_add(d, visit, neg, None)
+    return body
+"""
+    findings = analyze_source(src, "src/repro/core/search_batch.py")
+    assert (FORBIDDEN_OP, 6) in _hits(findings, FORBIDDEN_OP)   # .at[].set
+    assert (FORBIDDEN_OP, 7) in _hits(findings, FORBIDDEN_OP)   # top_k
+    assert (FORBIDDEN_OP, 8) in _hits(findings, FORBIDDEN_OP)   # scatter_add
+
+
+def test_flags_stale_suppression():
+    """A sync-ok left behind after the offending call was deleted is
+    itself a finding -- suppressions must never outlive their reason."""
+    src = """\
+def finalize(x):
+    # navilint: sync-ok results cross to host here
+    return x
+"""
+    findings = analyze_source(src, "fixture_stale.py")
+    assert _hits(findings, STALE_SUPPRESSION) == [(STALE_SUPPRESSION, 2)]
+    assert len(findings) == 1
+
+
+# -- must-pass fixtures ------------------------------------------------------
+
+def test_passes_suppressed_sync_at_declared_boundary():
+    src = """\
+import numpy as np
+
+def finalize(fin):  # navilint: hot
+    # navilint: sync-ok the declared finalize boundary
+    return np.asarray(fin.ids)
+"""
+    assert analyze_source(src, "fixture_ok_sync.py") == []
+
+
+def test_passes_lock_held_annotated_helper():
+    src = """\
+import threading
+
+class Q:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._gated = False   # guarded-by: _lock
+
+    def pop(self):
+        with self._lock:
+            self._maybe_ungate()
+
+    def _maybe_ungate(self):  # navilint: lock-held _lock
+        self._gated = False
+"""
+    assert analyze_source(src, "fixture_ok_lock.py") == []
+
+
+# -- annotation hygiene ------------------------------------------------------
+
+def test_suppression_without_reason_is_malformed():
+    src = """\
+import numpy as np
+
+def step(x):  # navilint: hot
+    return np.asarray(x)  # navilint: sync-ok
+"""
+    findings = analyze_source(src, "fixture_noreason.py")
+    assert _hits(findings, MALFORMED_SUPPRESSION) == \
+        [(MALFORMED_SUPPRESSION, 4)]
+
+
+def test_guarded_by_unknown_lock_flags_the_class():
+    src = """\
+class C:
+    def __init__(self):
+        self.x = 0   # guarded-by: _lock
+
+    def get(self):
+        return 1
+"""
+    findings = analyze_source(src, "fixture_nolock.py")
+    assert _hits(findings, UNKNOWN_LOCK) == [(UNKNOWN_LOCK, 1)]
+
+
+def test_registry_entry_without_function_is_stale():
+    src = "def something_else():\n    return 1\n"
+    findings = analyze_source(src, "src/repro/serving/lanes.py")
+    assert {f.rule for f in findings} == {STALE_REGISTRY}
+    assert {"LaneBatch.step", "LaneBatch.finalize"} <= {
+        f.message.split("'")[1] for f in findings}
+
+
+def test_hygiene_unused_import_and_bare_except():
+    src = """\
+import os
+import sys  # noqa: F401
+
+def risky():
+    try:
+        return os.getpid()
+    except:
+        return -1
+"""
+    findings = analyze_source(src, "fixture_hygiene.py")
+    assert _hits(findings, UNUSED_IMPORT) == []        # os used, sys noqa'd
+    assert _hits(findings, BARE_EXCEPT) == [(BARE_EXCEPT, 7)]
+    src2 = "import json\n\nX = 1\n"
+    assert _hits(analyze_source(src2, "fixture_unused.py"),
+                 UNUSED_IMPORT) == [(UNUSED_IMPORT, 1)]
+
+
+# -- the real tree -----------------------------------------------------------
+
+def test_full_tree_is_clean():
+    """`python -m repro.analysis --strict` must exit 0 on the repo: the
+    tree carries its own annotations, so any finding here is a real
+    regression (or a missing annotation) introduced by a change."""
+    findings = analyze_paths([str(REPO / "src"), str(REPO / "tests"),
+                              str(REPO / "benchmarks")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_registry_names_resolve_against_source():
+    """Every hot-path registry entry must name a function that exists --
+    a refactor that renames one must update the registry (NX303)."""
+    findings = analyze_paths([str(REPO / "src" / "repro")])
+    stale = [f for f in findings if f.rule == STALE_REGISTRY]
+    assert stale == [], "\n".join(f.render() for f in stale)
+
+
+# -- lock-order runtime guard ------------------------------------------------
+
+def test_lock_order_detects_abba_cycle():
+    with instrument_locks() as mon:
+        a = threading.Lock()
+        b = threading.Lock()
+
+        def fwd():
+            with a:
+                with b:
+                    pass
+
+        def rev():
+            with b:
+                with a:
+                    pass
+
+        t1 = threading.Thread(target=fwd)
+        t1.start()
+        t1.join()
+        t2 = threading.Thread(target=rev)
+        t2.start()
+        t2.join()
+    cycles = mon.cycles()
+    assert cycles, "A->B and B->A acquisitions must report a cycle"
+    assert mon.report()["cycles"]
+
+
+def test_lock_order_nested_same_order_is_clean():
+    with instrument_locks() as mon:
+        outer = threading.Lock()
+        inner = threading.Lock()
+        for _ in range(3):
+            with outer:
+                with inner:
+                    pass
+    assert mon.edges and not mon.cycles()
+
+
+def test_lock_order_clean_across_queue_herd():
+    """The PR-6 thundering-herd drill under the monitor: blocked putters
+    waking through the backpressure gate must not create lock-order
+    cycles (Condition wait/notify runs through the instrumented lock)."""
+    from repro.serving import SubmissionQueue
+    with instrument_locks() as mon:
+        q = SubmissionQueue(maxsize=4, policy="block",
+                            high_watermark=2, low_watermark=1)
+        q.put(1.0, None, meta=0)
+        q.put(1.0, None, meta=1)                 # depth == high -> gated
+        started = []
+        threads = [threading.Thread(
+            target=lambda j=j: started.append(q.put(1.0, None, meta=j)))
+            for j in range(3)]
+        for t in threads:
+            t.start()
+        time.sleep(0.05)
+        deadline = time.monotonic() + 5.0
+        while len(started) < 3 and time.monotonic() < deadline:
+            q.pop_batch(2)
+            time.sleep(0.01)
+        for t in threads:
+            t.join(5.0)
+        assert len(started) == 3
+    assert mon.cycles() == [], mon.report()
+
+
+def test_lock_order_clean_across_threaded_shutdown(index, queries):
+    """Threaded service lifecycle (start -> submit -> drain shutdown)
+    under the monitor: the submit path (submit/lat locks), the device
+    loop, and the queue's close/wake path must stay acyclic."""
+    from repro.api.db import NavixDB
+    from repro.query.operators import Filter, NodeScan
+    from repro.storage.columnar import GraphStore
+
+    n = index.graph.n
+    with instrument_locks() as mon:
+        store = GraphStore()
+        store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+        db = NavixDB(store)
+        db.register_index("default", index)
+        with db.serve(k_cap=6, efs_cap=24, max_batch=4,
+                      step_iters=4) as svc:
+            futs = [svc.submit(
+                queries[j],
+                plan=Filter(NodeScan("Chunk"), "cID", "<",
+                            value=n // (j + 1)), k=6)
+                for j in range(6)]
+            out = [f.result(timeout=120) for f in futs]
+        assert all(r.status == "ok" for r in out)
+        assert svc.gauges()["done"] == 6
+    assert mon.cycles() == [], mon.report()
+
+
+@needs_2_devices
+def test_lock_order_clean_across_straggler_heartbeat(shard_env):
+    """The sharded straggler drill (suppressed heartbeat flips responses
+    to degraded) under the monitor -- heartbeat, queue, and service
+    locks interleave across beats, ticks, and finalize."""
+    from repro.api.db import NavixDB
+    from repro.query.operators import Filter, NodeScan
+    from repro.serving import HeartbeatMonitor, SearchService
+    from repro.storage.columnar import GraphStore
+
+    X, qs, factory = shard_env
+    sn = factory(2)
+    n = sn.n_total
+
+    class Clk:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clk = Clk()
+    with instrument_locks() as mon:
+        hb = HeartbeatMonitor(2, stale_after=2.0, clock=clk)
+        store = GraphStore()
+        store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+        db = NavixDB(store)
+        db.register_index("default", sn)
+        svc = SearchService(db, k_cap=6, efs_cap=24, max_batch=4,
+                            step_iters=4, heartbeats=hb)
+
+        def drive(futs):
+            for _ in range(500):
+                if all(f.done() for f in futs):
+                    return [f.result(timeout=0) for f in futs]
+                svc._tick()
+            raise AssertionError("service did not converge")
+
+        plan = Filter(NodeScan("Chunk"), "cID", "<", value=n // 2)
+        drive([svc.submit(qs[j], plan=plan, k=6) for j in range(4)])
+        hb.suppress(1)
+        clk.t = 10.0
+        hb.beat(0)
+        resps = drive([svc.submit(qs[j], plan=plan, k=6)
+                       for j in range(4)])
+        assert all(r.degraded for r in resps), \
+            "stale heartbeat must degrade responses"
+        svc.shutdown(drain=True)
+    assert mon.cycles() == [], mon.report()
+
+
+def test_lock_order_monitor_standalone_api():
+    mon = LockOrderMonitor()
+    mon._acquired("a.py:1")
+    mon._acquired("b.py:2")
+    mon._released("b.py:2")
+    mon._released("a.py:1")
+    mon._acquired("b.py:2")
+    mon._acquired("a.py:1")
+    assert mon.cycles() == [["a.py:1", "b.py:2", "a.py:1"]]
+
+
+# -- zero-recompile runtime guard --------------------------------------------
+
+def test_compile_counter_counts_then_cache_hits_zero():
+    with CompileCounter() as cc:
+        f = jax.jit(lambda x: x * 3 + 1)
+        f(np.arange(7, dtype=np.float32)).block_until_ready()
+        assert cc.counts["warmup"] >= 1
+        cc.mark("steady")
+        f(np.arange(7, dtype=np.float32) + 1).block_until_ready()
+        f(np.arange(7, dtype=np.float32) + 2).block_until_ready()
+    assert cc.counts["steady"] == 0, cc.counts
+    assert cc.total == sum(cc.counts.values())
+
+
+def test_db_execute_bucket_reuse_compiles_nothing(index):
+    """The ProgramCache bucketing claim at the XLA level: after a warm
+    execute at bucket 8, a different batch size in the same bucket and a
+    different predicate must trigger ZERO backend compiles -- cache
+    stats can lie (a re-keyed entry still misses), the compiler hook
+    cannot."""
+    from repro.api import NavixDB, Q
+    from repro.storage.columnar import GraphStore
+
+    n = index.graph.n
+    store = GraphStore()
+    store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+    db = NavixDB(store)
+    db.register_index("default", index)
+    rng = np.random.default_rng(3)
+    qs = rng.normal(size=(8, index.graph.dim)).astype(np.float32)
+
+    plan = Q.match("Chunk").where("cID", "<", n // 2).knn(k=5, efs=20)
+    with CompileCounter() as cc:
+        db.execute(plan, query=qs[:7])               # bucket 8 (cold)
+        cc.mark("steady")
+        db.execute(plan, query=qs[:5])               # same bucket
+        db.execute(Q.match("Chunk").where("cID", "<", n // 3)
+                   .knn(k=5, efs=20), query=qs[:8])  # new predicate
+    assert cc.counts["steady"] == 0, cc.counts

@@ -7,7 +7,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.distances import (brute_force_topk, dist_matrix,
-                                  gathered_dist, normalize, point_dist)
+                                  gathered_dist, normalize)
 
 
 @given(st.integers(0, 2**31 - 1), st.sampled_from(["l2", "cos", "dot"]))

@@ -1,4 +1,3 @@
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import check_symmetric_fraction, degree_histogram

@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 
 def test_postfilter_reaches_k(index, queries):

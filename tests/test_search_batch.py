@@ -11,7 +11,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import bitset
-from repro.core.search import SearchParams, search, search_batch
+from repro.core.search import search, search_batch
 from repro.core.search_batch import search_many
 
 HEURISTICS = ["onehop_s", "directed", "blind", "adaptive_g",

@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 
 def test_unfiltered_recall(index, queries):
