@@ -18,7 +18,18 @@ per-lane ``[S, B, W]`` semimasks) in a subprocess with placeholder host
 devices, reports sharded-vs-unsharded QPS, and checks every sharded
 answer against the *unsharded batched engine* run per shard over
 shard-restricted masks and merged host-side -- zero drift is a gated
-claim.
+claim. Two mesh layouts run: ``data`` (the headline: lanes split over
+the data axis, each shard steps B/S lanes of the full index) and
+``model`` (legacy: the index split over the model axis, every shard
+steps all B lanes; keeps the heartbeat straggler drill, which needs
+more than one index shard). Both engines in the arm run a batch sized
+to ``SHARD_ARM_LANES_PER_SHARD`` lanes per shard: splitting a
+16-lane batch over S shards leaves every device call dispatch-bound,
+and the "ratio" then measures fixed per-call overhead rather than the
+cost of sharding itself. The sharded/unsharded QPS ratio is computed
+from the SAME rounded qps fields the artifact carries and printed
+directly, so the ratio can never drift from the row data again;
+``trend.check_shard_ratio`` gates the data-layout ratio at >= 0.9x.
 
 The ``--open-loop`` arm serves the same request mix through the LIVE
 :class:`~repro.serving.service.SearchService` (thread driver) under a
@@ -67,6 +78,13 @@ MAX_BATCH = 16
 STEP_ITERS = 32
 SPEEDUP_FLOOR = 1.0 if common.QUICK else 1.3
 SHARDS = 2                       # the --shards arm run() spawns by default
+#: the sharded arm's batch: sized so each data shard holds >= 32 lanes.
+#: Splitting B=16 lanes over S shards leaves every device call
+#: overhead-bound (the comparison then measures per-call dispatch cost,
+#: not sharding), so the arm pins per-shard occupancy instead -- both
+#: engines in the arm run the SAME batch, so the ratio stays apples to
+#: apples.
+SHARD_ARM_LANES_PER_SHARD = 32
 #: request selectivities -- each request gets its own predicate
 SELECTIVITIES = (0.05, 0.1, 0.2, 0.35, 0.5, 0.75, 0.9, 1.0)
 #: open-loop offered loads as fractions of the closed-drain QPS
@@ -163,11 +181,21 @@ def run() -> list[dict]:
     speedup = round(by["continuous"]["qps"] / max(by["grouped"]["qps"], 1e-9),
                     3)
 
-    # --shards arm: the same stream on a ShardedNavix, in a subprocess
-    # with placeholder host devices (this process keeps its one device)
-    sharded = _spawn_sharded(SHARDS)
-    if "row" in sharded:
-        rows.append(sharded["row"])
+    # --shards arms: the same stream on a ShardedNavix, in subprocesses
+    # with placeholder host devices (this process keeps its one device).
+    # "data" (lane split) is the headline payload check_shard_ratio
+    # gates; "model" (index split) is the legacy arm with the heartbeat
+    # drill.
+    sharded = _spawn_sharded(SHARDS, "data")
+    sharded_model = _spawn_sharded(SHARDS, "model")
+    for payload in (sharded, sharded_model):
+        if "row" in payload:
+            rows.append(payload["row"])
+        if "sharded_over_unsharded_qps" in payload:
+            print(f"sharded S={payload['shards']} "
+                  f"layout={payload.get('layout', '?')}: "
+                  f"{payload['sharded_over_unsharded_qps']:.3f}x "
+                  f"unsharded QPS")
     common.emit(rows, "serving_schedulers")
 
     JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
@@ -182,10 +210,12 @@ def run() -> list[dict]:
         "continuous_over_grouped_qps": speedup,
         "mismatched_answers": mismatched,
         "sharded": sharded,
+        "sharded_model_axis": sharded_model,
     }, indent=2) + "\n")
     for r in rows:
         r["_mismatched"] = mismatched
         r["_sharded"] = sharded
+        r["_sharded_model"] = sharded_model
     return rows
 
 
@@ -324,8 +354,8 @@ def validate_open_loop(rows: list[dict]) -> list[str]:
     return fails
 
 
-def _spawn_sharded(shards: int) -> dict:
-    """Run the --shards arm in a subprocess with enough host devices and
+def _spawn_sharded(shards: int, layout: str = "data") -> dict:
+    """Run one --shards arm in a subprocess with enough host devices and
     return its JSON payload ({"error": ...} on failure). The parent's
     XLA_FLAGS / PYTHONPATH are preserved (device-count flag replaced, not
     clobbered) so both arms run under the same XLA configuration."""
@@ -342,21 +372,31 @@ def _spawn_sharded(shards: int) -> dict:
                XLA_FLAGS=f"{xla} {flag}".strip())
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_serving",
-         "--shards", str(shards)],
+         "--shards", str(shards), "--layout", layout],
         timeout=3600, capture_output=True, text=True,
         cwd=pathlib.Path(__file__).parent.parent, env=env)
     if out.returncode != 0:
-        return {"shards": shards, "error": out.stderr[-500:]}
+        return {"shards": shards, "layout": layout,
+                "error": out.stderr[-500:]}
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-def run_sharded(shards: int) -> dict:
-    """The --shards arm body (run with >= ``shards`` host devices).
+def run_sharded(shards: int, layout: str = "data") -> dict:
+    """One --shards arm body (run with >= ``shards`` host devices).
 
     Serves the identical mixed-predicate stream through the continuous
     scheduler on (a) the unsharded index and (b) a ShardedNavix, and
     checks every sharded answer against the unsharded batched engine run
     per shard over shard-restricted masks + a host lexicographic merge.
+
+    ``layout`` picks the mesh: ``data`` splits the LANES over the data
+    axis (one index replica, each shard steps B/S lanes -- total device
+    work equals the unsharded engine's); ``model`` splits the INDEX over
+    the model axis (every shard steps all B lanes over its slice). The
+    per-shard reference covers both: under ``data`` the model axis has
+    one shard, so the reference degenerates to the plain unsharded run.
+    The heartbeat straggler drill needs >1 index shard and only runs
+    under ``model``.
     """
     import jax
 
@@ -366,14 +406,18 @@ def run_sharded(shards: int) -> dict:
     X, reqs = _request_stream(n, d, n_req)
     cfg = NavixConfig(m_u=8, ef_construction=64, metric="l2", seed=0)
     index = common.cached_index(f"bench_search_{n}", X, cfg)
-    mesh = jax.make_mesh((1, shards), ("data", "model"))
+    shape = (shards, 1) if layout == "data" else (1, shards)
+    mesh = jax.make_mesh(shape, ("data", "model"))
     sn = ShardedNavix.build(X, cfg, mesh)
+    # per-shard lane occupancy pinned (see SHARD_ARM_LANES_PER_SHARD);
+    # both engines run this same batch so the ratio isolates sharding
+    mb = max(MAX_BATCH, SHARD_ARM_LANES_PER_SHARD * shards)
 
     def make_engine(idx) -> SearchEngine:
         store = GraphStore()
         store.add_node_table("Chunk", n, {"cID": np.arange(n)})
         return SearchEngine(index=idx, store=store, efs=EFS,
-                            max_batch=MAX_BATCH, scheduler="continuous",
+                            max_batch=mb, scheduler="continuous",
                             step_iters=STEP_ITERS)
 
     engines = {"unsharded": make_engine(index), "sharded": make_engine(sn)}
@@ -401,26 +445,36 @@ def run_sharded(shards: int) -> dict:
         if not np.array_equal(answers["sharded"][rid].ids, ref_ids[j]):
             drift += 1
 
-    hb_degraded, hb_drift = _heartbeat_scenario(sn, reqs, params, shards)
-
     med = {name: float(np.median(walls[name])) for name in engines}
     lat = engines["sharded"].latency_summary()
-    row = {"sched": "continuous", "shards": shards, "n_req": n_req,
+    row = {"sched": "continuous", "shards": shards, "layout": layout,
+           "n_req": n_req, "max_batch": mb,
            "qps": round(n_req / med["sharded"], 2),
            "drain_ms": round(med["sharded"] * 1e3, 2),
            "p50_ms": round(lat["p50_ms"], 3),
            "p95_ms": round(lat["p95_ms"], 3)}
-    return {
+    qps_unsharded = round(n_req / med["unsharded"], 2)
+    # the ratio is derived from the SAME rounded qps fields the artifact
+    # carries -- recomputing it from the rows always reproduces it
+    ratio = round(row["qps"] / qps_unsharded, 3)
+    print(f"shards={shards} layout={layout}: sharded/unsharded QPS "
+          f"ratio = {ratio:.3f} ({row['qps']:.2f}/{qps_unsharded:.2f})",
+          file=sys.stderr)
+    out = {
         "shards": shards,
+        "layout": layout,
         "row": row,
         "qps_sharded": row["qps"],
-        "qps_unsharded": round(n_req / med["unsharded"], 2),
-        "sharded_over_unsharded_qps": round(
-            med["unsharded"] / med["sharded"], 3),
+        "qps_unsharded": qps_unsharded,
+        "sharded_over_unsharded_qps": ratio,
         "answer_drift_vs_unsharded_engine": drift,
-        "heartbeat_degraded": hb_degraded,
-        "heartbeat_drift": hb_drift,
     }
+    if layout == "model":
+        hb_degraded, hb_drift = _heartbeat_scenario(sn, reqs, params,
+                                                    shards)
+        out["heartbeat_degraded"] = hb_degraded
+        out["heartbeat_drift"] = hb_drift
+    return out
 
 
 def _heartbeat_scenario(sn, reqs, params, shards: int) -> tuple[bool, int]:
@@ -491,15 +545,18 @@ def validate(rows: list[dict]) -> list[str]:
     if rows[0].get("_mismatched"):
         fails.append(f"{rows[0]['_mismatched']} requests got different "
                      f"answers from the two schedulers")
-    sharded = rows[0].get("_sharded", {})
-    if "error" in sharded:
-        fails.append(f"sharded serving arm failed: {sharded['error']}")
-    elif sharded.get("answer_drift_vs_unsharded_engine"):
-        fails.append(
-            f"{sharded['answer_drift_vs_unsharded_engine']} sharded "
-            f"responses drifted from the per-shard unsharded-engine "
-            f"reference merge")
-    if sharded and "error" not in sharded:
+    for which in ("_sharded", "_sharded_model"):
+        sharded = rows[0].get(which, {})
+        label = sharded.get("layout", which.lstrip("_"))
+        if "error" in sharded:
+            fails.append(f"sharded serving arm ({label}) failed: "
+                         f"{sharded['error']}")
+            continue
+        if sharded.get("answer_drift_vs_unsharded_engine"):
+            fails.append(
+                f"{sharded['answer_drift_vs_unsharded_engine']} sharded "
+                f"({label}) responses drifted from the per-shard "
+                f"unsharded-engine reference merge")
         if not sharded.get("heartbeat_degraded", True):
             fails.append("suppressed shard heartbeat did NOT flip "
                          "responses to degraded automatically")
@@ -516,6 +573,10 @@ def main() -> None:
                     help="run ONLY the sharded arm in this process "
                          "(needs >= that many host devices) and print "
                          "its JSON payload")
+    ap.add_argument("--layout", choices=("data", "model"), default="data",
+                    help="with --shards: split lanes over the data axis "
+                         "(headline) or the index over the model axis "
+                         "(legacy; runs the heartbeat drill)")
     ap.add_argument("--open-loop", action="store_true",
                     help="run the live-service open-loop arm (Poisson "
                          "arrivals, deadline/timeout gates) and merge "
@@ -525,7 +586,7 @@ def main() -> None:
                          "requests (CI smoke)")
     args = ap.parse_args()
     if args.shards:
-        print(json.dumps(run_sharded(args.shards)))
+        print(json.dumps(run_sharded(args.shards, args.layout)))
         return
     if args.open_loop:
         fails = validate_open_loop(run_open_loop(smoke=args.smoke))

@@ -73,7 +73,9 @@ def main() -> None:
         rc_compiles = trend.check_compiles(
             args.serving_current or str(bench_serving.JSON_OUT),
             args.compile_baseline)
-        sys.exit(rc or rc_serving or rc_compiles)
+        rc_shards = trend.check_shard_ratio(
+            args.serving_current or str(bench_serving.JSON_OUT))
+        sys.exit(rc or rc_serving or rc_compiles or rc_shards)
 
     from benchmarks import (bench_adaptive, bench_construction,
                             bench_distributed, bench_heuristics,

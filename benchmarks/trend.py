@@ -71,6 +71,16 @@ def compare(current: dict, baseline: dict,
         # completion QPS (== arrival rate) looks unchanged
         if (row.get("sched") == "open-loop" and "p99_ms" in row
                 and prev.get("p99_ms", 0) > 0):
+            # offered load is DERIVED from the measured closed-drain QPS
+            # (lam = frac * closed_qps), so a big closed-queue speedup
+            # moves the operating point; tails at different offered
+            # loads are not comparable
+            off, boff = row.get("offered_qps"), prev.get("offered_qps")
+            if off and boff and not (1 - tol <= off / boff <= 1 + tol):
+                notes.append(f"({label}) p99 comparison skipped: offered "
+                             f"load moved {boff:.0f} -> {off:.0f} qps "
+                             f"with the closed-drain QPS it derives from")
+                continue
             p99_tol = tol * _P99_TOL_SCALE
             ratio = row["p99_ms"] / prev["p99_ms"]
             if ratio > 1.0 + p99_tol:
@@ -148,6 +158,43 @@ def check_compiles(current_path: str, baseline_path: str) -> int:
               f"baseline (warmup<={base_warmup}, steady<="
               f"{base_steady}); no lock cycles")
     return 1 if fails else 0
+
+
+#: hard floor for S=2 sharded continuous QPS relative to the unsharded
+#: engine, measured in the SAME subprocess (bench_serving --shards):
+#: sharding that slows serving down is a regression by definition
+SHARD_RATIO_FLOOR = 0.9
+
+
+def check_shard_ratio(current_path: str,
+                      floor: float = SHARD_RATIO_FLOOR) -> int:
+    """Gate the sharded serving arm: S=2 continuous must reach at least
+    ``floor`` x the unsharded engine's QPS (both measured back-to-back
+    in the sharded subprocess, so host load cancels out). A current file
+    without a sharded payload -- or one whose sharded arm errored (e.g.
+    too few host devices) -- is a skip, not a failure."""
+    cur_p = pathlib.Path(current_path)
+    if not cur_p.exists():
+        print(f"shard-ratio: no current bench file {cur_p}; skipping")
+        return 0
+    sharded = json.loads(cur_p.read_text()).get("sharded")
+    if not isinstance(sharded, dict) or "error" in sharded:
+        print("shard-ratio: no sharded payload in the current bench "
+              "(sharded arm not run or errored); skipping")
+        return 0
+    ratio = sharded.get("sharded_over_unsharded_qps")
+    if ratio is None:
+        print("shard-ratio: sharded payload has no ratio field; skipping")
+        return 0
+    shards = sharded.get("shards", "?")
+    if ratio < floor:
+        print(f"SHARD-RATIO-FAIL: S={shards} continuous at {ratio:.3f}x "
+              f"the unsharded QPS (floor {floor:.2f}x) -- sharding must "
+              f"not slow serving down")
+        return 1
+    print(f"shard-ratio: S={shards} continuous at {ratio:.3f}x unsharded "
+          f"(floor {floor:.2f}x) ok")
+    return 0
 
 
 def check_trend(current_path: str, baseline_path: str,

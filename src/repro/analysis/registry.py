@@ -44,6 +44,11 @@ HOT_PATHS: dict[str, tuple[str, ...]] = {
         "finalize_lanes",
         "evict_lanes",
         "parked_state",
+        # the donated (buffer-donating, async-dispatch) variants the
+        # serving tier's overlapped stepping runs on
+        "engine_steps_overlap",
+        "engine_refill_overlap",
+        "engine_evict_overlap",
     ),
     # the shard_map bodies: everything that runs per shard inside the
     # sharded programs, plus the one-op merge they feed
@@ -56,10 +61,14 @@ HOT_PATHS: dict[str, tuple[str, ...]] = {
         "ShardedNavix._build_steps.<locals>.run.<locals>.local",
         "ShardedNavix._build_finalize.<locals>.local",
     ),
-    # the shared device-lane core: step advances the device loop, and
-    # finalize is THE declared host boundary (results cross exactly once)
+    # the shared device-lane core: step_async dispatches the device loop
+    # (donated buffers, no sync), step_wait is the ONE liveness sync per
+    # chunk, and finalize is THE declared host boundary (results cross
+    # exactly once)
     "repro/serving/lanes.py": (
         "LaneBatch.step",
+        "LaneBatch.step_async",
+        "LaneBatch.step_wait",
         "LaneBatch.finalize",
     ),
     # the serving drivers' device loops

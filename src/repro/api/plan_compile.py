@@ -58,7 +58,14 @@ class ProgramKey(NamedTuple):
     per_lane_sel: bool = False     # [B, W] per-lane semimasks (mixed-plan
                                    # batches) vs one shared [W] mask
     sharded: int = 0               # shard count S of a ShardedNavix
-                                   # program (0 = unsharded)
+                                   # program (0 = unsharded) -- the MODEL
+                                   # axis: every shard searches its own
+                                   # subgraph and the results merge
+    lane_shards: int = 1           # DATA-axis size of the mesh: the lane
+                                   # (batch) dim is split this many ways,
+                                   # each device stepping B/lane_shards
+                                   # lanes; batch buckets are rounded up
+                                   # to a multiple of it
 
 
 @dataclasses.dataclass
@@ -209,6 +216,12 @@ class ProgramCache:
         per_lane = sel_bits.ndim == 3
         b = Q.shape[0]
         bb = _bucket(b)
+        ls = sn.lane_shards
+        if bb % ls:
+            # the data axis splits the lane dim; the padded bucket must
+            # divide evenly (a power-of-two bucket already does for a
+            # power-of-two data axis)
+            bb = -(-bb // ls) * ls
         if bb != b:
             # host-side padding for the same reason as _run_batched:
             # eager jnp pads compile per unpadded batch size
@@ -232,12 +245,12 @@ class ProgramCache:
                    int(sn.graphs.upper_ids.shape[-1]),
                    int(sn.graphs.upper.shape[-1]),
                    sn.model_axis, sn.data_axis,
-                   int(sn.mesh.shape[sn.data_axis]),
                    # mesh/device identity: the cached program closes over
                    # the mesh, so two same-shape indexes on different
                    # device groups must never share an entry
                    tuple(d.id for d in sn.mesh.devices.flat)),
-            engine="batched", per_lane_sel=per_lane, sharded=sn.n_shards)
+            engine="batched", per_lane_sel=per_lane, sharded=sn.n_shards,
+            lane_shards=ls)
         prog = self._programs.get(key)
         if prog is None:
             self.stats.misses += 1

@@ -33,6 +33,27 @@ def pack(mask: jax.Array) -> jax.Array:
     return (m * weights).sum(axis=-1).astype(jnp.uint32)
 
 
+def pack_np(mask: np.ndarray) -> np.ndarray:
+    """Host-side :func:`pack`: bool[..., n] -> uint32[..., ceil(n/32)].
+
+    Bit-identical to ``np.asarray(pack(mask))`` but pure numpy -- the
+    serving tier packs one semimask per *distinct plan* on the host
+    between device chunks, and an eager jnp pack there costs a dispatch
+    chain per plan (it dominated the drain wall). ``np.packbits`` with
+    little-endian bit order viewed as little-endian uint32 reproduces
+    ``pack``'s ``bit i == element i`` layout exactly (asserted in
+    tests/test_overlap.py and property-tested in tests/test_bitset.py).
+    """
+    m = np.asarray(mask, dtype=bool)
+    n = m.shape[-1]
+    pad = n_words(n) * WORD_BITS - n
+    if pad:
+        m = np.concatenate(
+            [m, np.zeros(m.shape[:-1] + (pad,), bool)], axis=-1)
+    packed = np.packbits(m, axis=-1, bitorder="little")
+    return np.ascontiguousarray(packed).view(np.uint32)
+
+
 def unpack(bits: jax.Array, n: int) -> jax.Array:
     """uint32[W] -> bool[n]."""
     shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)

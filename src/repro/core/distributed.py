@@ -158,12 +158,31 @@ class ShardedNavix:
     # set when the index is registered in a NavixDB catalog; routes search
     # through the shared compiled-program cache (repro.api.plan_compile)
     program_cache: Optional[object] = None
-    # memoized jitted shard_map programs: (kind, params, per_lane) -> fn
+    # memoized jitted shard_map programs:
+    # (kind, params, per_lane, donate) -> fn
     _programs: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def n_shards(self) -> int:
         return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def lane_shards(self) -> int:
+        """Size of the DATA axis: how many ways the lane (batch) dim of
+        every stepping-surface buffer is split. With ``lane_shards > 1``
+        each device along the data axis steps only ``B / lane_shards``
+        lanes (the state specs already partition the lane dim with
+        ``P(model, data, ...)``), so batch throughput scales across the
+        data axis instead of every device stepping the full batch. Batch
+        sizes must be a multiple of this."""
+        return int(self.mesh.shape[self.data_axis])
+
+    def _check_lanes(self, bsz: int) -> None:
+        if bsz % self.lane_shards:
+            raise ValueError(
+                f"batch size {bsz} is not divisible by the data-axis "
+                f"size {self.lane_shards}; pad the batch (the program "
+                f"cache's bucket already rounds to a multiple)")
 
     @property
     def dim(self) -> int:
@@ -223,17 +242,27 @@ class ShardedNavix:
                     f"this index needs [S={s}, ..., W={want[1]}]")
             packed = jnp.asarray(mask)
         else:
-            if mask.shape[-1] != self.n_total:
-                raise ValueError(
-                    f"semimask covers {mask.shape[-1]} nodes but this index "
-                    f"has {self.n_total}")
-            m = np.zeros(mask.shape[:-1] + (s * nl,), bool)
-            m[..., :self.n_total] = mask
-            m = np.moveaxis(m.reshape(mask.shape[:-1] + (s, nl)), -2, 0)
-            packed = bitset.pack(jnp.asarray(m))
+            packed = jnp.asarray(self.shard_semimask_np(mask))
         return jax.device_put(packed, NamedSharding(
             self.mesh, P(self.model_axis,
                          *([None] * (packed.ndim - 1)))))
+
+    def shard_semimask_np(self, mask) -> np.ndarray:
+        """Host-side :meth:`shard_semimask` body for bool masks:
+        ``bool[..., n_total]`` -> ``u32[S, ..., W_local]`` as a numpy
+        array (no device transfer). The serving tier packs one row per
+        distinct plan between device chunks; packing on the host keeps
+        that work off the dispatch path."""
+        s, nl = self.n_shards, self.n_local
+        mask = np.asarray(mask, bool)
+        if mask.shape[-1] != self.n_total:
+            raise ValueError(
+                f"semimask covers {mask.shape[-1]} nodes but this index "
+                f"has {self.n_total}")
+        m = np.zeros(mask.shape[:-1] + (s * nl,), bool)
+        m[..., :self.n_total] = mask
+        m = np.moveaxis(m.reshape(mask.shape[:-1] + (s, nl)), -2, 0)
+        return bitset.pack_np(m)
 
     def full_semimask(self) -> jax.Array:
         """Shared all-ones semimask ``u32[S, W_local]`` over the real
@@ -299,11 +328,15 @@ class ShardedNavix:
         return (jnp.where(ok, d, jnp.inf), jnp.where(ok, gids, -1))
 
     def _program(self, kind: str, params: SearchParams,
-                 per_lane: bool = True):
-        key = (kind, params, bool(per_lane))
+                 per_lane: bool = True, donate: bool = False):
+        key = (kind, params, bool(per_lane), bool(donate))
         fn = self._programs.get(key)
         if fn is None:
-            fn = getattr(self, f"_build_{kind}")(params, per_lane)
+            if kind in ("steps", "refill"):
+                fn = getattr(self, f"_build_{kind}")(params, per_lane,
+                                                     donate)
+            else:
+                fn = getattr(self, f"_build_{kind}")(params, per_lane)
             self._programs[key] = fn
         return fn
 
@@ -345,7 +378,8 @@ class ShardedNavix:
 
         return run
 
-    def _build_refill(self, params: SearchParams, per_lane: bool):
+    def _build_refill(self, params: SearchParams, per_lane: bool,
+                      donate: bool = False):
         mesh, model, data = self.mesh, self.model_axis, self.data_axis
         structure = jax.tree.structure(self.graphs)
         graph_specs = self._graph_specs()
@@ -358,7 +392,11 @@ class ShardedNavix:
                                         refill, params)
             return jax.tree.map(lambda x: x[None], st2), udc2[None]
 
-        @jax.jit
+        # donate=True consumes st/udc in place (the serving tier's
+        # overlapped path); the sharding of a donated buffer matches its
+        # output, so donation composes with the (model, data) state specs
+        @functools.partial(jax.jit,
+                           donate_argnums=(3, 4) if donate else ())
         def run(graphs, Q, sel_bits, st, udc, refill):
             state_specs = self._state_specs(Q.shape[0], params)
             return _shard_map(
@@ -372,32 +410,41 @@ class ShardedNavix:
 
         return run
 
-    def _build_steps(self, params: SearchParams, per_lane: bool):
+    def _build_steps(self, params: SearchParams, per_lane: bool,
+                     donate: bool = False):
         mesh, model, data = self.mesh, self.model_axis, self.data_axis
         structure = jax.tree.structure(self.graphs)
         graph_specs = self._graph_specs()
 
-        @functools.partial(jax.jit, static_argnames=("n_steps",))
-        def run(graphs, Q, sel_bits, st, n_steps):
-            def local(graph_leaves, q, sel, stl):
+        @functools.partial(jax.jit, static_argnames=("n_steps",),
+                           donate_argnums=(3,) if donate else ())
+        def run(graphs, Q, sel_bits, st, n_steps, efs_lanes=None):
+            def local(graph_leaves, q, sel, stl, *efsl):
                 graph = jax.tree.map(
                     lambda x: x[0],
                     jax.tree.unflatten(structure, graph_leaves))
                 stl = jax.tree.map(lambda x: x[0], stl)
                 # sigma_g=None: each shard's lanes estimate against their
                 # own slice of S, exactly like the one-shot path
-                st2, live = sb.step_lanes(graph, q, sel[0], stl, params,
-                                          n_steps, sigma_g=None)
+                st2, live = sb.step_lanes(
+                    graph, q, sel[0], stl, params, n_steps, sigma_g=None,
+                    efs_lanes=efsl[0] if efsl else None)
                 return jax.tree.map(lambda x: x[None], st2), live[None]
 
             state_specs = self._state_specs(Q.shape[0], params)
+            in_specs = (graph_specs, P(data, None),
+                        self._sel_spec(per_lane), state_specs)
+            args = (tuple(jax.tree.leaves(graphs)), Q, sel_bits, st)
+            if efs_lanes is not None:
+                # ragged per-lane efs rides the lane split: [B] over data
+                in_specs += (P(data),)
+                args += (efs_lanes,)
             st2, live = _shard_map(
                 local, mesh=mesh,
-                in_specs=(graph_specs, P(data, None),
-                          self._sel_spec(per_lane), state_specs),
+                in_specs=in_specs,
                 out_specs=(state_specs, P(model, data)),
                 **{_CHECK_REPL_KW: False},
-            )(tuple(jax.tree.leaves(graphs)), Q, sel_bits, st)
+            )(*args)
             # a lane is live while ANY shard's beam still advances
             return st2, jnp.any(live, axis=0)
 
@@ -435,32 +482,84 @@ class ShardedNavix:
 
         return run
 
+    def _build_finalize_beams(self, params: SearchParams,
+                              per_lane: bool = True):
+        """ids/dists-only finalize for the serving hot loop: the same
+        per-shard :func:`~repro.core.search_batch.finalize_lanes` +
+        liveness guard + :func:`merge_shard_topk` as
+        :meth:`_build_finalize`, spelled as a plain jitted vmap over the
+        shard dim. Skipping the shard_map round-trip and the stats
+        reduction (lane drivers never read stats) is a measurable
+        per-call win, and the beam math is identical op-for-op, so the
+        merged ids/dists stay bitwise equal to the full finalize."""
+        del per_lane                      # lane semimasks don't reach finalize
+        efs = params.efs
+
+        @jax.jit
+        def run(st, udc, alive):
+            res = jax.vmap(
+                lambda s, u: sb.finalize_lanes(s, u, params))(st, udc)
+            sidx = jnp.arange(res.ids.shape[0])[:, None, None]
+            gids = res.ids + sidx * self.n_local
+            ok = ((res.ids >= 0) & (gids < self.n_total)
+                  & alive[:, None, None])
+            return merge_shard_topk(jnp.where(ok, res.dists, jnp.inf),
+                                    jnp.where(ok, gids, -1), efs)
+
+        return run
+
     # -- resumable stepping surface (the serving tier's device side) ----
     def parked_state(self, bsz: int, params: SearchParams):
         """All-parked shard-stacked batch state (+ its [S, B] upper_dc)."""
+        self._check_lanes(bsz)
         st = sb.parked_state(self.n_local, bsz, params)
         st = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (self.n_shards,) + x.shape),
             st)
-        return st, jnp.zeros((self.n_shards, bsz), jnp.int32)
+        udc = jnp.zeros((self.n_shards, bsz), jnp.int32)
+        # place on the mesh up front: state fed to the *_program surface
+        # with single-device sharding costs a reshard (and a second
+        # executable) on the first call
+        st = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            st, self._state_specs(bsz, params))
+        return st, jax.device_put(
+            udc, NamedSharding(self.mesh, P(self.model_axis,
+                                            self.data_axis)))
 
-    def refill_program(self, params: SearchParams, per_lane: bool = True):
+    def refill_program(self, params: SearchParams, per_lane: bool = True,
+                       donate: bool = False):
         """(graphs, Q, sel_bits, st, udc, refill[B]) -> (st, udc); the
         sharded ``engine_refill`` -- the refill mask simply applies to
-        every shard's copy of the lane."""
-        return self._program("refill", params, per_lane)
+        every shard's copy of the lane. With ``donate=True`` the ``st``
+        and ``udc`` buffers are donated (callers must drop their own
+        references after the call)."""
+        return self._program("refill", params, per_lane, donate)
 
-    def steps_program(self, params: SearchParams, per_lane: bool = True):
-        """(graphs, Q, sel_bits, st, n_steps) -> (st, live[B]); live is
-        the OR over shards of each lane's convergence predicate."""
-        return self._program("steps", params, per_lane)
+    def steps_program(self, params: SearchParams, per_lane: bool = True,
+                      donate: bool = False):
+        """(graphs, Q, sel_bits, st, n_steps, efs_lanes=None) ->
+        (st, live[B]); live is the OR over shards of each lane's
+        convergence predicate. ``efs_lanes`` (optional ``int32[B]``)
+        masks each lane's beam tail beyond its own efs. With
+        ``donate=True`` the ``st`` buffers are donated so the device can
+        write in place while the host keeps working."""
+        return self._program("steps", params, per_lane, donate)
 
     def finalize_program(self, params: SearchParams):
         """(st, udc, alive[S]) -> SearchResult with merged global ids
         ([B, efs]); dead shards contribute +inf rows to the merge."""
         return self._program("finalize", params, True)
 
-    def evict_program(self, params: SearchParams):
+    def finalize_beams_program(self, params: SearchParams):
+        """(st, udc, alive[S]) -> (dists[B, efs], ids[B, efs]): the
+        serving-tier finalize. Bitwise-identical merged beams to
+        :meth:`finalize_program`, minus the stats reduction and the
+        shard_map round-trip (ids/dists are all the lane drivers
+        consume)."""
+        return self._program("finalize_beams", params, True)
+
+    def evict_program(self, params: SearchParams, donate: bool = False):
         """(st, udc, evict[B]) -> (st, udc) with the flagged lanes parked
         on EVERY shard (empty converged beams, zeroed upper_dc) -- the
         sharded ``engine_evict``. The eviction merge is elementwise over
@@ -470,7 +569,7 @@ class ShardedNavix:
         ``params`` is unused -- kept so the surface mirrors the other
         ``*_program`` constructors."""
         del params
-        return sb.engine_evict
+        return sb.engine_evict_overlap if donate else sb.engine_evict
 
     # -- one-shot search ------------------------------------------------
     def search_many(self, Q, semimask=None, k: int = 10, efs: int = 0,
@@ -504,8 +603,11 @@ class ShardedNavix:
         Qp = jnp.atleast_2d(self._prep_query(Q))
         alive_j = jnp.asarray(alive)
         if self.program_cache is not None:
+            # the cache pads the lane axis to a bucket that is already
+            # rounded up to a lane_shards multiple, so raw B is free here
             return self.program_cache.search_sharded(self, Qp, sel, alive_j,
                                                      params)
+        self._check_lanes(Qp.shape[0])
         fn = self._program("search", params, per_lane=sel.ndim == 3)
         return fn(self.graphs, Qp, sel, alive_j)
 

@@ -82,7 +82,17 @@ class NavixIndex:
         """
         if isinstance(mask, (list, tuple)):
             mask = np.stack([np.asarray(m) for m in mask])
-        mask = jnp.asarray(mask)
+        if not isinstance(mask, jax.Array):
+            # host data packs on the host (one numpy pass) -- an eager
+            # jnp pack costs a dispatch chain per mask
+            mask = np.asarray(mask)
+            if mask.dtype != np.uint32:
+                if mask.shape[-1] != self.graph.n:
+                    raise ValueError(
+                        f"semimask covers {mask.shape[-1]} nodes but this "
+                        f"index has {self.graph.n}")
+                return jnp.asarray(bitset.pack_np(mask))
+            mask = jnp.asarray(mask)
         if mask.dtype == jnp.uint32:
             want = bitset.n_words(self.graph.n)
             if mask.shape[-1] != want:

@@ -152,7 +152,10 @@ def _frontier_min(st: _BatchState):
     return j, jnp.take_along_axis(d_un, j[:, None], axis=1)[:, 0]
 
 
-def _r_max(st: _BatchState, efs: int):
+def _r_max(st: _BatchState, efs):
+    """Per-lane result-set radius; ``efs`` is the static int cap or a
+    per-lane ``int32[B]`` vector (the ragged-efs path -- each lane's
+    radius closes once ITS OWN efs slots are selected)."""
     live = st.sel & (st.ids >= 0) & jnp.isfinite(st.d)
     n_sel = live.sum(axis=1)
     r = jnp.where(live, st.d, -jnp.inf).max(axis=1)
@@ -247,10 +250,21 @@ def _init_state(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
 
 
 def _loop_fns(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
-              params: SearchParams, mode: int, global_branch: jax.Array):
+              params: SearchParams, mode: int, global_branch: jax.Array,
+              efs_lanes=None):
     """Build the (lane_cond, body) closures of the batched lower-level
     loop. ``sel2`` is per-lane ``[B, W]``; ``mode`` is the static resolved
-    heuristic; ``global_branch`` the per-lane fallback branch vector."""
+    heuristic; ``global_branch`` the per-lane fallback branch vector.
+
+    ``efs_lanes`` (optional ``int32[B]``) makes the beam RAGGED: after
+    every merge, slots at/past each lane's own efs are cleared (d=+inf,
+    id=-1, sel=False, exp=True), so a lane admitted at a small efs is
+    bit-identical to a lane whose beam was only ever that wide -- the
+    convergence radius closes at the lane's own efs and the sorted-merge
+    prefix property keeps its first ``efs_lanes[b]`` slots equal to the
+    narrow beam's. Lanes at the full ``params.efs`` are untouched (the
+    tail mask is empty for them), so a uniform-efs batch is bitwise
+    unchanged."""
     efs = params.efs
     metric = params.metric
     m_l = graph.m_l
@@ -262,9 +276,11 @@ def _loop_fns(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
 
     dedupe = jax.vmap(_dedupe_keep_first)
 
+    efs_eff = efs if efs_lanes is None else efs_lanes
+
     def lane_cond(st: _BatchState):
         _, d_min = _frontier_min(st)
-        keep = (d_min < jnp.inf) & (d_min <= _r_max(st, efs))
+        keep = (d_min < jnp.inf) & (d_min <= _r_max(st, efs_eff))
         return keep & (st.it < max_iters)
 
     def body(st: _BatchState) -> _BatchState:
@@ -355,15 +371,27 @@ def _loop_fns(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
 
         # navilint: op-ok the single fused beam-merge top_k PR 3 kept
         neg, order2 = lax.top_k(-all_d, efs)
+        new_d = -neg
+        new_id = jnp.take_along_axis(all_id, order2, axis=1)
+        new_exp = jnp.take_along_axis(all_exp, order2, axis=1)
+        new_sel = jnp.take_along_axis(all_sel, order2, axis=1)
+        if efs_lanes is not None:
+            # ragged beam tail: the merge is sorted ascending, so its
+            # first efs_lanes[b] slots equal the top-efs_lanes[b] merge
+            # of an efs_lanes[b]-wide beam; clearing the tail keeps the
+            # induction exact and stops small-efs lanes paying the
+            # full-cap radius (their r_max closes at their own efs)
+            tail = jnp.arange(efs)[None, :] >= efs_lanes[:, None]
+            new_d = jnp.where(tail, jnp.inf, new_d)
+            new_id = jnp.where(tail, -1, new_id)
+            new_exp = new_exp | tail
+            new_sel = new_sel & ~tail
         keep = live[:, None]
         return _BatchState(
-            d=jnp.where(keep, -neg, st.d),
-            ids=jnp.where(keep, jnp.take_along_axis(all_id, order2, axis=1),
-                          st.ids),
-            exp=jnp.where(keep, jnp.take_along_axis(all_exp, order2, axis=1),
-                          st.exp),
-            sel=jnp.where(keep, jnp.take_along_axis(all_sel, order2, axis=1),
-                          st.sel),
+            d=jnp.where(keep, new_d, st.d),
+            ids=jnp.where(keep, new_id, st.ids),
+            exp=jnp.where(keep, new_exp, st.exp),
+            sel=jnp.where(keep, new_sel, st.sel),
             visited=jnp.where(keep, visited2, st.visited),
             it=st.it + live.astype(jnp.int32),
             t_dc=st.t_dc + jnp.where(live, t_add, 0).astype(jnp.int32),
@@ -398,6 +426,7 @@ def beam_search_lower_batch(
     seeds: jax.Array,
     params: SearchParams,
     sigma_g=None,
+    efs_lanes=None,
 ) -> tuple[jax.Array, jax.Array, SearchStats]:
     """Search G_L for B queries at once. Returns the full beams
     (dists[B, efs], ids[B, efs]) ascending, plus per-lane stats.
@@ -406,12 +435,15 @@ def beam_search_lower_batch(
     ``sel_bits``: one shared semimask ``[W]`` (the group's selection
     subquery) or a per-lane stack ``[B, W]`` (each lane its own S).
     ``sigma_g``: scalar or per-lane ``[B]`` (ADAPTIVE_GLOBAL only).
+    ``efs_lanes``: optional per-lane ``int32[B]`` efs (ragged beams; each
+    lane is bit-identical to a search at its own efs <= params.efs).
     """
     bsz = Q.shape[0]
     sel2 = bitset.broadcast_lanes(sel_bits, bsz)
     sel2, mode, global_branch = _resolve_branching(
         sel2, params, sigma_g, graph.n, graph.m_l, bsz)
-    lane_cond, body = _loop_fns(graph, Q, sel2, params, mode, global_branch)
+    lane_cond, body = _loop_fns(graph, Q, sel2, params, mode, global_branch,
+                                efs_lanes=efs_lanes)
 
     st = _init_state(graph, Q, sel2, seeds, params)
     st = lax.while_loop(lambda s: jnp.any(lane_cond(s)), body, st)
@@ -419,7 +451,8 @@ def beam_search_lower_batch(
 
 
 def search_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
-                 params: SearchParams, sigma_g=None) -> SearchResult:
+                 params: SearchParams, sigma_g=None,
+                 efs_lanes=None) -> SearchResult:
     """Unjitted body of :func:`search_many` -- the full 2-level filtered
     search for a [B, d] query batch. Exposed so callers embedding the
     engine in a larger traced program (``repro.core.distributed`` runs it
@@ -427,7 +460,8 @@ def search_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
     jitted entry point."""
     entry, upper_dc = greedy_upper_batch(graph, Q, params.metric)
     beam_d, beam_id, stats = beam_search_lower_batch(
-        graph, Q, sel_bits, entry, params, sigma_g=sigma_g)
+        graph, Q, sel_bits, entry, params, sigma_g=sigma_g,
+        efs_lanes=efs_lanes)
     k = params.k
     return SearchResult(
         dists=beam_d[:, :k],
@@ -439,15 +473,18 @@ def search_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("params",))
 def search_many(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
-                params: SearchParams, sigma_g=None) -> SearchResult:
+                params: SearchParams, sigma_g=None,
+                efs_lanes=None) -> SearchResult:
     """Full 2-level filtered search for a [B, d] query batch.
 
     Lane-for-lane equivalent to ``search.search`` per query with that
     lane's own semimask (same ids, dists, and stats), at a fraction of
     the vmap path's per-iteration cost. ``sel_bits`` is ``[W]`` (shared)
-    or ``[B, W]`` (per-lane, the mixed-plan serving path).
+    or ``[B, W]`` (per-lane, the mixed-plan serving path); ``efs_lanes``
+    (optional ``int32[B]``) runs each lane at its own efs.
     """
-    return search_lanes(graph, Q, sel_bits, params, sigma_g=sigma_g)
+    return search_lanes(graph, Q, sel_bits, params, sigma_g=sigma_g,
+                        efs_lanes=efs_lanes)
 
 
 # ---------------------------------------------------------------------------
@@ -515,15 +552,30 @@ def engine_refill(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
     return refill_lanes(graph, Q, sel_bits, st, upper_dc, refill, params)
 
 
+@functools.partial(jax.jit, static_argnames=("params",),
+                   donate_argnums=(3, 4))
+def engine_refill_overlap(graph: HnswGraph, Q: jax.Array,
+                          sel_bits: jax.Array, st: _BatchState,
+                          upper_dc: jax.Array, refill: jax.Array,
+                          params: SearchParams
+                          ) -> tuple[_BatchState, jax.Array]:
+    """:func:`engine_refill` with ``st`` and ``upper_dc`` DONATED (the
+    serving tier's overlapped path: refill dispatches in place and the
+    next step chunk chains onto it without a host sync). The caller must
+    replace its state references with the returned ones."""
+    return refill_lanes(graph, Q, sel_bits, st, upper_dc, refill, params)
+
+
 def step_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
                st: _BatchState, params: SearchParams, n_steps: int,
-               sigma_g=None) -> tuple[_BatchState, jax.Array]:
+               sigma_g=None, efs_lanes=None) -> tuple[_BatchState, jax.Array]:
     """Unjitted body of :func:`engine_steps` (shard_map-embeddable)."""
     bsz = Q.shape[0]
     sel2 = bitset.broadcast_lanes(sel_bits, bsz)
     sel2, mode, global_branch = _resolve_branching(
         sel2, params, sigma_g, graph.n, graph.m_l, bsz)
-    lane_cond, body = _loop_fns(graph, Q, sel2, params, mode, global_branch)
+    lane_cond, body = _loop_fns(graph, Q, sel2, params, mode, global_branch,
+                                efs_lanes=efs_lanes)
 
     def cond(c):
         s, i = c
@@ -541,7 +593,7 @@ def step_lanes(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
 @functools.partial(jax.jit, static_argnames=("params", "n_steps"))
 def engine_steps(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
                  st: _BatchState, params: SearchParams, n_steps: int,
-                 sigma_g=None) -> tuple[_BatchState, jax.Array]:
+                 sigma_g=None, efs_lanes=None) -> tuple[_BatchState, jax.Array]:
     """Advance the batch by at most ``n_steps`` loop iterations
     (``n_steps=0``: unbounded -- run to whole-batch convergence, the
     right call when the request queue is empty and there is nothing to
@@ -549,9 +601,29 @@ def engine_steps(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
 
     Returns ``(state, live[B])``; a lane with ``live == False`` has
     converged (or is parked) and is safe to finalize and refill.
+    ``efs_lanes`` (optional ``int32[B]``) steps each lane at its own efs
+    (see :func:`_loop_fns`); it must stay constant for a lane between
+    refills.
     """
     return step_lanes(graph, Q, sel_bits, st, params, n_steps,
-                      sigma_g=sigma_g)
+                      sigma_g=sigma_g, efs_lanes=efs_lanes)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "n_steps"),
+                   donate_argnums=(3,))
+def engine_steps_overlap(graph: HnswGraph, Q: jax.Array, sel_bits: jax.Array,
+                         st: _BatchState, params: SearchParams, n_steps: int,
+                         sigma_g=None, efs_lanes=None
+                         ) -> tuple[_BatchState, jax.Array]:
+    """:func:`engine_steps` with the state buffers DONATED: the input
+    ``st`` is consumed (its buffers are reused for the output state), so
+    the chunk dispatches without a copy and the host can keep working
+    while it runs -- the serving tier's overlapped stepping path
+    (:meth:`repro.serving.lanes.LaneBatch.step_async`). The caller must
+    drop its reference to the input state: reading it after this call
+    raises on a donated buffer."""
+    return step_lanes(graph, Q, sel_bits, st, params, n_steps,
+                      sigma_g=sigma_g, efs_lanes=efs_lanes)
 
 
 def evict_lanes(st: _BatchState, upper_dc: jax.Array, evict: jax.Array
@@ -602,6 +674,17 @@ def engine_evict(st: _BatchState, upper_dc: jax.Array, evict: jax.Array
     No static arguments -- one compiled program per state shape serves
     every params/heuristic combination.
     """
+    return evict_lanes(st, upper_dc, evict)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def engine_evict_overlap(st: _BatchState, upper_dc: jax.Array,
+                         evict: jax.Array) -> tuple[_BatchState, jax.Array]:
+    """:func:`engine_evict` with the state DONATED -- the serving tier's
+    in-place eviction (parks lanes without copying the batch state; safe
+    to dispatch while a donated step chunk is still in flight, the evict
+    simply chains onto it). Shape-generic over flat ``[B, ...]`` and
+    shard-stacked ``[S, B, ...]`` states like :func:`engine_evict`."""
     return evict_lanes(st, upper_dc, evict)
 
 

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict, deque
+from collections import OrderedDict, defaultdict, deque
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -217,6 +217,17 @@ class SearchEngine:
         # in lockstep with latencies_ms (service = exec + prefilter share)
         self.queue_waits_ms: list[float] = []
         self.service_ms: list[float] = []
+        # host-vs-device split of every stepped chunk, summed over drains
+        # (see LaneBatch.timing): host_gap = host work the device waited
+        # for; host_overlap = host work hidden behind an in-flight chunk
+        self.chunk_timing = {"n_chunks": 0, "host_gap_ms": 0.0,
+                             "host_overlap_ms": 0.0, "device_wait_ms": 0.0}
+        # LaneBatch reuse across drains, keyed by the fused program shape:
+        # building one per drain pays parked-state allocation + mesh
+        # placement every time (the dominant per-drain setup cost on
+        # sharded backends). A batch is only reusable when the previous
+        # drain left it clean (all lanes free, no chunk in flight).
+        self._lane_cache: "OrderedDict[Any, LaneBatch]" = OrderedDict()
 
     def _record_latency(self, queue_ms: float, service_ms: float) -> None:
         self.latencies_ms.append(queue_ms + service_ms)
@@ -297,6 +308,26 @@ class SearchEngine:
     def _current_alive(self, backend) -> np.ndarray:
         return resolve_alive(backend.n_shards, self.alive, self.heartbeats)
 
+    def _lanes(self, idx, heuristic: str, k_cap: int, efs_cap: int,
+               bsz: int) -> LaneBatch:
+        """A clean LaneBatch for this fused program shape, reused across
+        drains when possible. A dirty cache entry (a previous drain died
+        with lanes occupied or a chunk in flight) is discarded rather
+        than repaired -- its donated device state is unrecoverable."""
+        key = (id(idx), heuristic, k_cap, efs_cap, bsz)
+        lanes = self._lane_cache.get(key)
+        if lanes is not None and not lanes.step_pending \
+                and not lanes.occupied_count():
+            self._lane_cache.move_to_end(key)
+            lanes.reset_timing()
+            return lanes
+        lanes = LaneBatch(idx, heuristic, k_cap, efs_cap, bsz)
+        self._lane_cache[key] = lanes
+        self._lane_cache.move_to_end(key)
+        while len(self._lane_cache) > 8:     # bound device-state residency
+            self._lane_cache.popitem(last=False)
+        return lanes
+
     def _serve_fused(self, idx, heuristic: str,
                      items: list[tuple[Request, Any]]) -> list[Response]:
         # per-lane k/efs, capped to the batch max: one static program
@@ -304,7 +335,7 @@ class SearchEngine:
         k_cap = max(p.knn.k for _, p in items)
         efs_cap = max(max(p.knn.efs or 2 * p.knn.k for _, p in items), k_cap)
         bsz = _bucket(max(1, min(self.max_batch, len(items))))
-        lanes = LaneBatch(idx, heuristic, k_cap, efs_cap, bsz)
+        lanes = self._lanes(idx, heuristic, k_cap, efs_cap, bsz)
 
         # one prefilter per DISTINCT selection subquery; its wall time is
         # shared only by the requests that carry it
@@ -339,37 +370,50 @@ class SearchEngine:
         pending = deque((r, parts, prepped[j])
                         for j, (r, parts) in enumerate(items))
 
+        bsz = lanes.bsz            # data-axis backends round the batch up
         refill_thr = self.refill_threshold or max(1, bsz // 2)
         responses: list[Response] = []
         done: dict[int, float] = {}    # converged lane -> t_done (state
                                        # stays frozen until flushed)
         n_devsteps = 0
 
-        def flush():
-            """Finalize + emit every converged-but-unemitted lane (one
-            device call for any number of them), freeing their lanes.
-            Sharded backends merge across shards under the CURRENT alive
-            mask; a partial quorum flags the responses degraded."""
+        def collect():
+            """Finalize every converged-but-unemitted lane (one device
+            call for any number of them), free the lanes, and return the
+            raw rows for ``emit``. Sharded backends merge across shards
+            under the CURRENT alive mask; a partial quorum flags the
+            responses degraded. The device sync lives HERE; ``emit`` is
+            pure host work that the driver overlaps with the next
+            in-flight chunk."""
             if not done:
-                return
+                return []
             alive = self._current_alive(lanes.backend)
             degraded = lanes.n_shards > 0 and not alive.all()
             ids, dists = lanes.finalize(alive)
+            rows = []
             for i, t_done in done.items():
                 r, parts, t0 = lanes.meta[i]
+                k_r = parts.knn.k
+                rows.append((r, parts, t0, t_done,
+                             ids[i, :k_r], dists[i, :k_r], degraded))
+                lanes.release(i)
+            done.clear()
+            return rows
+
+        def emit(rows):
+            """Build + record the responses for ``collect``'s rows --
+            host-only, safe to run while a device chunk is in flight."""
+            for r, parts, t0, t_done, ids_i, dists_i, degraded in rows:
                 _, sigma, pf_ms, cnt = sel_info[parts.selection]
                 pf_share = pf_ms / cnt
                 queue_ms = (t0 - r.t_enqueue) * 1e3
                 exec_ms = (t_done - t0) * 1e3
                 self._record_latency(queue_ms, exec_ms + pf_share)
-                k_r = parts.knn.k
                 responses.append(Response(
-                    rid=r.rid, ids=ids[i, :k_r], dists=dists[i, :k_r],
+                    rid=r.rid, ids=ids_i, dists=dists_i,
                     queue_ms=queue_ms, exec_ms=exec_ms,
                     prefilter_ms=pf_share, sigma=float(sigma),
                     degraded=degraded))
-                lanes.release(i)
-            done.clear()
 
         while pending or lanes.occupied_count():
             n_running = lanes.occupied_count() - len(done)
@@ -380,15 +424,21 @@ class SearchEngine:
             # the batch is full, silently degrading continuous scheduling
             # to whole-batch convergence
             n_free = lanes.free_count()
+            rows = []
             if pending and (n_free + len(done) >= refill_thr
                             or n_running == 0):
-                flush()                 # compact converged lanes out ...
+                rows = collect()        # compact converged lanes out ...
                 entries = []            # ... and refill from the queue
                 now = time.perf_counter()
                 while pending and len(entries) < lanes.free_count():
                     r, parts, qrow = pending.popleft()
                     row, sigma, _, _ = sel_info[parts.selection]
-                    entries.append(((r, parts, now), qrow, row, sigma))
+                    # ragged per-lane efs only when the plan NAMES its
+                    # efs; an unset efs keeps the cap-wide beam
+                    efs_r = (min(max(parts.knn.efs, parts.knn.k), efs_cap)
+                             if parts.knn.efs else efs_cap)
+                    entries.append(((r, parts, now), qrow, row, sigma,
+                                    efs_r))
                 lanes.admit(entries)
             elif n_running == 0:
                 # queue empty (a non-empty queue with zero running lanes
@@ -397,9 +447,14 @@ class SearchEngine:
                 break
 
             # with an empty queue there is nothing to refill between
-            # chunks: run the remaining lanes straight to convergence
+            # chunks: run the remaining lanes straight to convergence.
+            # Dispatch FIRST (donated state, async), then do the host-side
+            # response building for the lanes collected above while the
+            # chunk is in flight; sync only on the chunk's liveness.
             n_steps = self.step_iters if pending else 0
-            live_np = lanes.step(n_steps)
+            lanes.step_async(n_steps)
+            emit(rows)
+            live_np = lanes.step_wait()
             n_devsteps += 1
             if self.step_hook is not None:
                 self.step_hook({"step": n_devsteps,
@@ -413,7 +468,9 @@ class SearchEngine:
                 if (lanes.meta[i] is not None and i not in done
                         and not live_np[i]):
                     done[i] = now
-        flush()
+        emit(collect())
+        for key, v in lanes.timing().items():
+            self.chunk_timing[key] += v
         return responses
 
     def _serve_group(self, plan: Plan, reqs: list[Request]) -> list[Response]:
@@ -453,21 +510,28 @@ class SearchEngine:
     def latency_summary(self) -> dict:
         """End-to-end p50/p95/p99 plus the queue-wait vs service-time
         split of the same requests (service = exec + prefilter share;
-        queue = t_dequeue - Request.t_enqueue)."""
+        queue = t_dequeue - Request.t_enqueue). ``chunks`` breaks every
+        continuous-scheduler step chunk into host time the device waited
+        for (``host_gap_ms``), host time hidden behind an in-flight chunk
+        (``host_overlap_ms``), and time blocked on the device
+        (``device_wait_ms``) -- the overlap win made observable."""
         if not self.latencies_ms:
             return {}
         arr = np.asarray(self.latencies_ms)
         qarr = np.asarray(self.queue_waits_ms)
         sarr = np.asarray(self.service_ms)
-        return {"n": len(arr), "p50_ms": float(np.percentile(arr, 50)),
-                "p95_ms": float(np.percentile(arr, 95)),
-                "p99_ms": float(np.percentile(arr, 99)),
-                "mean_ms": float(arr.mean()),
-                "queue_p50_ms": float(np.percentile(qarr, 50)),
-                "queue_p99_ms": float(np.percentile(qarr, 99)),
-                "service_p50_ms": float(np.percentile(sarr, 50)),
-                "service_p95_ms": float(np.percentile(sarr, 95)),
-                "service_p99_ms": float(np.percentile(sarr, 99))}
+        out = {"n": len(arr), "p50_ms": float(np.percentile(arr, 50)),
+               "p95_ms": float(np.percentile(arr, 95)),
+               "p99_ms": float(np.percentile(arr, 99)),
+               "mean_ms": float(arr.mean()),
+               "queue_p50_ms": float(np.percentile(qarr, 50)),
+               "queue_p99_ms": float(np.percentile(qarr, 99)),
+               "service_p50_ms": float(np.percentile(sarr, 50)),
+               "service_p95_ms": float(np.percentile(sarr, 95)),
+               "service_p99_ms": float(np.percentile(sarr, 99))}
+        if self.chunk_timing["n_chunks"]:
+            out["chunks"] = dict(self.chunk_timing)
+        return out
 
 
 def greedy_generate(cfg, params, prompt_tokens: np.ndarray, n_new: int,

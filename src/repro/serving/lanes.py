@@ -22,10 +22,23 @@ machine so the two drivers stay in bitwise lockstep:
 Scheduling policy -- what to admit, when to flush, which lanes are past
 deadline -- stays in the drivers; ``LaneBatch`` owns no policy beyond
 "fill free lanes in ascending order", which both drivers rely on.
+
+Overlapped stepping: ``step_async`` dispatches the next device chunk on
+DONATED state buffers (``engine_steps_overlap`` / the sharded
+``steps_program(donate=True)``) and returns immediately -- the host then
+runs finalize/expire/refill/response work concurrently with the in-flight
+chunk, and ``step_wait`` synchronizes on the per-lane liveness exactly
+once per chunk. ``step`` (dispatch + wait back-to-back) remains the
+synchronous spelling. Because the state buffer is donated, callers must
+never retain references to a pre-step ``st``; ``LaneBatch`` owns the only
+reference and swaps it at dispatch. Finalize/evict/admit issued while a
+chunk is in flight simply queue behind it on the device stream -- results
+are bitwise identical to the synchronous order.
 """
 
 from __future__ import annotations
 
+import time
 from typing import Any, Optional
 
 import numpy as np
@@ -40,6 +53,7 @@ class _FlatLanes:
     unsharded :class:`NavixIndex` (the ``search_batch`` stepping API)."""
 
     n_shards = 0
+    lane_multiple = 1
 
     def __init__(self, idx: NavixIndex, params):
         from repro.core import bitset
@@ -51,13 +65,32 @@ class _FlatLanes:
         return np.asarray(self.idx.full_semimask())            # [W]
 
     def pack_row(self, mask) -> np.ndarray:
-        return np.asarray(self.idx.pack_semimask(mask))        # [W]
+        # host-side pack: one numpy pass per distinct plan instead of an
+        # eager jnp dispatch chain (it dominated the drain wall)
+        from repro.core import bitset
+
+        m = np.asarray(mask)
+        if m.dtype == np.uint32:
+            return m                                           # [W]
+        return bitset.pack_np(m)                               # [W]
 
     def sel_buffer(self, bsz: int) -> np.ndarray:
         return np.zeros((bsz, self._words), np.uint32)
 
     def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
         selh[i] = row
+
+    def place_lanes(self, arr):
+        """Host [B, ...] lane buffer -> device array."""
+        import jax.numpy as jnp
+        return jnp.asarray(arr)
+
+    place_sel = place_lanes
+
+    def place_admit(self, Qh, selh, sigh, efsh, refill):
+        """All five admit-time lane buffers in ONE device transfer."""
+        import jax
+        return jax.device_put((Qh, selh, sigh, efsh, refill))
 
     def parked(self, bsz: int):
         import jax.numpy as jnp
@@ -67,24 +100,28 @@ class _FlatLanes:
                 jnp.zeros((bsz,), jnp.int32))
 
     def refill(self, Qj, selj, st, udc, refill):
+        # donated st/udc: LaneBatch drops its references on return
         from repro.core import search_batch as sb
-        return sb.engine_refill(self.graph, Qj, selj, st, udc, refill,
-                                self.params)
+        return sb.engine_refill_overlap(self.graph, Qj, selj, st, udc,
+                                        refill, self.params)
 
-    def steps(self, Qj, selj, st, n_steps, sigj):
+    def steps(self, Qj, selj, st, n_steps, sigj, efsj):
+        # donated st; dispatch is async -- the caller syncs on `live`
         from repro.core import search_batch as sb
-        return sb.engine_steps(self.graph, Qj, selj, st, self.params,
-                               n_steps, sigma_g=sigj)
+        return sb.engine_steps_overlap(self.graph, Qj, selj, st,
+                                       self.params, n_steps, sigma_g=sigj,
+                                       efs_lanes=efsj)
 
     def finalize(self, st, udc, alive):
         from repro.core import search_batch as sb
-        return sb.engine_finalize(st, udc, self.params)
+        fin = sb.engine_finalize(st, udc, self.params)
+        return fin.ids, fin.dists
 
     def evict(self, st, udc, evict):
         import jax.numpy as jnp
 
         from repro.core import search_batch as sb
-        return sb.engine_evict(st, udc, jnp.asarray(evict))
+        return sb.engine_evict_overlap(st, udc, jnp.asarray(evict))
 
 
 class _ShardLanes:
@@ -97,16 +134,28 @@ class _ShardLanes:
     def __init__(self, sn: ShardedNavix, params):
         self.sn, self.params = sn, params
         self.n_shards = sn.n_shards
-        self._refill = sn.refill_program(params)
-        self._steps = sn.steps_program(params)
-        self._finalize = sn.finalize_program(params)
-        self._evict = sn.evict_program(params)
+        self.lane_multiple = sn.lane_shards
+        # donate=True throughout: LaneBatch owns the only reference to
+        # st/udc and swaps it at every call, so the device writes in place
+        self._refill = sn.refill_program(params, donate=True)
+        self._steps = sn.steps_program(params, donate=True)
+        # beams-only finalize: bitwise-identical merged ids/dists to
+        # finalize_program, minus the stats reduction the drivers discard
+        self._finalize = sn.finalize_beams_program(params)
+        self._evict = sn.evict_program(params, donate=True)
+        # cached NamedShardings: building one per place_* call shows up
+        # in the admit path (mesh-shape lookups per transfer)
+        self._lane_ns: dict = {}
+        self._sel_ns = None
 
     def full_row(self) -> np.ndarray:
         return np.asarray(self.sn.full_semimask())             # [S, W]
 
     def pack_row(self, mask) -> np.ndarray:
-        return np.asarray(self.sn.shard_semimask(mask))        # [S, W]
+        m = np.asarray(mask)
+        if m.dtype == np.uint32:
+            return m                                           # [S, W]
+        return self.sn.shard_semimask_np(m)                    # [S, W]
 
     def sel_buffer(self, bsz: int) -> np.ndarray:
         return np.zeros((self.n_shards, bsz, self.sn.n_words_local),
@@ -115,24 +164,66 @@ class _ShardLanes:
     def set_lane(self, selh: np.ndarray, i: int, row: np.ndarray) -> None:
         selh[:, i] = row
 
+    def _lane_sharding(self, ndim: int):
+        ns = self._lane_ns.get(ndim)
+        if ns is None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            ns = NamedSharding(self.sn.mesh, P(
+                self.sn.data_axis, *([None] * (ndim - 1))))
+            self._lane_ns[ndim] = ns
+        return ns
+
+    def _sel_sharding(self):
+        if self._sel_ns is None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            self._sel_ns = NamedSharding(self.sn.mesh, P(
+                self.sn.model_axis, self.sn.data_axis, None))
+        return self._sel_ns
+
+    def place_lanes(self, arr):
+        """Host [B, ...] lane buffer -> device array split over the data
+        axis -- matching the program in_specs, so steady-state calls
+        never reshard their operands."""
+        import jax
+        return jax.device_put(arr, self._lane_sharding(np.ndim(arr)))
+
+    def place_sel(self, arr):
+        """Host [S, B, W] semimask buffer -> device array on the
+        (model, data) layout the programs expect."""
+        import jax
+        return jax.device_put(arr, self._sel_sharding())
+
+    def place_admit(self, Qh, selh, sigh, efsh, refill):
+        """All five admit-time lane buffers in ONE mesh transfer."""
+        import jax
+        lane1, lane2 = self._lane_sharding(1), self._lane_sharding(2)
+        return jax.device_put(
+            (Qh, selh, sigh, efsh, refill),
+            (lane2, self._sel_sharding(), lane1, lane1, lane1))
+
     def parked(self, bsz: int):
         return self.sn.parked_state(bsz, self.params)
 
     def refill(self, Qj, selj, st, udc, refill):
         return self._refill(self.sn.graphs, Qj, selj, st, udc, refill)
 
-    def steps(self, Qj, selj, st, n_steps, sigj):
+    def steps(self, Qj, selj, st, n_steps, sigj, efsj):
         # sigj unused: each shard's lanes estimate selectivity against
         # their own slice of S (lane-local, shard-local)
-        return self._steps(self.sn.graphs, Qj, selj, st, n_steps)
+        return self._steps(self.sn.graphs, Qj, selj, st, n_steps,
+                           efs_lanes=efsj)
 
     def finalize(self, st, udc, alive):
         import jax.numpy as jnp
-        return self._finalize(st, udc, jnp.asarray(alive))
+        d, ids = self._finalize(st, udc, jnp.asarray(alive))
+        return ids, d
 
     def evict(self, st, udc, evict):
-        import jax.numpy as jnp
-        return self._evict(st, udc, jnp.asarray(evict))
+        return self._evict(st, udc, self.place_lanes(np.asarray(evict)))
 
 
 def make_backend(idx, params):
@@ -154,10 +245,12 @@ class LaneBatch:
 
     def __init__(self, idx, heuristic: str, k_cap: int, efs_cap: int,
                  bsz: int):
-        import jax.numpy as jnp
-
         self.params = idx._params(k_cap, efs_cap, heuristic)
         self.backend = make_backend(idx, self.params)
+        # data-axis backends split the lane dim over lane_multiple
+        # devices; round the batch up so it divides evenly
+        lm = self.backend.lane_multiple
+        bsz = -(-bsz // lm) * lm
         self.bsz = bsz
         self.k_cap, self.efs_cap = k_cap, efs_cap
         dim = (idx.dim if isinstance(idx, ShardedNavix)
@@ -165,11 +258,23 @@ class LaneBatch:
         self.Qh = np.zeros((bsz, dim), np.float32)
         self.selh = self.backend.sel_buffer(bsz)
         self.sigh = np.ones((bsz,), np.float32)
+        # per-lane efs: free/uniform lanes sit at the cap (the masked
+        # beam tail is then empty, bitwise-identical to no masking)
+        self.efsh = np.full((bsz,), efs_cap, np.int32)
         self.meta: list[Optional[Any]] = [None] * bsz
         self.st, self.udc = self.backend.parked(bsz)
-        self.Qj = jnp.asarray(self.Qh)
-        self.selj = jnp.asarray(self.selh)
-        self.sigj = jnp.asarray(self.sigh)
+        self.Qj = self.backend.place_lanes(self.Qh)
+        self.selj = self.backend.place_sel(self.selh)
+        self.sigj = self.backend.place_lanes(self.sigh)
+        self.efsj = self.backend.place_lanes(self.efsh)
+        # overlapped-stepping bookkeeping (host-vs-device observability)
+        self._live_pending = None          # in-flight chunk's live[B]
+        self._t_dispatched = 0.0
+        self._t_wait_end = time.perf_counter()
+        self.n_chunks = 0
+        self.host_gap_ms = 0.0      # host work NOT overlapped (wait->dispatch)
+        self.host_overlap_ms = 0.0  # host work overlapped (dispatch->wait)
+        self.device_wait_ms = 0.0   # blocked on the device inside step_wait
 
     @property
     def n_shards(self) -> int:
@@ -193,11 +298,11 @@ class LaneBatch:
     # -- device calls ---------------------------------------------------
     def admit(self, entries) -> list[int]:
         """Fill free lanes (ascending) from ``entries`` -- an iterable of
-        ``(meta, qrow, sel_row, sigma)`` -- and run ONE device refill for
-        all of them. Returns the lane indices used; raises if more
-        entries arrive than there are free lanes."""
-        import jax.numpy as jnp
-
+        ``(meta, qrow, sel_row, sigma, efs)`` -- and run ONE device refill
+        for all of them (``efs`` is clamped to ``[1, efs_cap]``; lanes
+        below the cap skip the cap-wide beam-tail maintenance). Returns
+        the lane indices used; raises if more entries arrive than there
+        are free lanes."""
         refill = np.zeros(self.bsz, bool)
         used: list[int] = []
         it = iter(entries)
@@ -207,10 +312,11 @@ class LaneBatch:
                 break
             if self.meta[i] is not None:
                 continue
-            meta, qrow, row, sigma = entry
+            meta, qrow, row, sigma, efs = entry
             self.Qh[i] = qrow
             self.backend.set_lane(self.selh, i, row)
             self.sigh[i] = sigma
+            self.efsh[i] = min(max(int(efs), 1), self.efs_cap)
             self.meta[i] = meta
             refill[i] = True
             used.append(i)
@@ -220,28 +326,81 @@ class LaneBatch:
                              "admission to LaneBatch.free_count()")
         if not used:
             return used
-        self.Qj = jnp.asarray(self.Qh)
-        self.selj = jnp.asarray(self.selh)
-        self.sigj = jnp.asarray(self.sigh)
+        (self.Qj, self.selj, self.sigj, self.efsj,
+         refill_j) = self.backend.place_admit(
+            self.Qh, self.selh, self.sigh, self.efsh, refill)
         self.st, self.udc = self.backend.refill(
-            self.Qj, self.selj, self.st, self.udc, jnp.asarray(refill))
+            self.Qj, self.selj, self.st, self.udc, refill_j)
         return used
+
+    @property
+    def step_pending(self) -> bool:
+        """True while a dispatched device chunk has not been waited on."""
+        return self._live_pending is not None
+
+    def step_async(self, n_steps: int) -> None:
+        """Dispatch the next device chunk (at most ``n_steps`` loop
+        iterations; 0 = run to whole-batch convergence) WITHOUT blocking.
+        The state buffers are donated to the chunk, so the pre-dispatch
+        ``st`` is dead the moment this returns; host-side work between
+        this call and :meth:`step_wait` overlaps the device."""
+        if self._live_pending is not None:
+            raise RuntimeError("a device chunk is already in flight; "
+                               "step_wait() it first")
+        t0 = time.perf_counter()
+        self.host_gap_ms += (t0 - self._t_wait_end) * 1e3
+        self.st, self._live_pending = self.backend.steps(
+            self.Qj, self.selj, self.st, n_steps, self.sigj, self.efsj)
+        self._t_dispatched = time.perf_counter()
+
+    def step_wait(self) -> np.ndarray:
+        """Synchronize on the in-flight chunk; returns live bool[B].
+        The ONE host sync per chunk lives here."""
+        if self._live_pending is None:
+            raise RuntimeError("no device chunk in flight; step_async() "
+                               "first")
+        t1 = time.perf_counter()
+        self.host_overlap_ms += (t1 - self._t_dispatched) * 1e3
+        # navilint: sync-ok chunk boundary -- the host scheduler branches on liveness between device chunks (one sync per chunk by design)
+        live = np.asarray(self._live_pending)
+        self._live_pending = None
+        t2 = time.perf_counter()
+        self.device_wait_ms += (t2 - t1) * 1e3
+        self._t_wait_end = t2
+        self.n_chunks += 1
+        return live
 
     def step(self, n_steps: int) -> np.ndarray:
         """Advance every lane by at most ``n_steps`` loop iterations
-        (0 = run to whole-batch convergence); returns live bool[B]."""
-        self.st, live = self.backend.steps(self.Qj, self.selj, self.st,
-                                           n_steps, self.sigj)
-        # navilint: sync-ok chunk boundary -- the host scheduler branches on liveness between device chunks (one sync per chunk by design)
-        return np.asarray(live)
+        (0 = run to whole-batch convergence); returns live bool[B]. The
+        synchronous spelling of ``step_async`` + ``step_wait``."""
+        self.step_async(n_steps)
+        return self.step_wait()
+
+    def timing(self) -> dict:
+        """Cumulative host-vs-device split over every stepped chunk."""
+        return {"n_chunks": self.n_chunks,
+                "host_gap_ms": self.host_gap_ms,
+                "host_overlap_ms": self.host_overlap_ms,
+                "device_wait_ms": self.device_wait_ms}
+
+    def reset_timing(self) -> None:
+        """Zero the chunk counters and re-anchor the gap clock. A reused
+        batch (the closed-queue engine keeps LaneBatches across drains --
+        parked-state allocation + mesh placement is the dominant per-drain
+        setup cost on sharded backends) would otherwise charge the idle
+        time between drains as host_gap."""
+        self.n_chunks = 0
+        self.host_gap_ms = self.host_overlap_ms = self.device_wait_ms = 0.0
+        self._t_wait_end = time.perf_counter()
 
     def finalize(self, alive) -> tuple[np.ndarray, np.ndarray]:
         """Extract every lane's current beam under ``alive`` (sharded
         backends merge across shards; a flat backend ignores it).
         Returns host ``(ids[B, efs], dists[B, efs])``."""
-        fin = self.backend.finalize(self.st, self.udc, alive)
+        ids, dists = self.backend.finalize(self.st, self.udc, alive)
         # navilint: sync-ok THE declared finalize boundary -- results cross to host exactly once per finalize
-        return np.asarray(fin.ids), np.asarray(fin.dists)
+        return np.asarray(ids), np.asarray(dists)
 
     def evict(self, lane_ids) -> None:
         """Park the given lanes (one device call) and free them. Parked

@@ -7,14 +7,17 @@ submitted up front, loop until empty), ``SearchService`` runs the same
 advances in ``step_iters``-sized chunks, and between chunks it
 
 1. expires queue items whose deadline already passed (they never get a
-   lane; their futures resolve to a ``timeout`` response),
-2. evicts in-flight lanes past their deadline -- finalizing FIRST so a
+   lane; their futures resolve to a ``timeout`` response) -- host-only
+   work that OVERLAPS the chunk still in flight from the previous tick,
+2. waits on that chunk, then finalizes converged lanes (``ok``) and
+   evicts in-flight lanes past their deadline -- finalizing FIRST so a
    beam that already covers k valid candidates is salvaged as a
    ``"partial"`` best-effort answer; otherwise the response is
    ``"timeout"`` with all ids ``-1`` (never a truncated id list),
 3. admits new requests from the :class:`SubmissionQueue` into freed
    lanes (deadline-ordered, selectivity-binned; see ``queues.py``),
-4. steps the batch one chunk and emits lanes that converged.
+4. dispatches the next chunk asynchronously on donated state buffers
+   and resolves the finalized futures while it runs.
 
 Shard liveness is heartbeat-derived (:class:`HeartbeatMonitor`): the
 alive mask is recomputed from per-shard heartbeat staleness at every
@@ -60,6 +63,10 @@ class _Pending:
     rid: int
     fut: Future
     k: int
+    efs: int                     # this request's OWN efs (<= the service
+                                 # cap): its lane's beam tail beyond efs
+                                 # is masked, so small-efs requests skip
+                                 # cap-wide beam maintenance
     sigma: float
     pf_ms: float                 # this submission's prefilter charge (the
                                  # first carrier of a Q_S pays its wall
@@ -164,11 +171,16 @@ class SearchService:
             raise ValueError(f"plan heuristic {parts.knn.heuristic!r} != "
                              f"service program {self.heuristic!r}")
         k_r = parts.knn.k
-        efs_r = parts.knn.efs or 2 * k_r
+        efs_r = max(parts.knn.efs or 2 * k_r, k_r)
         if k_r > self.k_cap or efs_r > self.efs_cap:
             raise ValueError(f"k={k_r}/efs={efs_r} exceed the service "
                              f"program caps (k_cap={self.k_cap}, "
                              f"efs_cap={self.efs_cap})")
+        # ragged per-lane efs: a plan that names its efs gets exactly
+        # that beam width (its lane skips cap-wide beam maintenance); an
+        # unset efs keeps the historical cap-wide beam
+        efs_lane = (min(max(parts.knn.efs, k_r), self.efs_cap)
+                    if parts.knn.efs else self.efs_cap)
         # prefilter + query prep in the SUBMITTER's thread (jit dispatch
         # is thread-safe): the device loop never blocks on a prefilter,
         # and the queue can bin by the resulting sigma. One prefilter per
@@ -198,8 +210,8 @@ class SearchService:
         now = self.clock()
         ddl_s = deadline_s if deadline_s is not None \
             else self.default_deadline_s
-        pend = _Pending(rid=rid, fut=Future(), k=k_r, sigma=float(sigma),
-                        pf_ms=pf_ms,
+        pend = _Pending(rid=rid, fut=Future(), k=k_r, efs=efs_lane,
+                        sigma=float(sigma), pf_ms=pf_ms,
                         deadline=None if ddl_s is None else now + ddl_s,
                         t_enqueue=now, qrow=qrow, sel_row=row)
         self.queue.put(sigma, pend.deadline, pend,
@@ -247,47 +259,79 @@ class SearchService:
             degraded=False, status="timeout"))
 
     def _tick(self, now: Optional[float] = None) -> bool:
-        """One service-loop iteration: expire -> evict -> admit -> step.
-        Returns False when there was nothing to do (the thread driver
-        then parks on the queue). Call directly for deterministic
-        single-threaded tests."""
+        """One service-loop iteration: expire -> wait on the previous
+        chunk -> finalize (converged + overdue) -> admit -> dispatch the
+        next chunk -> resolve futures. Returns False when there was
+        nothing to do (the thread driver then parks on the queue). Call
+        directly for deterministic single-threaded tests.
+
+        Overlapped stepping: the chunk dispatched at the END of each tick
+        (donated state, async) is waited on at the TOP of the next, so
+        queue expiry overlaps the in-flight chunk and future resolution
+        overlaps the next one. A lane that both converged in the chunk
+        and passed its deadline while in flight resolves ``ok`` --
+        convergence takes precedence, matching the synchronous order
+        where the step emitted it before the deadline check could run.
+        """
         now = self.clock() if now is None else now
         worked = False
 
         # 1. queue-side expiry: deadline passed before a lane freed up
+        # (host-only -- runs while the previous chunk is still in flight)
         for it in self.queue.expire(now):
             self._emit_timeout(it.meta, now)
             worked = True
 
-        # 2. lane-side deadline eviction. Finalize FIRST: a beam that
-        # already holds k valid candidates is a usable best-effort
-        # answer ("partial"); anything less resolves to "timeout" with
-        # ALL ids -1 -- a truncated list would silently read as a full
-        # top-k. Evicted lanes park on device (live=False) so the next
-        # admit reuses them.
+        # 2. synchronize on the chunk dispatched last tick (the ONE
+        # device sync per tick)
+        live = self.lanes.step_wait() if self.lanes.step_pending else None
+        t_done = self.clock()
+
+        # 3. one finalize covers both converged and overdue lanes.
+        # Finalize FIRST for overdue lanes: a beam that already holds k
+        # valid candidates is a usable best-effort answer ("partial");
+        # anything less resolves to "timeout" with ALL ids -1 -- a
+        # truncated list would silently read as a full top-k. Evicted
+        # lanes park on device (live=False) so the next admit reuses
+        # them. Responses are built here but resolved AFTER the next
+        # chunk is dispatched (step 6).
+        conv = ([] if live is None else
+                [i for i in self.lanes.occupied() if not live[i]])
         overdue = [i for i in self.lanes.occupied()
-                   if self.lanes.meta[i].deadline is not None
+                   if i not in conv
+                   and self.lanes.meta[i].deadline is not None
                    and self.lanes.meta[i].deadline < now]
-        if overdue:
+        rows: list[tuple] = []
+        if conv or overdue:
             alive = self._alive()
             degraded = self.lanes.n_shards > 0 and not alive.all()
             ids, dists = self.lanes.finalize(alive)
+            for i in conv:
+                pend = self.lanes.meta[i]
+                rows.append((pend, Response(
+                    rid=pend.rid, ids=ids[i, :pend.k],
+                    dists=dists[i, :pend.k],
+                    queue_ms=(pend.t_start - pend.t_enqueue) * 1e3,
+                    exec_ms=(t_done - pend.t_start) * 1e3,
+                    prefilter_ms=pend.pf_ms, sigma=pend.sigma,
+                    degraded=degraded, status="ok")))
+                self.lanes.release(i)
             for i in overdue:
                 pend = self.lanes.meta[i]
                 got = ids[i, :pend.k]
                 if (got >= 0).all():
-                    self._resolve(pend, Response(
+                    rows.append((pend, Response(
                         rid=pend.rid, ids=got, dists=dists[i, :pend.k],
                         queue_ms=(pend.t_start - pend.t_enqueue) * 1e3,
                         exec_ms=(now - pend.t_start) * 1e3,
                         prefilter_ms=pend.pf_ms, sigma=pend.sigma,
-                        degraded=degraded, status="partial"))
+                        degraded=degraded, status="partial")))
                 else:
-                    self._emit_timeout(pend, now)
+                    rows.append((pend, None))    # timeout, built in step 6
             self.lanes.evict(overdue)
             worked = True
 
-        # 3. admit from the queue into free lanes (the running lanes'
+        # 4. admit from the queue into free lanes (the running lanes'
         # median sigma anchors the selectivity bin, keeping the fused
         # batch regime-coherent)
         n_free = self.lanes.free_count()
@@ -303,32 +347,24 @@ class SearchService:
                     pend = it.meta
                     pend.t_start = now
                     entries.append((pend, pend.qrow, pend.sel_row,
-                                    pend.sigma))
+                                    pend.sigma, pend.efs))
                 self.lanes.admit(entries)
                 worked = True
 
-        # 4. one step chunk + emit converged lanes. Always chunked
-        # (never run-to-convergence): a live loop must return to the
-        # queue between chunks.
+        # 5. dispatch the next chunk (async, donated state). Always
+        # chunked (never run-to-convergence): a live loop must return to
+        # the queue between chunks.
         if self.lanes.occupied_count():
-            live = self.lanes.step(self.step_iters)
-            t_done = self.clock()
-            conv = [i for i in self.lanes.occupied() if not live[i]]
-            if conv:
-                alive = self._alive()
-                degraded = self.lanes.n_shards > 0 and not alive.all()
-                ids, dists = self.lanes.finalize(alive)
-                for i in conv:
-                    pend = self.lanes.meta[i]
-                    self._resolve(pend, Response(
-                        rid=pend.rid, ids=ids[i, :pend.k],
-                        dists=dists[i, :pend.k],
-                        queue_ms=(pend.t_start - pend.t_enqueue) * 1e3,
-                        exec_ms=(t_done - pend.t_start) * 1e3,
-                        prefilter_ms=pend.pf_ms, sigma=pend.sigma,
-                        degraded=degraded, status="ok"))
-                    self.lanes.release(i)
+            self.lanes.step_async(self.step_iters)
             worked = True
+
+        # 6. resolve futures -- host-only, overlapped with the chunk
+        # dispatched above (Future callbacks run in this thread)
+        for pend, resp in rows:
+            if resp is None:
+                self._emit_timeout(pend, now)
+            else:
+                self._resolve(pend, resp)
         return worked
 
     # -- lifecycle ----------------------------------------------------------
@@ -404,10 +440,14 @@ class SearchService:
     # -- observability ------------------------------------------------------
     def gauges(self) -> dict:
         """Live service gauges: queue depth/backpressure state, in-flight
-        lanes, completion counters, and rolling p50/p99 latency."""
+        lanes, completion counters, rolling p50/p99 latency, and the
+        cumulative host-vs-device chunk split (``chunks``: host work the
+        device waited for vs host work hidden behind in-flight chunks vs
+        time blocked on the device)."""
         g = {"queue": self.queue.gauges(),
              "in_flight": self.lanes.occupied_count(),
-             "lanes": self.lanes.bsz}
+             "lanes": self.lanes.bsz,
+             "chunks": self.lanes.timing()}
         with self._lat_lock:
             g.update(submitted=self.n_submitted, done=self.n_done,
                      timeouts=self.n_timeout, partials=self.n_partial)

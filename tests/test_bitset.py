@@ -31,6 +31,19 @@ def test_test_bits_with_padding():
         got, [True, False, True, True, True, True, True, False, False])
 
 
+@given(st.integers(1, 3), st.integers(1, 300), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_np_bitwise_matches_pack(ndim, n, seed):
+    """Host-side pack is bit-identical to the jnp pack over any leading
+    dims (the serving tier relies on this; the deterministic must-run
+    copy lives in tests/test_overlap.py)."""
+    rng = np.random.default_rng(seed)
+    shape = (2,) * (ndim - 1) + (n,)
+    mask = rng.random(shape) < 0.4
+    np.testing.assert_array_equal(
+        bitset.pack_np(mask), np.asarray(bitset.pack(jnp.asarray(mask))))
+
+
 @given(st.integers(10, 200), st.integers(0, 2**31 - 1))
 @settings(max_examples=25, deadline=None)
 def test_set_bits_matches_numpy(n, seed):

@@ -1,0 +1,348 @@
+"""Overlapped stepping, data-axis lane parallelism, and ragged efs.
+
+The PR-8 contract, tested at three layers:
+
+* ``LaneBatch``: work issued while a donated chunk is in flight
+  (finalize / evict / admit) queues behind it on the device stream and
+  is bitwise identical to the synchronous order; the async state machine
+  rejects double dispatch and waits without a dispatch.
+* ``SearchEngine``: the overlapped continuous scheduler returns exactly
+  the grouped (one-shot ``NavixDB.execute``) scheduler's answers and the
+  one-shot ``search_many`` reference, for the flat index and for BOTH
+  sharded layouts -- the ``(1, S)`` model-axis index split and the
+  ``(S, 1)`` data-axis lane split -- at S in {1, 2, 4}, with per-plan
+  explicit efs exercising the ragged beam-tail masking.
+* ``SearchService``: a heartbeat flipping to stale while a donated chunk
+  is in flight degrades every response finalized afterwards, bitwise
+  equal to the alive-restricted per-shard oracle.
+
+S > 1 cases need host devices (CI runs tier-1 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api.db import NavixDB
+from repro.core import bitset
+from repro.core.distributed import ShardedNavix, per_shard_reference
+from repro.core.navix import NavixConfig
+from repro.query.operators import Filter, KnnSearch, NodeScan
+from repro.serving.engine import SearchEngine
+from repro.serving.lanes import LaneBatch
+from repro.storage.columnar import GraphStore
+
+K, EFS = 6, 24
+
+
+def _need(s):
+    return pytest.mark.skipif(
+        len(jax.devices()) < s,
+        reason=f"needs {s} host devices "
+               f"(XLA_FLAGS=--xla_force_host_platform_device_count={s})")
+
+
+@pytest.fixture(scope="module")
+def data_env(shard_env):
+    """Memoized ``(S, 1)`` data-axis builds over the shard_env dataset
+    (same vectors and queries, so references are shared)."""
+    from repro.data.synthetic import gaussian_mixture
+    X, qs, _ = shard_env
+    cfg = NavixConfig(m_u=8, ef_construction=48, metric="l2", seed=0)
+    built = {}
+
+    def factory(s: int) -> ShardedNavix:
+        if s not in built:
+            mesh = jax.make_mesh((s, 1), ("data", "model"))
+            built[s] = ShardedNavix.build(X, cfg, mesh)
+        return built[s]
+
+    return X, qs, factory
+
+
+def _engine(idx, n, **kw):
+    store = GraphStore()
+    store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+    return SearchEngine(index=idx, store=store, **kw)
+
+
+def _cut_plan(cut, k=K, efs=0):
+    return KnnSearch(child=Filter(NodeScan("Chunk"), "cID", "<", value=cut),
+                     k=k, efs=efs)
+
+
+# -- host pack (the drain-wall fix) ------------------------------------------
+
+
+def test_pack_np_bitwise_matches_pack():
+    """The serving tier packs semimasks on the host; the numpy pack must
+    stay bit-identical to the jnp layout for every width class (full
+    words, ragged tails, leading dims). Deterministic must-run copy of
+    the property test in tests/test_bitset.py."""
+    rng = np.random.default_rng(0)
+    for n in (1, 31, 32, 33, 64, 100, 640):
+        for shape in ((n,), (3, n), (2, 3, n)):
+            mask = rng.random(shape) < 0.4
+            np.testing.assert_array_equal(
+                bitset.pack_np(mask),
+                np.asarray(bitset.pack(jax.numpy.asarray(mask))),
+                err_msg=f"n={n} shape={shape}")
+
+
+# -- LaneBatch: the overlapped state machine ---------------------------------
+
+
+def _admit_entries(idx, queries, cuts, efs_each):
+    n = idx.graph.n
+    prepped = np.asarray(idx._prep_query(
+        np.stack([np.asarray(q, np.float32) for q in queries])), np.float32)
+    entries = []
+    for j, cut in enumerate(cuts):
+        mask = np.arange(n) < cut
+        row = bitset.pack_np(mask)
+        entries.append((("req", j), prepped[j], row, cut / n, efs_each[j]))
+    return entries
+
+
+def test_work_issued_midflight_equals_synchronous_order(index, queries):
+    """finalize / evict / admit issued BETWEEN step_async and step_wait
+    queue behind the in-flight donated chunk -- results are bitwise the
+    synchronous (step -> finalize -> evict -> admit) order."""
+    n = index.graph.n
+    cuts = [n // 5, n // 2, n, n // 3]
+    entries = _admit_entries(index, queries[:4], cuts, [EFS] * 4)
+    alive = np.ones(1, bool)
+
+    a = LaneBatch(index, "adaptive_local", K, EFS, bsz=4)
+    b = LaneBatch(index, "adaptive_local", K, EFS, bsz=4)
+    a.admit(list(entries))
+    b.admit(list(entries))
+
+    # overlapped: dispatch, then finalize + evict + admit mid-flight
+    a.step_async(3)
+    assert a.step_pending
+    ids_a, d_a = a.finalize(alive)           # queues behind the chunk
+    a.evict([2])
+    fresh = _admit_entries(index, queries[4:5], [n // 4], [EFS])
+    assert a.admit(list(fresh)) == [2]
+    live_a = a.step_wait()
+
+    # synchronous: wait first, then the same host work in the same order
+    live_b = b.step(3)
+    ids_b, d_b = b.finalize(alive)
+    b.evict([2])
+    assert b.admit(list(fresh)) == [2]
+
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(d_a, d_b)
+    np.testing.assert_array_equal(live_a, live_b)
+
+    # run both to convergence: identical terminal beams
+    a.step(0)
+    b.step(0)
+    fin_a = a.finalize(alive)
+    fin_b = b.finalize(alive)
+    np.testing.assert_array_equal(fin_a[0], fin_b[0])
+    np.testing.assert_array_equal(fin_a[1], fin_b[1])
+    # the evicted-then-readmitted lane answered the NEW request
+    single = index.search(queries[4], k=K, efs=EFS,
+                          semimask=np.arange(n) < n // 4)
+    np.testing.assert_array_equal(fin_a[0][2][:K], np.asarray(single.ids))
+
+
+def test_step_async_state_machine(index, queries):
+    lanes = LaneBatch(index, "adaptive_local", K, EFS, bsz=2)
+    with pytest.raises(RuntimeError, match="no device chunk"):
+        lanes.step_wait()
+    lanes.admit(_admit_entries(index, queries[:1],
+                               [index.graph.n // 2], [EFS]))
+    lanes.step_async(2)
+    with pytest.raises(RuntimeError, match="in flight"):
+        lanes.step_async(2)
+    assert lanes.step_pending
+    lanes.step_wait()
+    assert not lanes.step_pending
+    with pytest.raises(RuntimeError, match="no device chunk"):
+        lanes.step_wait()
+    t = lanes.timing()
+    assert t["n_chunks"] == 1
+    assert all(k in t for k in ("host_gap_ms", "host_overlap_ms",
+                                "device_wait_ms"))
+    lanes.reset_timing()
+    assert lanes.timing()["n_chunks"] == 0
+
+
+@pytest.mark.parametrize("n_shards", [pytest.param(2, marks=_need(2))])
+def test_data_axis_lane_rounding_and_divisibility(data_env, n_shards):
+    """A data-axis backend rounds the batch up to a lane_shards multiple;
+    the one-shot path rejects indivisible batches outright."""
+    X, qs, factory = data_env
+    sn = factory(n_shards)
+    assert sn.lane_shards == n_shards and sn.n_shards == 1
+    lanes = LaneBatch(sn, "adaptive_local", K, EFS, bsz=3)
+    assert lanes.bsz == 4, "batch must round up to a lane_shards multiple"
+    with pytest.raises(ValueError, match="divisible"):
+        sn.search_many(qs[:3], k=K, efs=EFS)
+
+
+# -- engine: overlapped continuous == grouped one-shot, every layout ---------
+
+LAYOUTS = [pytest.param("data", 1),
+           pytest.param("data", 2, marks=_need(2)),
+           pytest.param("data", 4, marks=_need(4)),
+           pytest.param("model", 2, marks=_need(2)),
+           pytest.param("model", 4, marks=_need(4))]
+
+
+@pytest.mark.parametrize("layout,n_shards", LAYOUTS)
+def test_continuous_overlap_matches_grouped_and_oracle(
+        shard_env, data_env, layout, n_shards):
+    """The overlapped continuous scheduler vs the grouped one-shot path
+    vs the one-shot ``search_many`` reference, with per-plan EXPLICIT efs
+    (distinct per request -> ragged beam tails): all three bitwise equal
+    on both sharded layouts at S in {1, 2, 4}."""
+    X, qs, model_factory = shard_env
+    _, _, data_factory = data_env
+    sn = data_factory(n_shards) if layout == "data" \
+        else model_factory(n_shards)
+    n = sn.n_total
+    cuts = [n // 4, n // 2, n, n // 3, n // 5, 2 * n // 3, n // 8, n]
+    efss = [12, 18, EFS, 12, EFS, 18, 15, EFS]
+    plans = [_cut_plan(c, k=K, efs=e) for c, e in zip(cuts, efss)]
+    results = {}
+    for sched in ("continuous", "grouped"):
+        eng = _engine(sn, n, efs=EFS, max_batch=4, scheduler=sched,
+                      step_iters=3, refill_threshold=1)
+        rids = [eng.submit(qs[j % len(qs)], plan=plans[j], k=K)
+                for j in range(len(plans))]
+        by = {r.rid: r for r in eng.drain()}
+        assert sorted(by) == sorted(rids)
+        results[sched] = [by[rid] for rid in rids]
+    for j, (a, b) in enumerate(zip(results["continuous"],
+                                   results["grouped"])):
+        np.testing.assert_array_equal(a.ids, b.ids,
+                                      err_msg=f"req {j} ({layout}, "
+                                              f"S={n_shards})")
+        np.testing.assert_array_equal(a.dists, b.dists)
+        assert not a.degraded and not b.degraded
+        mask = np.arange(n) < cuts[j]
+        ref = sn.search_many(qs[j % len(qs)], semimask=mask, k=K,
+                             efs=efss[j])
+        np.testing.assert_array_equal(a.ids, np.asarray(ref.ids)[0])
+        np.testing.assert_array_equal(a.dists, np.asarray(ref.dists)[0])
+
+
+def test_ragged_efs_explicit_vs_unset_policy(index, queries):
+    """Only a plan that NAMES its efs gets the ragged (masked-tail) beam:
+    explicit-efs responses equal the single-query search at that efs,
+    unset-efs responses equal the search at the batch cap."""
+    n = index.graph.n
+    eng = _engine(index, n, efs=0, max_batch=8, scheduler="continuous",
+                  step_iters=4)
+    explicit = [(n // 2, 12), (n // 3, 30), (n, 16)]
+    plans = [_cut_plan(c, k=K, efs=e) for c, e in explicit]
+    # unset efs (KnnSearch.efs == 0): keeps the cap-wide beam
+    plans.append(_cut_plan(n // 4, k=K, efs=0))
+    rids = [eng.submit(queries[j], plan=p, k=K)
+            for j, p in enumerate(plans)]
+    by = {r.rid: r for r in eng.drain()}
+    efs_cap = max(30, 2 * K)
+    for j, (cut, efs) in enumerate(explicit):
+        single = index.search(queries[j], k=K, efs=efs,
+                              semimask=np.arange(n) < cut)
+        np.testing.assert_array_equal(by[rids[j]].ids,
+                                      np.asarray(single.ids),
+                                      err_msg=f"explicit efs={efs}")
+        np.testing.assert_array_equal(by[rids[j]].dists,
+                                      np.asarray(single.dists))
+    single = index.search(queries[3], k=K, efs=efs_cap,
+                          semimask=np.arange(n) < n // 4)
+    np.testing.assert_array_equal(by[rids[3]].ids, np.asarray(single.ids),
+                                  err_msg="unset efs must run at the cap")
+
+
+# -- observability + LaneBatch reuse across drains ---------------------------
+
+
+def test_chunk_timing_lands_in_latency_summary(index, queries):
+    n = index.graph.n
+    eng = _engine(index, n, efs=EFS, max_batch=4, scheduler="continuous",
+                  step_iters=2)
+    for j in range(6):
+        eng.submit(queries[j], plan=_cut_plan(n // (j + 2)), k=K)
+    eng.drain()
+    s = eng.latency_summary()
+    ch = s["chunks"]
+    assert ch["n_chunks"] > 0
+    for key in ("host_gap_ms", "host_overlap_ms", "device_wait_ms"):
+        assert ch[key] >= 0.0
+    # a second drain REUSES the LaneBatch (one cache entry) and keeps
+    # accumulating engine-level chunk totals
+    assert len(eng._lane_cache) == 1
+    first_chunks = ch["n_chunks"]
+    for j in range(6):
+        eng.submit(queries[j], plan=_cut_plan(n // (j + 2)), k=K)
+    eng.drain()
+    assert len(eng._lane_cache) == 1, "same program shape must reuse"
+    assert eng.latency_summary()["chunks"]["n_chunks"] > first_chunks
+
+
+# -- service: heartbeat flip while a donated chunk is in flight --------------
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.mark.parametrize("n_shards", [pytest.param(2, marks=_need(2))])
+def test_heartbeat_flip_while_chunk_in_flight(shard_env, n_shards):
+    """The service leaves a donated chunk in flight between ticks; a
+    heartbeat aging out in that window degrades every response finalized
+    afterwards, bitwise the alive-restricted per-shard oracle."""
+    from repro.serving import HeartbeatMonitor, SearchService
+
+    X, qs, factory = shard_env
+    sn = factory(n_shards)
+    n = sn.n_total
+    store = GraphStore()
+    store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+    db = NavixDB(store)
+    db.register_index("default", sn)
+    clk = FakeClock(0.0)
+    hb = HeartbeatMonitor(n_shards, stale_after=2.0, clock=clk)
+    svc = SearchService(db, k_cap=K, efs_cap=EFS, max_batch=4,
+                        step_iters=2, heartbeats=hb)
+    cuts = [n // 3, n // 2, n, n // 5]
+    futs = [svc.submit(qs[j], plan=_cut_plan(cuts[j]), k=K)
+            for j in range(4)]
+    svc._tick()                      # admit + dispatch; nothing finalized
+    assert svc.lanes.step_pending, "a donated chunk must be in flight"
+    hb.suppress(1)                   # shard 1 goes silent mid-chunk
+    clk.t = 10.0
+    hb.beat(0)
+    for _ in range(200):
+        if all(f.done() for f in futs):
+            break
+        svc._tick()
+    alive = np.array([True, False])
+    params = sn._params(K, EFS, "adaptive_local")
+    masks = np.stack([np.arange(n) < c for c in cuts])
+    ref_d, ref_i, _ = per_shard_reference(sn, qs[:4], masks, params,
+                                          alive=alive)
+    for j, f in enumerate(futs):
+        r = f.result(timeout=0)
+        assert r.status == "ok" and r.degraded, \
+            "every lane finalized after the flip must be degraded"
+        np.testing.assert_array_equal(np.asarray(r.ids), ref_i[j])
+        np.testing.assert_array_equal(np.asarray(r.dists), ref_d[j])
+        ids = np.asarray(r.ids)
+        assert (ids[ids >= 0] // sn.n_local != 1).all(), \
+            "dead shard leaked ids"
+    g = svc.gauges()
+    assert g["chunks"]["n_chunks"] > 0
+    svc.shutdown()
