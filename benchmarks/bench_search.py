@@ -10,10 +10,17 @@ Claim gated by validate(): the batched engine's QPS at B=32 is >= 1.5x
 the vmap path (>= 1.0x sanity floor in REPRO_BENCH_QUICK mode, where the
 problem is too small for the margin to be stable), and -- since the
 engines are lane-for-lane equivalent -- identical recall.
+
+A second, larger-n arm (``_run_quantized``) benches the int8-resident
+store against the f32 engine and gates the residency claims: resident
+vector bytes <= 0.30x f32, recall@k within 0.02 after the ExactTier
+re-rank, and zero steady-state compiles at off-bucket batch sizes.
+Its payload lands under the ``"quantized"`` key of the same JSON.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import time
@@ -41,6 +48,84 @@ SPEEDUP_AT_B = 32
 SPEEDUP_FLOOR = 1.0 if common.QUICK else 1.5
 
 _ENGINES = {"vmap": search_batch, "batched": search_many}
+
+# quantized-resident arm: 4x the main bench size (the capacity story only
+# shows at scale), one bucketed batch size, plus off-bucket batch sizes
+# that must compile NOTHING once the bucket is warm
+QUANT_B = 32
+QUANT_OFF_BUCKET = (17, 24)
+BYTES_RATIO_CEIL = 0.30        # resident vector bytes vs the f32 engine
+RECALL_DELTA_CEIL = 0.02       # recall@k loss allowed after exact re-rank
+
+# validate() needs the quantized payload, not just the per-B rows
+_QUANT_PAYLOAD: dict = {}
+
+
+def _run_quantized(reps: int) -> dict:
+    """The residency arm: f32-resident vs int8-resident (+ exact re-rank)
+    over the SAME graph at n >= 4x the main bench, both through the
+    compiled-program cache. Emits QPS/recall/resident-bytes plus the
+    CompileCounter proof that off-bucket batch sizes compile nothing."""
+    from repro.analysis.runtime import CompileCounter
+    from repro.api.plan_compile import ProgramCache
+
+    n, d = (3000, 32) if common.QUICK else (16000, 32)
+    X, _, centers = gaussian_mixture(n, d, 10, seed=0)
+    index = common.cached_index(f"bench_search_q_{n}",
+                                X, NavixConfig(m_u=8, ef_construction=64,
+                                               metric="l2", seed=0))
+    index = dataclasses.replace(index, program_cache=ProgramCache())
+    qidx = index.quantize_resident()        # shares the program cache
+    rng = np.random.default_rng(11)
+    Q = (centers[rng.integers(0, len(centers), size=QUANT_B)]
+         + 0.3 * rng.normal(size=(QUANT_B, d))).astype(np.float32)
+    _, true_ids = index.brute_force(Q, k=K)
+    true_ids = np.asarray(true_ids)
+
+    def timed(fn):
+        fn()                                # warm-up compile
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = fn()
+            res.dists.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        return res, float(np.mean(times))
+
+    res_f, t_f = timed(lambda: index.search_many(Q, k=K, efs=EFS))
+    recall_f = index.recall(np.asarray(res_f.ids), true_ids)
+
+    with CompileCounter() as cc:
+        res_q, t_q = timed(
+            lambda: qidx.search_quantized_many(Q, k=K, efs=EFS))
+        cc.mark("steady")
+        for bb in QUANT_OFF_BUCKET + (QUANT_B,):
+            qidx.search_quantized_many(Q[:bb], k=K, efs=EFS)
+    steady = int(cc.counts.get("steady", 0))
+    recall_q = index.recall(np.asarray(res_q.ids), true_ids)
+
+    f32_bytes = index.graph.vector_nbytes()
+    q_bytes = qidx.graph.vector_nbytes()
+    rows = [
+        {"resident": "f32", "B": QUANT_B,
+         "qps": round(QUANT_B / t_f, 2), "recall": round(recall_f, 4),
+         "vector_bytes": f32_bytes},
+        {"resident": "int8+rerank", "B": QUANT_B,
+         "qps": round(QUANT_B / t_q, 2), "recall": round(recall_q, 4),
+         "vector_bytes": q_bytes},
+    ]
+    common.emit(rows, "search_quantized_resident")
+    return {
+        "workload": {"n": n, "d": d, "k": K, "efs": EFS,
+                     "heuristic": "adaptive_local", "reps": reps,
+                     "quick": common.QUICK},
+        "rows": rows,
+        "resident_bytes_ratio": round(q_bytes / f32_bytes, 4),
+        "recall_delta": round(recall_f - recall_q, 4),
+        "exact_tier_host_bytes": qidx.exact.nbytes(),
+        "steady_compiles": steady,
+        "compiles": dict(cc.counts),
+    }
 
 
 def run() -> list[dict]:
@@ -83,6 +168,9 @@ def run() -> list[dict]:
             })
     common.emit(rows, "search_engines")
 
+    global _QUANT_PAYLOAD
+    _QUANT_PAYLOAD = _run_quantized(reps)
+
     by = {(r["engine"], r["B"]): r for r in rows}
     speedups = {str(b): round(by[("batched", b)]["qps"]
                               / max(by[("vmap", b)]["qps"], 1e-9), 3)
@@ -94,6 +182,7 @@ def run() -> list[dict]:
                      "quick": common.QUICK},
         "rows": rows,
         "batched_over_vmap_qps": speedups,
+        "quantized": _QUANT_PAYLOAD,
     }, indent=2) + "\n")
     return rows
 
@@ -115,4 +204,22 @@ def validate(rows: list[dict]) -> list[str]:
         if rv and rb and abs(rv["recall"] - rb["recall"]) > 1e-9:
             fails.append(f"engines disagree on recall at B={bb}: "
                          f"vmap={rv['recall']} batched={rb['recall']}")
+
+    qp = _QUANT_PAYLOAD
+    if not qp:
+        fails.append("quantized arm did not run")
+        return fails
+    ratio = qp["resident_bytes_ratio"]
+    if ratio > BYTES_RATIO_CEIL:
+        fails.append(f"int8-resident vector bytes are {ratio:.4f}x the "
+                     f"f32 store (need <= {BYTES_RATIO_CEIL}x)")
+    delta = qp["recall_delta"]
+    if delta > RECALL_DELTA_CEIL:
+        fails.append(f"quantized recall@{K} trails the f32 engine by "
+                     f"{delta:.4f} after exact re-rank (allowed "
+                     f"{RECALL_DELTA_CEIL})")
+    if qp["steady_compiles"] != 0:
+        fails.append(f"quantized arm compiled {qp['steady_compiles']} "
+                     f"program(s) at off-bucket batch sizes "
+                     f"{QUANT_OFF_BUCKET} after the B={QUANT_B} warm-up")
     return fails

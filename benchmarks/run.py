@@ -75,7 +75,10 @@ def main() -> None:
             args.compile_baseline)
         rc_shards = trend.check_shard_ratio(
             args.serving_current or str(bench_serving.JSON_OUT))
-        sys.exit(rc or rc_serving or rc_compiles or rc_shards)
+        rc_quant = trend.check_quantized(
+            args.current or str(bench_search.JSON_OUT),
+            args.baseline, tol=tol)
+        sys.exit(rc or rc_serving or rc_compiles or rc_shards or rc_quant)
 
     from benchmarks import (bench_adaptive, bench_construction,
                             bench_distributed, bench_heuristics,

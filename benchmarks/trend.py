@@ -54,8 +54,8 @@ def compare(current: dict, baseline: dict,
         if prev is None:
             continue
         label = ", ".join(f"{k}={row[k]}"
-                          for k in ("engine", "B", "sched", "shards",
-                                    "lam_frac")
+                          for k in ("engine", "resident", "B", "sched",
+                                    "shards", "lam_frac")
                           if k in row)
         if ("qps" in row and "qps" in prev and prev["qps"] > 0):
             ratio = row["qps"] / prev["qps"]
@@ -195,6 +195,69 @@ def check_shard_ratio(current_path: str,
     print(f"shard-ratio: S={shards} continuous at {ratio:.3f}x unsharded "
           f"(floor {floor:.2f}x) ok")
     return 0
+
+
+#: hard invariants on the quantized-resident arm, mirrored from
+#: benchmarks.bench_search -- these hold regardless of any baseline
+_QUANT_BYTES_CEIL = 0.30
+_QUANT_RECALL_DELTA_CEIL = 0.02
+
+
+def check_quantized(current_path: str, baseline_path: str,
+                    tol: float = DEFAULT_TOL) -> int:
+    """Gate the quantized-resident search arm in BENCH_search.json.
+
+    Three baseline-free invariants (they restate the arm's own
+    ``validate()`` gates so a hand-edited artifact can't dodge them):
+    resident vector bytes <= 0.30x the f32 store, recall@k within 0.02
+    of the f32 engine after exact re-rank, and zero steady-state
+    compiles at off-bucket batch sizes. Plus the usual QPS-regression
+    diff against the baseline's quantized rows when the workloads
+    match. Missing payload or baseline is a skip, not a failure.
+    """
+    cur_p, base_p = pathlib.Path(current_path), pathlib.Path(baseline_path)
+    if not cur_p.exists():
+        print(f"quantized: no current bench file {cur_p}; skipping")
+        return 0
+    qp = json.loads(cur_p.read_text()).get("quantized")
+    if not isinstance(qp, dict) or "rows" not in qp:
+        print("quantized: no quantized payload in the current bench; "
+              "skipping")
+        return 0
+    fails: list[str] = []
+    ratio = qp.get("resident_bytes_ratio")
+    if ratio is not None and ratio > _QUANT_BYTES_CEIL:
+        fails.append(f"resident vector bytes {ratio:.4f}x f32 "
+                     f"(ceiling {_QUANT_BYTES_CEIL}x)")
+    delta = qp.get("recall_delta")
+    if delta is not None and delta > _QUANT_RECALL_DELTA_CEIL:
+        fails.append(f"recall delta {delta:.4f} after exact re-rank "
+                     f"(ceiling {_QUANT_RECALL_DELTA_CEIL})")
+    steady = qp.get("steady_compiles")
+    if steady:
+        fails.append(f"{steady} steady-state compile(s) at off-bucket "
+                     f"batch sizes -- residency arm must reuse the "
+                     f"bucketed program")
+
+    if base_p.exists():
+        bqp = json.loads(base_p.read_text()).get("quantized")
+        if isinstance(bqp, dict):
+            sub_f, sub_n = compare(qp, bqp, tol)
+            fails.extend(sub_f)
+            for n in sub_n:
+                print(f"quantized: {n}")
+        else:
+            print("quantized: baseline has no quantized payload; "
+                  "skipping QPS diff")
+    else:
+        print(f"quantized: no baseline at {base_p}; skipping QPS diff")
+
+    for f in fails:
+        print(f"QUANT-FAIL: {f}")
+    if not fails:
+        print(f"quantized: bytes {ratio}x, recall delta {delta}, "
+              f"steady compiles {steady} -- all within gates")
+    return 1 if fails else 0
 
 
 def check_trend(current_path: str, baseline_path: str,

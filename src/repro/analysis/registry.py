@@ -32,6 +32,10 @@ HOT_PATHS: dict[str, tuple[str, ...]] = {
         "greedy_upper_batch",
         "_init_state",
         "_loop_fns",
+        # the residency dispatch the loop body's every distance call runs
+        # through (f32 rows vs int8 codes+scales) -- a host sync here
+        # would serialize every beam iteration
+        "batch_gather_dist",
         "_take_first_batch",
         "_frontier_min",
         "_r_max",
@@ -49,6 +53,14 @@ HOT_PATHS: dict[str, tuple[str, ...]] = {
         "engine_steps_overlap",
         "engine_refill_overlap",
         "engine_evict_overlap",
+    ),
+    # the shared distance layer: every engine's per-candidate gather
+    # (including the dequantizing int8 gather) flows through these
+    "repro/core/distances.py": (
+        "gather_rows",
+        "gathered_dist",
+        "gathered_dist_batch",
+        "point_dist",
     ),
     # the shard_map bodies: everything that runs per shard inside the
     # sharded programs, plus the one-op merge they feed

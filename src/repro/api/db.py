@@ -46,17 +46,19 @@ class StageTimings:
     prefilter_ms: float = 0.0      # Q_S evaluation (host, numpy)
     pack_ms: float = 0.0           # mask -> device bitset (SIP handoff)
     search_ms: float = 0.0         # kNN operator (device)
+    rerank_ms: float = 0.0         # exact-tier re-rank (host; quantized
+                                   # residency only)
     project_ms: float = 0.0        # projection / row materialization
 
     @property
     def total_ms(self) -> float:
         return (self.prefilter_ms + self.pack_ms + self.search_ms
-                + self.project_ms)
+                + self.rerank_ms + self.project_ms)
 
     def as_dict(self) -> dict:
         return {"prefilter_ms": self.prefilter_ms, "pack_ms": self.pack_ms,
-                "search_ms": self.search_ms, "project_ms": self.project_ms,
-                "total_ms": self.total_ms}
+                "search_ms": self.search_ms, "rerank_ms": self.rerank_ms,
+                "project_ms": self.project_ms, "total_ms": self.total_ms}
 
 
 @dataclasses.dataclass
@@ -172,6 +174,25 @@ class NavixDB:
 
     def index(self, name: str) -> NavixIndex:
         return self.catalog[name].index
+
+    def quantize_index(self, name: str, mmap_path=None) -> NavixIndex:
+        """Switch a catalog entry to int8 device residency.
+
+        The entry's index is replaced by its quantized-resident sibling
+        (``NavixIndex.quantize_resident``): the device holds codes +
+        per-vector scales + graph only, full-precision rows live in a
+        host-side exact tier (``mmap_path`` spills them to disk), and
+        every ``execute`` over this entry finishes with an exact re-rank
+        (timed separately as ``StageTimings.rerank_ms``). Programs key on
+        residency, so the swap never invalidates cached f32 programs.
+        """
+        entry = self.catalog[name]
+        if isinstance(entry.index, ShardedNavix):
+            raise ValueError(f"index {name!r} is sharded; quantized "
+                             f"residency applies to single-device indexes")
+        entry.index = entry.index.quantize_resident(mmap_path=mmap_path)
+        entry.index.program_cache = self.programs
+        return entry.index
 
     def _resolve(self, knn: KnnSearch, table: str) -> IndexEntry:
         if knn.index is not None:
@@ -305,7 +326,14 @@ class NavixDB:
 
         # stage 3: the kNN operator through the compiled-program cache
         k = knn.k
-        params = idx._params(k, knn.efs or 2 * k, knn.heuristic)
+        quantized = (not sharded) and getattr(idx, "is_quantized", False)
+        if quantized:
+            # int8 residency: the beam runs on codes at FULL width (k ==
+            # efs); the exact tier does the final cut to k in stage 3b
+            efs_eff = max(knn.efs or 2 * k, k)
+            params = idx._params(efs_eff, efs_eff, knn.heuristic)
+        else:
+            params = idx._params(k, knn.efs or 2 * k, knn.heuristic)
         t0 = time.perf_counter()
         single = query.ndim == 1
         if sharded:
@@ -321,6 +349,16 @@ class NavixDB:
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         timings.search_ms = (time.perf_counter() - t0) * 1e3
+
+        # stage 3b: exact-tier re-rank (quantized residency only)
+        if quantized:
+            t0 = time.perf_counter()
+            Qp = np.asarray(idx._prep_query(query))
+            if single:
+                dists, ids = idx.exact.rerank(Qp, ids, k)
+            else:
+                dists, ids = idx.exact.rerank_many(Qp, ids, k)
+            timings.rerank_ms = (time.perf_counter() - t0) * 1e3
 
         # stage 4: projection + limit
         t0 = time.perf_counter()

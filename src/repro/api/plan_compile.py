@@ -66,6 +66,11 @@ class ProgramKey(NamedTuple):
                                    # each device stepping B/lane_shards
                                    # lanes; batch buckets are rounded up
                                    # to a multiple of it
+    resident: str = "f32"          # device residency of the vector store:
+                                   # "f32" (dense rows) | "int8" (codes +
+                                   # per-vector scales; quantized-resident
+                                   # engine) -- distinct programs, since
+                                   # the gather primitive differs
 
 
 @dataclasses.dataclass
@@ -107,6 +112,9 @@ class ProgramCache:
     def _key(self, graph: HnswGraph, params: SearchParams,
              batch_shape: Optional[int], engine: str = "single",
              per_lane_sel: bool = False) -> ProgramKey:
+        from repro.core.quantize import QuantizedStore
+        resident = ("int8" if isinstance(graph.vectors, QuantizedStore)
+                    else "f32")
         return ProgramKey(
             n=graph.n, dim=graph.dim, k=params.k, efs=params.efs,
             heuristic=params.heuristic, metric=params.metric,
@@ -114,7 +122,7 @@ class ProgramCache:
             knobs=(params.ub, params.lf, params.two_hop_cap,
                    params.max_iters, graph.m_l, graph.n_upper,
                    graph.m_u),
-            engine=engine, per_lane_sel=per_lane_sel)
+            engine=engine, per_lane_sel=per_lane_sel, resident=resident)
 
     def _get(self, key: ProgramKey, fn, graph, q, sel_bits, params, sigma_g):
         prog = self._programs.get(key)

@@ -1,0 +1,1 @@
+"""Checkpointing: index/graph persistence."""

@@ -52,11 +52,30 @@ def point_dist(q: jax.Array, x: jax.Array, metric: Metric) -> jax.Array:
     raise ValueError(metric)
 
 
+def gather_rows(vectors, ids: jax.Array) -> jax.Array:
+    """f32 row gather with store dispatch: ``vectors[ids]`` for a plain
+    f32 array, per-row dequantize for an int8-resident store.
+
+    ``vectors`` is either ``f32[n, d]`` or a
+    :class:`repro.core.quantize.QuantizedStore` (duck-typed on ``codes``
+    to avoid an import cycle). For the quantized store the gathered rows
+    are ``codes[ids] * scale[ids]`` -- elementwise identical to gathering
+    from ``dequantize(store)``, since a gather of an elementwise product
+    equals the product of the gathers. Callers are expected to have
+    clamped ``ids`` to valid rows already (the ``ids < 0 -> +inf``
+    masking stays with the distance wrappers).
+    """
+    codes = getattr(vectors, "codes", None)
+    if codes is None:
+        return vectors[ids]
+    return codes[ids].astype(jnp.float32) * vectors.scale[ids][..., None]
+
+
 def gathered_dist(q: jax.Array, vectors: jax.Array, ids: jax.Array,
                   metric: Metric) -> jax.Array:
     """dist(q, vectors[ids]) with ids<0 padding -> +inf."""
     safe = jnp.maximum(ids, 0)
-    d = point_dist(q, vectors[safe], metric)
+    d = point_dist(q, gather_rows(vectors, safe), metric)
     return jnp.where(ids >= 0, d, jnp.inf)
 
 
@@ -69,7 +88,7 @@ def gathered_dist_batch(Q: jax.Array, vectors: jax.Array, ids: jax.Array,
     and a single-query run over the same ids agree bitwise.
     """
     safe = jnp.maximum(ids, 0)
-    d = point_dist(Q[:, None, :], vectors[safe], metric)
+    d = point_dist(Q[:, None, :], gather_rows(vectors, safe), metric)
     return jnp.where(ids >= 0, d, jnp.inf)
 
 

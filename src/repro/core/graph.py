@@ -30,7 +30,9 @@ class HnswGraph(NamedTuple):
     upper_deg: jax.Array    # int32[n_u]
     upper_ids: jax.Array    # int32[n_u] -> node id in [0, n)
     entry_pos: jax.Array    # int32 scalar: entry position into upper_ids
-    vectors: jax.Array      # f32[n, d] (normalized when metric == "cos")
+    vectors: jax.Array      # f32[n, d] (normalized when metric == "cos"),
+                            # or a QuantizedStore (int8 codes + per-vector
+                            # scale) when the index is quantized-resident
 
     @property
     def n(self) -> int:
@@ -53,7 +55,16 @@ class HnswGraph(NamedTuple):
         return self.upper_ids.shape[0]
 
     def nbytes(self) -> int:
-        return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in self)
+        # tree_leaves, not `for a in self`: the vectors field may itself
+        # be a pytree (QuantizedStore) rather than one array
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in jax.tree_util.tree_leaves(self))
+
+    def vector_nbytes(self) -> int:
+        """Device-resident bytes of the vector payload alone (the bench's
+        capacity accounting: int8 codes + scales vs the f32 store)."""
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in jax.tree_util.tree_leaves(self.vectors))
 
 
 def empty_graph(n: int, d: int, m_l: int, m_u: int, n_upper: int,

@@ -31,10 +31,10 @@ from repro.core.distances import brute_force_topk, normalize, validate_metric
 from repro.core.graph import HnswGraph
 from repro.core.heuristics import Heuristic
 from repro.core.postfilter import postfilter_search
-from repro.core.quantize import (QuantizedStore, dequantize, quantize,
-                                 rerank, rerank_many)
+from repro.core.quantize import QuantizedStore, dequantize, quantize
 from repro.core.search import SearchParams, SearchResult, search
 from repro.core.search_batch import resolve_engine
+from repro.storage.columnar import ExactTier
 
 
 class NavixConfig(NamedTuple):
@@ -56,9 +56,16 @@ class NavixIndex:
     graph: HnswGraph
     config: NavixConfig
     quantized: Optional[QuantizedStore] = None
+    # exact f32 tier (host / memmap) paired with a quantized-resident graph;
+    # finalizes quantized searches by re-ranking the final beam exactly
+    exact: Optional[ExactTier] = None
     # set when the index is registered in a NavixDB catalog; routes search
     # through the shared AOT compiled-program cache (repro.api.plan_compile)
     program_cache: Optional[object] = None
+    # lazily-built quantized sibling for plain-f32 indexes (search_quantized
+    # compatibility path); never part of the persisted state
+    _qview: Optional["NavixIndex"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     # -- creation ---------------------------------------------------------
     @classmethod
@@ -71,6 +78,46 @@ class NavixIndex:
     @classmethod
     def from_graph(cls, graph: HnswGraph, config: NavixConfig) -> "NavixIndex":
         return cls(graph=graph, config=config)
+
+    # -- residency ----------------------------------------------------------
+    @property
+    def is_quantized(self) -> bool:
+        """True when the device-resident vectors are int8 codes + scales."""
+        return isinstance(self.graph.vectors, QuantizedStore)
+
+    def quantize_resident(self, mmap_path=None) -> "NavixIndex":
+        """Return a sibling index whose device residency is int8.
+
+        The graph's vector payload becomes the ``QuantizedStore`` (codes +
+        per-vector scales; the engines' gather+distance dispatch dequantizes
+        per gathered row, so no [n, d] f32 buffer ever exists on device) and
+        the full-precision rows move to a host-side :class:`ExactTier`
+        (``mmap_path`` spills them to disk). Shares this index's
+        compiled-program cache; programs key on residency, so f32 and int8
+        programs coexist without retraces.
+        """
+        if self.is_quantized:
+            return self
+        store = self.quantized
+        if store is None:
+            store = quantize(self.graph.vectors)
+        exact = ExactTier.build(np.asarray(self.graph.vectors),
+                                self.config.metric, mmap_path=mmap_path)
+        return dataclasses.replace(
+            self, graph=self.graph._replace(vectors=store), quantized=store,
+            exact=exact, _qview=None)
+
+    def _quantized_view(self) -> "NavixIndex":
+        """The index search_quantized* runs on: self if already
+        int8-resident, else a cached quantized sibling (built once)."""
+        if self.is_quantized:
+            return self
+        if self._qview is None:
+            self._qview = self.quantize_resident()
+            self.quantized = self._qview.quantized
+        # the sibling always follows this index's current catalog cache
+        self._qview.program_cache = self.program_cache
+        return self._qview
 
     # -- semimasks ----------------------------------------------------------
     def pack_semimask(self, mask) -> jax.Array:
@@ -179,42 +226,57 @@ class NavixIndex:
 
     def search_quantized(self, q, k: int = 100, efs: int = 0, semimask=None,
                          heuristic="adaptive_local"):
-        """DiskANN-regime search: int8 distances + exact re-rank (S 5.8)."""
-        if self.quantized is None:
-            self.quantized = quantize(self.graph.vectors)
-        efs = efs or 2 * k
-        qgraph = self.graph._replace(vectors=dequantize(self.quantized))
-        sel = (self.full_semimask() if semimask is None
-               else self.pack_semimask(semimask))
+        """DiskANN-regime search: int8-resident beam + exact re-rank (S 5.8).
+
+        The beam loop runs directly on the int8 codes (fused dequantizing
+        gather+distance; NO [n, d] f32 store is materialized, per call or
+        ever) and the final beam -- the full ``efs`` frontier -- is
+        re-ranked host-side against the :class:`ExactTier` f32 rows, then
+        cut to ``k``.
+        """
+        qidx = self._quantized_view()
+        efs = max(efs or 2 * k, k)
+        sel = (qidx.full_semimask() if semimask is None
+               else qidx.pack_semimask(semimask))
         qv = self._prep_query(q)
-        res = search(qgraph, qv, sel, self._params(k, max(efs, k), heuristic),
-                     sigma_g=self.sigma(sel))
-        d, ids = rerank(qv, self.graph.vectors, res.ids, k, self.config.metric)
-        return SearchResult(dists=d, ids=ids, stats=res.stats)
+        # full-beam params (k == efs): the exact tier does the final cut
+        params = self._params(efs, efs, heuristic)
+        if qidx.program_cache is not None:
+            res = qidx.program_cache.search(qidx.graph, qv, sel, params,
+                                            qidx.sigma(sel))
+        else:
+            res = search(qidx.graph, qv, sel, params, sigma_g=qidx.sigma(sel))
+        d, ids = qidx.exact.rerank(np.asarray(qv), np.asarray(res.ids), k)
+        return SearchResult(dists=jnp.asarray(d), ids=jnp.asarray(ids),
+                            stats=res.stats)
 
     def search_quantized_many(self, Q, k: int = 100, efs: int = 0,
                               semimask=None, heuristic="adaptive_local",
                               engine: str = "batched"):
-        """Batched DiskANN-regime search: the int8 store composed with the
-        batched-frontier engine, plus a lane-vectorized exact re-rank.
+        """Batched DiskANN-regime search: the int8-resident store composed
+        with the batched-frontier engine, plus a lane-vectorized exact
+        re-rank against the f32 tier.
 
         Lane-for-lane equivalent to :meth:`search_quantized` per query
         (``semimask`` accepts the same shared / per-lane forms as
         :meth:`search_many`).
         """
-        if self.quantized is None:
-            self.quantized = quantize(self.graph.vectors)
+        qidx = self._quantized_view()
         fn = resolve_engine(engine)
-        efs = efs or 2 * k
-        qgraph = self.graph._replace(vectors=dequantize(self.quantized))
-        sel = (self.full_semimask() if semimask is None
-               else self.pack_semimask(semimask))
+        efs = max(efs or 2 * k, k)
+        sel = (qidx.full_semimask() if semimask is None
+               else qidx.pack_semimask(semimask))
         Qp = self._prep_query(Q)
-        res = fn(qgraph, Qp, sel, self._params(k, max(efs, k), heuristic),
-                 sigma_g=self.sigma(sel))
-        d, ids = rerank_many(Qp, self.graph.vectors, res.ids, k,
-                             self.config.metric)
-        return SearchResult(dists=d, ids=ids, stats=res.stats)
+        params = self._params(efs, efs, heuristic)
+        if qidx.program_cache is not None:
+            res = qidx.program_cache.batch(engine)(qidx.graph, Qp, sel,
+                                                   params, qidx.sigma(sel))
+        else:
+            res = fn(qidx.graph, Qp, sel, params, sigma_g=qidx.sigma(sel))
+        d, ids = qidx.exact.rerank_many(np.asarray(Qp), np.asarray(res.ids),
+                                        k)
+        return SearchResult(dists=jnp.asarray(d), ids=jnp.asarray(ids),
+                            stats=res.stats)
 
     def search_postfilter(self, q, k: int = 100, semimask=None):
         sel = (self.full_semimask() if semimask is None
@@ -229,7 +291,15 @@ class NavixIndex:
         if semimask is not None:
             sel = self.pack_semimask(semimask)
             mask = bitset.unpack(sel, self.graph.n)
-        return brute_force_topk(Q, self.graph.vectors, k, self.config.metric,
+        vectors = self.graph.vectors
+        if self.is_quantized:
+            # the oracle scores exact f32 rows, not codes: prefer the exact
+            # tier; a bare quantized graph falls back to dequantizing (this
+            # is a test oracle, not a search path)
+            vectors = (jnp.asarray(np.asarray(self.exact.vectors))
+                       if self.exact is not None
+                       else dequantize(self.graph.vectors))
+        return brute_force_topk(Q, vectors, k, self.config.metric,
                                 mask=mask)
 
     def recall(self, res_ids, true_ids) -> float:

@@ -18,12 +18,26 @@ import jax.numpy as jnp
 
 
 class QuantizedStore(NamedTuple):
+    """The int8-resident vector representation.
+
+    A ``QuantizedStore`` can sit directly in ``HnswGraph.vectors``: it
+    exposes the ``shape`` of the logical f32 store so ``graph.n`` /
+    ``graph.dim`` keep working, and the engines gather + dequantize rows
+    on the fly (``repro.core.distances.gather_rows``), so no ``[n, d]``
+    f32 buffer is ever materialized.
+    """
+
     codes: jax.Array    # int8[n, d]
     scale: jax.Array    # f32[n]   per-vector symmetric scale
 
     @property
     def n(self) -> int:
         return self.codes.shape[0]
+
+    @property
+    def shape(self) -> tuple:
+        """Logical [n, d] shape of the store (mirrors the f32 array)."""
+        return self.codes.shape
 
     def nbytes(self) -> int:
         return self.codes.size + 4 * self.scale.size
@@ -42,8 +56,16 @@ def dequantize(store: QuantizedStore) -> jax.Array:
 
 def rerank(q: jax.Array, vectors: jax.Array, ids: jax.Array, k: int,
            metric: str):
-    """Exact re-rank of a candidate id list; returns (dists[k], ids[k])."""
+    """Exact re-rank of a candidate id list; returns (dists[k], ids[k]).
+
+    ``ids`` may carry ``-1`` padding (never surfaces -- padded slots rank
+    at +inf and come back as ``-1``) and duplicates (counted once: repeats
+    after the first occurrence are dropped before ranking, so a k-slot
+    result never spends two slots on one node).
+    """
     from repro.core.distances import gathered_dist
+    from repro.core.search import _dedupe_keep_first
+    ids = _dedupe_keep_first(ids)
     d = gathered_dist(q, vectors, ids, metric)
     neg, order = jax.lax.top_k(-d, k)
     out_d = -neg

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import bitset
-from repro.core.distances import gathered_dist, point_dist
+from repro.core.distances import gather_rows, gathered_dist, point_dist
 from repro.core.graph import HnswGraph
 from repro.core.heuristics import (LENIENCY_FACTOR, UB_ONEHOP_S, Heuristic,
                                    adaptive_rule)
@@ -203,7 +203,8 @@ def greedy_upper(graph: HnswGraph, q: jax.Array, metric: str):
                 improved)
 
     pos0 = graph.entry_pos
-    d0 = point_dist(q, graph.vectors[graph.upper_ids[pos0]], metric)
+    d0 = point_dist(q, gather_rows(graph.vectors, graph.upper_ids[pos0]),
+                    metric)
     pos, _, dc, _ = lax.while_loop(cond, body, (pos0, d0, jnp.int32(1), jnp.bool_(True)))
     return graph.upper_ids[pos], dc
 

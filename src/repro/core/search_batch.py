@@ -66,7 +66,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import bitset
-from repro.core.distances import gathered_dist_batch, point_dist
+from repro.core.distances import (gather_rows, gathered_dist_batch,
+                                  point_dist)
 from repro.core.graph import HnswGraph
 from repro.core.heuristics import Heuristic, adaptive_rule
 from repro.core.search import (SearchParams, SearchResult, SearchStats,
@@ -111,10 +112,20 @@ def batch_gather_dist(Q: jax.Array, vectors: jax.Array, ids: jax.Array,
     gather+distance kernel serves the engine when available; bitwise
     equal to :func:`repro.core.distances.gathered_dist_batch` on the
     fallback path. Backend choice is baked at trace time.
+
+    ``vectors`` may be an int8-resident store (``QuantizedStore``,
+    duck-typed on ``codes``): candidates then dequantize per gathered row
+    (the quantized gather kernel on TPU, the jnp reference elsewhere) --
+    bitwise what ``dequantize``-then-gather computes, with no ``[n, d]``
+    f32 buffer live.
     """
+    codes = getattr(vectors, "codes", None)
     if gather_backend() == "xla":
         return gathered_dist_batch(Q, vectors, ids, metric)
     from repro.kernels import ops
+    if codes is not None:
+        return ops.quantized_gather_distance_batch(Q, codes, vectors.scale,
+                                                   ids, metric)
     return ops.gather_distance_batch(Q, vectors, ids, metric)
 
 
@@ -191,7 +202,7 @@ def greedy_upper_batch(graph: HnswGraph, Q: jax.Array, metric: str):
                 upd)
 
     pos0 = jnp.broadcast_to(graph.entry_pos, (bsz,))
-    d0 = point_dist(Q, vectors[upper_ids[pos0]], metric)
+    d0 = point_dist(Q, gather_rows(vectors, upper_ids[pos0]), metric)
     init = (pos0, d0, jnp.ones((bsz,), jnp.int32), jnp.ones((bsz,), bool))
     pos, _, dc, _ = lax.while_loop(cond, body, init)
     return upper_ids[pos], dc
@@ -229,7 +240,7 @@ def _init_state(graph: HnswGraph, Q: jax.Array, sel2: jax.Array,
                 seeds: jax.Array, params: SearchParams) -> _BatchState:
     """Fresh per-lane beams holding only each lane's seed entry point."""
     bsz, efs = Q.shape[0], params.efs
-    seed_d = point_dist(Q, graph.vectors[seeds], params.metric)
+    seed_d = point_dist(Q, gather_rows(graph.vectors, seeds), params.metric)
     pad_d = jnp.full((bsz, efs - 1), jnp.inf, seed_d.dtype)
     return _BatchState(
         d=jnp.concatenate([seed_d[:, None], pad_d], axis=1),

@@ -1,0 +1,1 @@
+"""Dataset synthesis and graph sampling."""

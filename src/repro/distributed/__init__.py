@@ -1,0 +1,1 @@
+"""Mesh construction and autosharding helpers."""

@@ -72,6 +72,55 @@ def _batch_kernel(ids_ref, row_ref, q_ref, out_ref, *, metric: str):
         out_ref[...] = -jnp.sum(row * q, axis=1, keepdims=True)
 
 
+def _quantized_kernel(ids_ref, code_ref, s_ref, q_ref, out_ref,
+                      *, metric: str):
+    # dequantize the one gathered row in VMEM: the f32 store never exists
+    row = code_ref[...].astype(jnp.float32) * \
+        s_ref[...].astype(jnp.float32)               # [1, d] * [1, 1]
+    q = q_ref[...].astype(jnp.float32)               # [1, d]
+    if metric == "l2":
+        diff = row - q
+        out_ref[...] = jnp.sum(diff * diff, axis=1)
+    elif metric == "cos":
+        out_ref[...] = 1.0 - jnp.sum(row * q, axis=1)
+    else:  # dot
+        out_ref[...] = -jnp.sum(row * q, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def quantized_gather_distance_pallas(q: jax.Array, codes: jax.Array,
+                                     scale: jax.Array, ids: jax.Array,
+                                     metric: str = "l2",
+                                     interpret: bool = False) -> jax.Array:
+    """q[d], codes[n,d] int8, scale[n] f32, ids[k] (<0 = padding) -> f32[k].
+
+    The int8-resident variant of :func:`gather_distance_pallas`: the
+    scalar-prefetch index_map gathers the (1, d) int8 code row AND its
+    (1, 1) scale, the row dequantizes in VMEM, and the distance forms
+    match the f32 kernel -- so HBM streams d + 4 bytes per candidate
+    instead of 4d.
+    """
+    n, d = codes.shape
+    k = ids.shape[0]
+    safe = jnp.clip(ids, 0, n - 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_quantized_kernel, metric=metric),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),
+                pl.BlockSpec((1, 1), lambda i, ids_ref: (ids_ref[i], 0)),
+                pl.BlockSpec((1, d), lambda i, ids_ref: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1,), lambda i, ids_ref: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(safe, codes, scale[:, None], q[None, :])
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
 def gather_distance_batch_pallas(Q: jax.Array, vectors: jax.Array,
                                  ids: jax.Array, metric: str = "l2",
@@ -103,4 +152,55 @@ def gather_distance_batch_pallas(Q: jax.Array, vectors: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(safe, vectors, Q)
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
+def _quantized_batch_kernel(ids_ref, code_ref, s_ref, q_ref, out_ref,
+                            *, metric: str):
+    row = code_ref[...].astype(jnp.float32) * \
+        s_ref[...].astype(jnp.float32)               # [1, d] * [1, 1]
+    q = q_ref[...].astype(jnp.float32)               # [1, d]
+    if metric == "l2":
+        diff = row - q
+        out_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+    elif metric == "cos":
+        out_ref[...] = 1.0 - jnp.sum(row * q, axis=1, keepdims=True)
+    else:  # dot
+        out_ref[...] = -jnp.sum(row * q, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def quantized_gather_distance_batch_pallas(Q: jax.Array, codes: jax.Array,
+                                           scale: jax.Array, ids: jax.Array,
+                                           metric: str = "l2",
+                                           interpret: bool = False
+                                           ) -> jax.Array:
+    """Q[b,d], codes[n,d] int8, scale[n] f32, ids[b,k] -> f32[b,k].
+
+    The batched int8-resident gather+distance kernel: one (B, K) grid
+    streams every lane's candidate codes + scales through VMEM (the
+    batched-frontier engine's distance primitive when the index is
+    quantized-resident). ids < 0 are clamped to row 0 and masked to +inf
+    here, matching the engine's retired-lane contract.
+    """
+    n, d = codes.shape
+    b, k = ids.shape
+    safe = jnp.clip(ids, 0, n - 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_quantized_batch_kernel, metric=metric),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, k),
+            in_specs=[
+                pl.BlockSpec((1, d),
+                             lambda i, j, ids_ref: (ids_ref[i, j], 0)),
+                pl.BlockSpec((1, 1),
+                             lambda i, j, ids_ref: (ids_ref[i, j], 0)),
+                pl.BlockSpec((1, d), lambda i, j, ids_ref: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, j, ids_ref: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(safe, codes, scale[:, None], Q)
     return jnp.where(ids >= 0, out, jnp.inf)

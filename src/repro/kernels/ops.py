@@ -18,8 +18,9 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.distance_matrix import distance_matrix_pallas
-from repro.kernels.gather_distance import (gather_distance_batch_pallas,
-                                           gather_distance_pallas)
+from repro.kernels.gather_distance import (
+    gather_distance_batch_pallas, gather_distance_pallas,
+    quantized_gather_distance_batch_pallas, quantized_gather_distance_pallas)
 from repro.kernels.quantized import quantized_distance_pallas
 from repro.kernels.segment_sum import csr_segment_sum_pallas, plan_tiles
 
@@ -68,7 +69,6 @@ def gather_distance(q, vectors, ids, metric: str = "l2"):
     """Fused gather+distance: dist(q, vectors[ids]); ids<0 -> inf. f32[k]."""
     if not _use_pallas():
         return ref.gather_distance(q, vectors, ids, metric)
-    d = vectors.shape[1]
     vp = _pad_to(vectors, 1, 128)
     qp = _pad_to(q, 0, 128)
     return gather_distance_pallas(qp, vp, ids, metric,
@@ -87,6 +87,36 @@ def gather_distance_batch(Q, vectors, ids, metric: str = "l2"):
     qp = _pad_to(Q, 1, 128)
     return gather_distance_batch_pallas(qp, vp, ids, metric,
                                         interpret=not _on_tpu())
+
+
+def quantized_gather_distance(q, codes, scale, ids, metric: str = "l2"):
+    """Fused int8 gather+distance: dist(q, scale[ids] * codes[ids]);
+    ids<0 -> inf. f32[k]. The single-query primitive of the
+    quantized-resident engine; d is zero-padded to the lane multiple
+    (padded dims contribute 0 under every metric)."""
+    if not _use_pallas():
+        return ref.quantized_gather_distance(q, codes, scale, ids, metric)
+    cp = _pad_to(codes, 1, 128)
+    qp = _pad_to(q, 0, 128)
+    return quantized_gather_distance_pallas(qp, cp, scale, ids, metric,
+                                            interpret=not _on_tpu())
+
+
+def quantized_gather_distance_batch(Q, codes, scale, ids, metric: str = "l2"):
+    """Batched fused int8 gather+distance:
+    dist(Q[b], scale[ids[b]] * codes[ids[b]]); ids<0 -> inf. f32[b,k].
+
+    One pallas_call grid streams all B id lists over the int8 store --
+    the batched-frontier engine's distance primitive when the index is
+    quantized-resident (d + 4 HBM bytes per candidate instead of 4d).
+    """
+    if not _use_pallas():
+        return ref.quantized_gather_distance_batch(Q, codes, scale, ids,
+                                                   metric)
+    cp = _pad_to(codes, 1, 128)
+    qp = _pad_to(Q, 1, 128)
+    return quantized_gather_distance_batch_pallas(qp, cp, scale, ids, metric,
+                                                  interpret=not _on_tpu())
 
 
 def quantized_distance_matrix(Q, codes, scale, metric: str = "l2",

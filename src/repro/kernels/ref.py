@@ -74,6 +74,58 @@ def quantized_distance_matrix(Q: jax.Array, codes: jax.Array,
     return distance_matrix(Q, X, metric)
 
 
+def quantized_gather_distance(q: jax.Array, codes: jax.Array,
+                              scale: jax.Array, ids: jax.Array,
+                              metric: str) -> jax.Array:
+    """f32[k]: dist(q, scale[ids] * codes[ids]); ids < 0 -> +inf.
+
+    Rows dequantize per gathered id -- bitwise what
+    ``gather_distance(q, dequantize(store), ids)`` computes (a gather of
+    an elementwise product is the product of the gathers), with no
+    ``[n, d]`` f32 buffer live.
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = codes[safe].astype(jnp.float32) * \
+        scale[safe].astype(jnp.float32)[..., None]
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        diff = rows - qf
+        d = jnp.sum(diff * diff, axis=-1)
+    elif metric == "cos":
+        d = 1.0 - jnp.sum(rows * qf, axis=-1)
+    elif metric == "dot":
+        d = -jnp.sum(rows * qf, axis=-1)
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def quantized_gather_distance_batch(Q: jax.Array, codes: jax.Array,
+                                    scale: jax.Array, ids: jax.Array,
+                                    metric: str) -> jax.Array:
+    """f32[b,k]: dist(Q[b], scale[ids[b]] * codes[ids[b]]); ids < 0 -> +inf.
+
+    The int8-resident engine's distance primitive; same elementwise forms
+    as :func:`quantized_gather_distance` (and as
+    ``distances.gathered_dist_batch`` over a QuantizedStore), so the
+    batched and single-query paths stay bitwise-identical.
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = codes[safe].astype(jnp.float32) * \
+        scale[safe].astype(jnp.float32)[..., None]       # [b, k, d]
+    Qf = Q.astype(jnp.float32)[:, None, :]
+    if metric == "l2":
+        diff = rows - Qf
+        d = jnp.sum(diff * diff, axis=-1)
+    elif metric == "cos":
+        d = 1.0 - jnp.sum(rows * Qf, axis=-1)
+    elif metric == "dot":
+        d = -jnp.sum(rows * Qf, axis=-1)
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
 def csr_segment_sum(messages: jax.Array, dst_sorted: jax.Array,
                     n: int) -> jax.Array:
     """out[v] = sum of messages whose (sorted, padded=-1) destination is v."""

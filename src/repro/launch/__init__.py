@@ -1,0 +1,1 @@
+"""Entry points: serve/train drivers, dryrun, roofline, reports."""

@@ -1,0 +1,1 @@
+"""Embedding models (GNN, transformer, recsys) producing vectors."""

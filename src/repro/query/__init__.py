@@ -1,0 +1,1 @@
+"""Declarative plan operators (selection subqueries, kNN, projection)."""

@@ -54,12 +54,17 @@ class _FlatLanes:
 
     n_shards = 0
     lane_multiple = 1
+    exact = None
 
     def __init__(self, idx: NavixIndex, params):
         from repro.core import bitset
 
         self.idx, self.graph, self.params = idx, idx.graph, params
         self._words = bitset.n_words(idx.graph.n)
+        # int8-resident indexes carry an exact f32 tier; LaneBatch
+        # re-ranks finalized beams against it (the serving-side re-rank)
+        self.exact = (idx.exact if getattr(idx, "is_quantized", False)
+                      else None)
 
     def full_row(self) -> np.ndarray:
         return np.asarray(self.idx.full_semimask())            # [W]
@@ -130,6 +135,8 @@ class _ShardLanes:
     upper_dc, shard-stacked beam state) and ``finalize`` merges the
     per-shard beams into global top-k under the current ``alive`` mask.
     Per-lane k/efs capping and lane refill are untouched."""
+
+    exact = None    # sharded indexes stay f32-resident (no quantized tier)
 
     def __init__(self, sn: ShardedNavix, params):
         self.sn, self.params = sn, params
@@ -397,10 +404,22 @@ class LaneBatch:
     def finalize(self, alive) -> tuple[np.ndarray, np.ndarray]:
         """Extract every lane's current beam under ``alive`` (sharded
         backends merge across shards; a flat backend ignores it).
-        Returns host ``(ids[B, efs], dists[B, efs])``."""
+        Returns host ``(ids[B, efs], dists[B, efs])``.
+
+        Quantized-resident backends finish here: the full-width beam
+        (searched on int8 codes) is exactly re-ranked against the host
+        f32 tier, lane-vectorized, so every driver's ``[:k]`` slice of a
+        finalized lane is already exact-ordered. Parked/free lanes are
+        all ``-1`` and stay all ``-1`` through the re-rank."""
         ids, dists = self.backend.finalize(self.st, self.udc, alive)
         # navilint: sync-ok THE declared finalize boundary -- results cross to host exactly once per finalize
-        return np.asarray(ids), np.asarray(dists)
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        exact = self.backend.exact
+        if exact is not None:
+            # exact-tier re-rank: host-side numpy at the same finalize
+            # boundary (prepped queries already mirrored in Qh)
+            dists, ids = exact.rerank_many(self.Qh, ids, ids.shape[1])
+        return ids, dists
 
     def evict(self, lane_ids) -> None:
         """Park the given lanes (one device call) and free them. Parked

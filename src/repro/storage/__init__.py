@@ -1,0 +1,1 @@
+"""Columnar graph store and the exact f32 re-rank tier."""

@@ -1,0 +1,1 @@
+"""Training loop, optimizer, gradient compression."""

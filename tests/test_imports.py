@@ -1,0 +1,41 @@
+"""Every repro.* module imports cleanly.
+
+Regression guard for the missing-``__init__.py`` class of packaging bug:
+a subpackage that works under the repo's sys.path layout but is invisible
+to ``import repro.<pkg>`` (and to wheel builds) because the marker file
+is absent. Walks the source tree, derives the module name of every .py
+file, and imports it.
+"""
+
+import importlib
+import pathlib
+
+import pytest
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def _all_modules():
+    mods = []
+    for py in sorted((SRC / "repro").rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        rel = py.relative_to(SRC).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        mods.append(".".join(parts))
+    return mods
+
+
+def test_every_package_dir_has_init():
+    missing = [str(d.relative_to(SRC))
+               for d in sorted((SRC / "repro").rglob("*"))
+               if d.is_dir() and d.name != "__pycache__"
+               and not (d / "__init__.py").exists()]
+    assert not missing, f"packages without __init__.py: {missing}"
+
+
+@pytest.mark.parametrize("mod", _all_modules())
+def test_module_imports(mod):
+    importlib.import_module(mod)

@@ -6,8 +6,9 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.distance_matrix import distance_matrix_pallas
-from repro.kernels.gather_distance import (gather_distance_batch_pallas,
-                                           gather_distance_pallas)
+from repro.kernels.gather_distance import (
+    gather_distance_batch_pallas, gather_distance_pallas,
+    quantized_gather_distance_batch_pallas, quantized_gather_distance_pallas)
 from repro.kernels.quantized import quantized_distance_pallas
 from repro.kernels.segment_sum import (PAD_SENTINEL, csr_segment_sum_pallas,
                                        plan_tiles)
@@ -76,6 +77,129 @@ def test_quantized_distance_sweep(metric, b, n, d):
     exp = ref.quantized_distance_matrix(Q, codes, scale, metric)
     np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
                                rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("metric", ["l2", "cos", "dot"])
+@pytest.mark.parametrize("n,d,k", [(64, 128, 7), (200, 256, 17)])
+def test_quantized_gather_distance_sweep(metric, n, d, k):
+    """Int8 gather+distance kernel vs the pure-jnp dequantizing ref."""
+    q = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(-127, 128, size=(n, d)), jnp.int8)
+    scale = jnp.asarray(RNG.random(n) * 0.02 + 1e-3, jnp.float32)
+    ids = jnp.asarray(RNG.integers(-1, n, size=k), jnp.int32)
+    got = quantized_gather_distance_pallas(q, codes, scale, ids, metric,
+                                           interpret=True)
+    exp = ref.quantized_gather_distance(q, codes, scale, ids, metric)
+    g, e = np.asarray(got), np.asarray(exp)
+    np.testing.assert_array_equal(np.isinf(g), np.isinf(e))
+    fin = np.isfinite(e)
+    np.testing.assert_allclose(g[fin], e[fin], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", ["l2", "cos", "dot"])
+@pytest.mark.parametrize("b,n,d,k", [(4, 64, 128, 7), (8, 128, 128, 16)])
+def test_quantized_gather_distance_batch_sweep(metric, b, n, d, k):
+    Q = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(-127, 128, size=(n, d)), jnp.int8)
+    scale = jnp.asarray(RNG.random(n) * 0.02 + 1e-3, jnp.float32)
+    ids = jnp.asarray(RNG.integers(-1, n, size=(b, k)), jnp.int32)
+    ids = ids.at[0].set(-1)                     # a fully-retired lane
+    got = quantized_gather_distance_batch_pallas(Q, codes, scale, ids,
+                                                 metric, interpret=True)
+    exp = ref.quantized_gather_distance_batch(Q, codes, scale, ids, metric)
+    g, e = np.asarray(got), np.asarray(exp)
+    np.testing.assert_array_equal(np.isinf(g), np.isinf(e))
+    fin = np.isfinite(e)
+    np.testing.assert_allclose(g[fin], e[fin], rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_gather_matches_dequantize_then_gather():
+    """The per-row dequantizing gather is bitwise what dequantize-the-
+    store-then-gather computes (gather of a product == product of the
+    gathers), so the quantized-resident engine's distances are exactly
+    the dequantized engine's distances."""
+    n, d, k = 90, 32, 21
+    codes = jnp.asarray(RNG.integers(-127, 128, size=(n, d)), jnp.int8)
+    scale = jnp.asarray(RNG.random(n) * 0.02 + 1e-3, jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(-1, n, size=k), jnp.int32)
+    full = codes.astype(jnp.float32) * scale[:, None]   # the [n, d] buffer
+    exp = ref.gather_distance(q, full, ids, "l2")       # ...we never build
+    got = ref.quantized_gather_distance(q, codes, scale, ids, "l2")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("metric", ["l2", "cos", "dot"])
+@pytest.mark.parametrize("b,n,d", [
+    (5, 130, 61),      # every axis off the 128 tile
+    (3, 127, 32),      # n one short of a tile
+    (9, 200, 100),
+])
+def test_quantized_distance_matrix_padding(monkeypatch, metric, b, n, d):
+    """ops.quantized_distance_matrix at non-multiple-of-128 b/n/d: the
+    wrapper zero-pads codes AND scales, so padded rows carry scale == 0
+    (a legal store row: an all-zero vector quantizes to scale 0). Real
+    rows must come back exactly as the ref computes them."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    from repro.kernels import ops
+    Q = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(-127, 128, size=(n, d)), jnp.int8)
+    scale = jnp.asarray(RNG.random(n) * 0.02 + 1e-3, jnp.float32)
+    got = ops.quantized_distance_matrix(Q, codes, scale, metric)
+    assert got.shape == (b, n)
+    exp = ref.quantized_distance_matrix(Q, codes, scale, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_quantized_distance_matrix_zero_scale_rows(monkeypatch):
+    """Zero-scale rows INSIDE the store (all-zero vectors) under l2:
+    their distance is ||q||^2, not inf/nan, both in kernel and ref."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    from repro.kernels import ops
+    b, n, d = 4, 70, 48
+    Q = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(-127, 128, size=(n, d)), jnp.int8)
+    scale = jnp.asarray(RNG.random(n) * 0.02 + 1e-3, jnp.float32)
+    scale = scale.at[::7].set(0.0)
+    got = np.asarray(ops.quantized_distance_matrix(Q, codes, scale, "l2"))
+    exp = np.asarray(ref.quantized_distance_matrix(Q, codes, scale, "l2"))
+    np.testing.assert_allclose(got, exp, rtol=1e-3, atol=1e-3)
+    qn = np.sum(np.asarray(Q) ** 2, axis=1)
+    np.testing.assert_allclose(got[:, ::7],
+                               np.broadcast_to(qn[:, None],
+                                               got[:, ::7].shape),
+                               rtol=1e-3, atol=1e-3)
+    assert np.isfinite(got).all()
+
+
+def test_quantized_gather_ops_pad_odd_shapes(monkeypatch):
+    """The ops wrappers zero-pad d to the lane multiple; padded dims
+    contribute 0 under every metric, so odd-d results match the ref."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    from repro.kernels import ops
+    n, d, k, b = 80, 61, 13, 5
+    codes = jnp.asarray(RNG.integers(-127, 128, size=(n, d)), jnp.int8)
+    scale = jnp.asarray(RNG.random(n) * 0.02 + 1e-3, jnp.float32)
+    for metric in ("l2", "cos", "dot"):
+        q = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+        ids = jnp.asarray(RNG.integers(-1, n, size=k), jnp.int32)
+        got = ops.quantized_gather_distance(q, codes, scale, ids, metric)
+        exp = ref.quantized_gather_distance(q, codes, scale, ids, metric)
+        g, e = np.asarray(got), np.asarray(exp)
+        fin = np.isfinite(e)
+        np.testing.assert_array_equal(np.isinf(g), np.isinf(e))
+        np.testing.assert_allclose(g[fin], e[fin], rtol=1e-4, atol=1e-4)
+        Q = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+        idsb = jnp.asarray(RNG.integers(-1, n, size=(b, k)), jnp.int32)
+        gotb = ops.quantized_gather_distance_batch(Q, codes, scale, idsb,
+                                                   metric)
+        expb = ref.quantized_gather_distance_batch(Q, codes, scale, idsb,
+                                                   metric)
+        gb, eb = np.asarray(gotb), np.asarray(expb)
+        finb = np.isfinite(eb)
+        np.testing.assert_array_equal(np.isinf(gb), np.isinf(eb))
+        np.testing.assert_allclose(gb[finb], eb[finb], rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("e,d,n,bn,be", [

@@ -1,0 +1,331 @@
+"""Int8-resident search + columnar exact re-rank tier.
+
+The residency contract under test (the PR-9 bugfix): searching a
+quantized index must NEVER materialize the [n, d] f32 store -- not per
+call (the old ``dequantize``-per-search bug) and not at all. The beam
+loop runs on codes + per-vector scales via the fused dequantizing
+gather, and the final beam is exactly re-ranked against the host-side
+:class:`~repro.storage.columnar.ExactTier`.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.navix import NavixConfig
+from repro.core.quantize import QuantizedStore
+from repro.storage.columnar import ExactTier
+
+
+@pytest.fixture(scope="module")
+def qindex(index):
+    return index.quantize_resident()
+
+
+# -- residency ------------------------------------------------------------
+
+def test_quantize_resident_residency(index, qindex):
+    assert not index.is_quantized
+    assert qindex.is_quantized
+    assert isinstance(qindex.graph.vectors, QuantizedStore)
+    assert qindex.graph.n == index.graph.n
+    assert qindex.graph.dim == index.graph.dim
+    assert isinstance(qindex.exact, ExactTier)
+    np.testing.assert_array_equal(np.asarray(qindex.exact.vectors),
+                                  np.asarray(index.graph.vectors))
+    # int8 codes + f32 scales: (d + 4) bytes/row vs 4d
+    f32_bytes = index.graph.vector_nbytes()
+    q_bytes = qindex.graph.vector_nbytes()
+    d = index.graph.dim
+    assert q_bytes == f32_bytes // 4 + 4 * index.graph.n
+    assert q_bytes / f32_bytes == pytest.approx((d + 4) / (4 * d))
+
+
+def test_no_dequantize_anywhere_in_search(monkeypatch, index, queries):
+    """THE regression this PR exists for: zero full-store dequantize
+    calls (zero [n, d] f32 allocations) during quantized search -- not
+    one-per-call, none."""
+    import repro.core.quantize as qz
+    calls = []
+    orig = qz.dequantize
+    monkeypatch.setattr(qz, "dequantize",
+                        lambda s: (calls.append(s), orig(s))[1])
+    index.search_quantized(queries[0], k=10, efs=40)        # warm + steady
+    index.search_quantized(queries[1], k=10, efs=40)
+    index.search_quantized_many(queries[:4], k=10, efs=40)
+    index.search_quantized_many(queries[:4], k=10, efs=40)
+    assert calls == []
+
+
+def test_quantized_many_matches_single_lane_for_lane(index, queries):
+    rm = index.search_quantized_many(queries, k=8, efs=48,
+                                     heuristic="onehop_a")
+    for i, q in enumerate(queries):
+        ri = index.search_quantized(q, k=8, efs=48, heuristic="onehop_a")
+        np.testing.assert_array_equal(np.asarray(rm.ids[i]),
+                                      np.asarray(ri.ids), err_msg=f"lane {i}")
+        np.testing.assert_allclose(np.asarray(rm.dists[i]),
+                                   np.asarray(ri.dists), rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_recall_within_rerank_floor(index, queries):
+    """After the exact re-rank, int8 recall@k sits within 0.02 of the
+    f32 engine at the same efs (paper S 5.8: the re-rank recovers the
+    quantization loss)."""
+    k, efs = 10, 80
+    _, true_ids = index.brute_force(queries, k=k)
+    f32 = index.search_many(queries, k=k, efs=efs)
+    q8 = index.search_quantized_many(queries, k=k, efs=efs)
+    r_f32 = index.recall(np.asarray(f32.ids), np.asarray(true_ids))
+    r_q8 = index.recall(np.asarray(q8.ids), np.asarray(true_ids))
+    assert r_q8 >= r_f32 - 0.02, (r_q8, r_f32)
+
+
+def test_quantized_results_are_device_arrays(index, queries):
+    """bench drivers call .block_until_ready() on quantized results."""
+    r = index.search_quantized(queries[0], k=5, efs=30)
+    r.dists.block_until_ready()
+    r.ids.block_until_ready()
+    assert isinstance(r.dists, jnp.ndarray)
+
+
+def test_search_on_quantized_resident_index(qindex, index, queries):
+    """Plain search()/search_many() run directly on a quantized-resident
+    index (the engines dispatch on the store type). WITHOUT the exact
+    re-rank the int8 distance error costs some recall -- that loss is
+    exactly what search_quantized's re-rank tier recovers (see
+    test_quantized_recall_within_rerank_floor's 0.02 bound)."""
+    _, true_ids = index.brute_force(queries, k=10)
+    res = qindex.search_many(queries, k=10, efs=80)
+    rec = index.recall(np.asarray(res.ids), np.asarray(true_ids))
+    f32 = index.search_many(queries, k=10, efs=80)
+    rec_f32 = index.recall(np.asarray(f32.ids), np.asarray(true_ids))
+    assert rec >= rec_f32 - 0.10
+
+
+def test_brute_force_on_quantized_index_uses_exact_tier(index, qindex,
+                                                        queries):
+    d0, i0 = index.brute_force(queries[:4], k=7)
+    d1, i1 = qindex.brute_force(queries[:4], k=7)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_memmap_tier_matches_in_memory(index, queries, tmp_path):
+    q_mem = index.quantize_resident()
+    q_disk = index.quantize_resident(mmap_path=tmp_path / "vectors.f32")
+    assert q_disk.exact.is_mmapped and not q_mem.exact.is_mmapped
+    rm = q_mem.search_quantized_many(queries, k=8, efs=48)
+    rd = q_disk.search_quantized_many(queries, k=8, efs=48)
+    np.testing.assert_array_equal(np.asarray(rm.ids), np.asarray(rd.ids))
+    np.testing.assert_array_equal(np.asarray(rm.dists), np.asarray(rd.dists))
+
+
+# -- exact tier properties -------------------------------------------------
+# hypothesis drives these when available; a seeded random sweep covers the
+# same invariants otherwise (the container may lack hypothesis).
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_TIER = ExactTier.build(
+    np.random.default_rng(3).normal(size=(40, 8)).astype(np.float32), "l2")
+
+
+def _check_padding_and_dup_properties(ids, k):
+    """-1 padding never surfaces; duplicate ids are counted once; every
+    surfaced id came from the input beam; finite slots sort ascending."""
+    ids = np.asarray(ids, np.int32)
+    Q = np.zeros((ids.shape[0], 8), np.float32)
+    d, out = _TIER.rerank_many(Q, ids, k)
+    assert out.shape == (ids.shape[0], k)
+    for lane in range(ids.shape[0]):
+        valid = out[lane][out[lane] >= 0]
+        # no duplicates among surfaced ids
+        assert len(valid) == len(set(valid.tolist()))
+        # surfaced ids are a subset of the lane's non-padding candidates
+        cand = set(int(x) for x in ids[lane] if x >= 0)
+        assert set(valid.tolist()) <= cand
+        # exactly min(k, |unique candidates|) surface
+        assert len(valid) == min(k, len(cand))
+        # -1 slots carry +inf and trail the finite ones
+        fin = np.isfinite(d[lane])
+        assert (out[lane][~fin] == -1).all()
+        assert (np.diff(d[lane][fin]) >= 0).all()
+
+
+def _check_lane_of_many(ids):
+    ids = np.asarray(ids, np.int32)
+    rng = np.random.default_rng(0)
+    Q = rng.normal(size=(ids.shape[0], 8)).astype(np.float32)
+    dm, im = _TIER.rerank_many(Q, ids, 4)
+    for lane in range(ids.shape[0]):
+        ds, js = _TIER.rerank(Q[lane], ids[lane], 4)
+        np.testing.assert_array_equal(im[lane], js)
+        np.testing.assert_array_equal(dm[lane], ds)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.lists(st.integers(-1, 39), min_size=6, max_size=6),
+                    min_size=1, max_size=5),
+           st.integers(1, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_rerank_many_padding_and_dup_properties(ids, k):
+        _check_padding_and_dup_properties(ids, k)
+
+    @given(st.lists(st.lists(st.integers(-1, 39), min_size=5, max_size=5),
+                    min_size=2, max_size=4))
+    @settings(max_examples=40, deadline=None)
+    def test_rerank_is_lane_of_rerank_many(ids):
+        _check_lane_of_many(ids)
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_rerank_many_padding_and_dup_properties(seed):
+        rng = np.random.default_rng(seed)
+        b, w = int(rng.integers(1, 6)), 6
+        # heavy -1 / duplicate density, like converging beams produce
+        ids = rng.integers(-1, 12, size=(b, w))
+        _check_padding_and_dup_properties(ids, int(rng.integers(1, 9)))
+
+    @pytest.mark.parametrize("seed", range(15))
+    def test_rerank_is_lane_of_rerank_many(seed):
+        rng = np.random.default_rng(seed + 100)
+        ids = rng.integers(-1, 12, size=(int(rng.integers(2, 5)), 5))
+        _check_lane_of_many(ids)
+
+
+def test_jnp_rerank_padding_and_dup_semantics():
+    """The device-side rerank (repro.core.quantize.rerank/rerank_many)
+    obeys the same -1 contract: padded ids never surface, duplicates
+    count once."""
+    from repro.core.quantize import rerank, rerank_many
+    rng = np.random.default_rng(5)
+    X = jnp.asarray(rng.normal(size=(20, 8)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    ids = jnp.asarray([3, 3, -1, 7, 7, 7, -1, 2], jnp.int32)
+    d, out = rerank(q, X, ids, 6, "l2")
+    out = np.asarray(out)
+    valid = out[out >= 0]
+    assert sorted(valid.tolist()) == [2, 3, 7]
+    assert (np.asarray(d)[3:] == np.inf).all() and (out[3:] == -1).all()
+    db_, outb = rerank_many(jnp.stack([q, q]), X, jnp.stack([ids, ids]), 6,
+                            "l2")
+    np.testing.assert_array_equal(np.asarray(outb[0]), out)
+    np.testing.assert_array_equal(np.asarray(outb[1]), out)
+
+
+# -- program cache / compiles ---------------------------------------------
+
+def test_quantized_programs_key_on_residency(index, queries):
+    """f32 and int8 programs coexist in one cache: same plan shape, two
+    residency arms, no collision and no steady-state compiles across
+    batch sizes within a bucket."""
+    from repro.api.plan_compile import ProgramCache
+    idx = dataclasses.replace(index, program_cache=ProgramCache(),
+                              _qview=None, quantized=None)
+    cache = idx.program_cache
+    idx.search_many(queries[:5], k=6, efs=24)          # f32 program
+    misses_after_f32 = cache.stats.misses
+    idx.search_quantized_many(queries[:5], k=6, efs=24)   # int8 program
+    assert cache.stats.misses == misses_after_f32 + 1
+    steady = cache.stats.misses
+    # same bucket (8): 5, 7, 8 lanes -> zero new compiles
+    idx.search_quantized_many(queries[:7], k=6, efs=24)
+    idx.search_quantized_many(queries[:8], k=6, efs=24)
+    idx.search_quantized(queries[0], k=6, efs=24)      # single: 1 compile
+    idx.search_quantized(queries[1], k=6, efs=24)      # ...then cached
+    assert cache.stats.misses == steady + 1
+    keys = {k_.resident for k_ in cache._programs}
+    assert keys == {"f32", "int8"}
+
+
+def test_zero_steady_state_compiles_across_bucket(index, queries):
+    """CompileCounter gate: after warming one batch bucket, quantized
+    searches at other batch sizes in the bucket compile NOTHING."""
+    from repro.analysis.runtime import CompileCounter
+    from repro.api.plan_compile import ProgramCache
+    idx = dataclasses.replace(index, program_cache=ProgramCache(),
+                              _qview=None, quantized=None)
+    with CompileCounter() as cc:
+        idx.search_quantized_many(queries[:8], k=6, efs=24)    # warm
+        cc.mark("steady")
+        idx.search_quantized_many(queries[:5], k=6, efs=24)
+        idx.search_quantized_many(queries[:7], k=6, efs=24)
+        idx.search_quantized_many(queries[:8], k=6, efs=24)
+    assert cc.counts.get("steady", 0) == 0, cc.counts
+
+
+# -- db + serving integration ---------------------------------------------
+
+def test_db_quantize_index_execute(index, queries):
+    from repro.api import NavixDB, Q
+
+    db = NavixDB()
+    db.register_index("chunks", dataclasses.replace(
+        index, program_cache=None, _qview=None, quantized=None),
+        table="Chunk")
+    db.store.node("Chunk").add_column("cID", np.arange(index.graph.n))
+    plan = Q.match("Chunk").knn(queries[0], k=6, efs=36).project("cID")
+    rs_f32 = db.execute(plan)
+    qidx = db.quantize_index("chunks")
+    assert qidx.is_quantized and db.index("chunks") is qidx
+    rs_q8 = db.execute(plan)
+    assert rs_q8.ids.shape == rs_f32.ids.shape
+    assert rs_q8.timings.rerank_ms > 0.0
+    assert rs_f32.timings.rerank_ms == 0.0
+    assert "rerank_ms" in rs_q8.timings.as_dict()
+    # lane-for-lane vs the index-level API
+    single = index.search_quantized(queries[0], k=6, efs=36)
+    np.testing.assert_array_equal(rs_q8.ids, np.asarray(single.ids))
+    # batch execute
+    rs_b = db.execute(Q.match("Chunk").knn(queries[0], k=6, efs=36),
+                      query=queries[:5])
+    many = index.search_quantized_many(queries[:5], k=6, efs=36)
+    np.testing.assert_array_equal(rs_b.ids, np.asarray(many.ids))
+
+
+def test_db_quantize_sharded_rejected():
+    import jax
+
+    from repro.api.db import NavixDB
+    from repro.core.distributed import ShardedNavix
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    X = np.random.default_rng(0).normal(size=(300, 16)).astype(np.float32)
+    sn = ShardedNavix.build(X, NavixConfig(m_u=8, ef_construction=32), mesh)
+    db = NavixDB()
+    db.register_index("sharded", sn)
+    with pytest.raises(ValueError, match="sharded"):
+        db.quantize_index("sharded")
+
+
+def test_serving_engine_over_quantized_index(index, queries):
+    """The continuous scheduler serves a quantized-resident index:
+    finalize re-ranks against the exact tier, and every response matches
+    the single-query quantized search bitwise."""
+    from repro.serving.engine import SearchEngine
+    from repro.storage.columnar import GraphStore
+
+    qidx = dataclasses.replace(index.quantize_resident(),
+                               program_cache=None)
+    store = GraphStore()
+    store.add_node_table("Chunk", index.graph.n,
+                         {"cID": np.arange(index.graph.n)})
+    eng = SearchEngine(index=qidx, store=store, efs=30, max_batch=4,
+                       scheduler="continuous", step_iters=3)
+    rids = {eng.submit(q, k=6): i for i, q in enumerate(queries[:6])}
+    responses = eng.drain()
+    assert sorted(r.rid for r in responses) == sorted(rids)
+    for r in responses:
+        single = index.search_quantized(queries[rids[r.rid]], k=6, efs=30)
+        np.testing.assert_array_equal(r.ids, np.asarray(single.ids),
+                                      err_msg=f"rid {r.rid}")
+        np.testing.assert_allclose(r.dists, np.asarray(single.dists),
+                                   rtol=1e-5, atol=1e-5)
