@@ -225,16 +225,21 @@ def run_open_loop(smoke: bool = False) -> list[dict]:
     closed-queue drain QPS. Rows merge into BENCH_serving.json next to
     the closed-queue rows (kept for trend continuity).
 
-    The whole arm runs under the two runtime guards from
+    The whole arm runs under the three runtime guards from
     ``repro.analysis.runtime``: the compile counter proves the timed
     steady state compiles NOTHING (every XLA program is built during
     warmup; a steady-state compile is a silent latency cliff that
-    masquerades as an algorithmic regression), and the lock monitor
-    proves the serving tier's lock acquisition graph stays acyclic
-    under real concurrency. Both land in the JSON payload; the compile
-    counts are drift-checked against the committed
-    ``experiments/bench/COMPILE_baseline.json`` by ``trend.py``."""
-    from repro.analysis.runtime import CompileCounter, instrument_locks
+    masquerades as an algorithmic regression), the lock monitor proves
+    the serving tier's lock acquisition graph stays acyclic under real
+    concurrency, and the donation guard turns any lane-state access
+    inside a step_async/step_wait window into a hard DonationError
+    (donation is a no-op on CPU, so without the guard such a bug would
+    pass here and corrupt on TPU/GPU). All three land in the JSON
+    payload; the compile counts are drift-checked against the
+    committed ``experiments/bench/COMPILE_baseline.json`` by
+    ``trend.py``."""
+    from repro.analysis.runtime import (
+        CompileCounter, guard_donation, instrument_locks)
     from repro.api.db import NavixDB
 
     n, d, n_req, reps = _workload()
@@ -250,7 +255,8 @@ def run_open_loop(smoke: bool = False) -> list[dict]:
         store.add_node_table("Chunk", n, {"cID": np.arange(n)})
         return store
 
-    with CompileCounter() as cc, instrument_locks() as locks:
+    with CompileCounter() as cc, instrument_locks() as locks, \
+            guard_donation() as donate:
         # closed-queue anchor: the continuous scheduler's drain QPS on
         # the identical stream sets the offered-load scale
         engine = SearchEngine(index=index, store=make_store(), efs=EFS,
@@ -299,6 +305,7 @@ def run_open_loop(smoke: bool = False) -> list[dict]:
     steady_compiles = sum(v for k, v in cc.counts.items()
                           if k.startswith("steady"))
     lock_report = locks.report()
+    donation_report = donate.report()
     common.emit(rows, "serving_open_loop")
 
     # merge next to the closed-queue rows (replacing any previous
@@ -314,13 +321,15 @@ def run_open_loop(smoke: bool = False) -> list[dict]:
                             "n_req": n_req, "smoke": smoke,
                             "compiles": dict(cc.counts),
                             "steady_compiles": steady_compiles,
-                            "lock_order": lock_report}
+                            "lock_order": lock_report,
+                            "donation_guard": donation_report}
     JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
     JSON_OUT.write_text(json.dumps(payload, indent=2) + "\n")
     for r in rows:
         r["_closed_drain_ms"] = closed_drain_ms
         r["_steady_compiles"] = steady_compiles
         r["_lock_cycles"] = lock_report["cycles"]
+        r["_donation_windows"] = donation_report["windows"]
     return rows
 
 
@@ -328,7 +337,9 @@ def validate_open_loop(rows: list[dict]) -> list[str]:
     """Open-loop gates: 0 timeouts at generous deadlines, p99 bounded
     by the closed-queue FULL-drain wall time at <= 0.7x load (an
     unbounded queue would blow straight past it), ZERO steady-state XLA
-    compiles, and an acyclic lock acquisition graph."""
+    compiles, an acyclic lock acquisition graph, and a live donation
+    guard (>= 1 observed donation window -- violations raise inside
+    the run itself)."""
     fails: list[str] = []
     if not rows:
         return ["open-loop produced no rows"]
@@ -341,6 +352,11 @@ def validate_open_loop(rows: list[dict]) -> list[str]:
     if r0.get("_lock_cycles"):
         fails.append("lock-order cycles in the serving tier: "
                      + "; ".join(r0["_lock_cycles"]))
+    if not r0.get("_donation_windows"):
+        fails.append("the donation guard saw zero step_async/step_wait "
+                     "windows: the open-loop arm is no longer running "
+                     "under guard_donation (a use-after-donate would "
+                     "go undetected)")
     for r in rows:
         if r["timeout_rate"] > 0:
             fails.append(f"open-loop timeout rate {r['timeout_rate']:.2%} "

@@ -46,8 +46,8 @@ def _ensure_host_devices(need: int) -> None:
         try:
             from jax._src import xla_bridge
             initialized = bool(xla_bridge._backends)
-        except Exception:       # private API moved: assume initialized
-            initialized = True
+        except (ImportError, AttributeError):
+            initialized = True  # private API moved: assume initialized
         if initialized:
             have = len(jax_mod.devices())
             if have < need:

@@ -3,11 +3,26 @@
 Usage::
 
     python -m repro.analysis [--strict] [--github] [paths ...]
+    python -m repro.analysis --write-baseline
+    python -m repro.analysis --changed-only --strict
 
-Default paths are ``src`` and ``tests`` (resolved relative to the repo
-root, found by walking up from this file). ``--strict`` exits non-zero
-on any finding; ``--github`` additionally renders findings as GitHub
-Actions ``::error`` annotations so they land on the PR diff.
+Default paths are ``src``, ``tests``, ``benchmarks`` and ``examples``
+(resolved relative to the repo root, found by walking up from this
+file). ``--strict`` exits non-zero on any finding; ``--github``
+additionally renders findings as GitHub Actions ``::error`` annotations
+so they land on the PR diff.
+
+``ANALYSIS_baseline.json`` (committed at the repo root) records a
+content hash per analyzed file from the last clean full run.
+``--changed-only`` still runs the *whole-project* analysis -- the
+interprocedural passes (NX2xx lock discipline, NX5xx tracer flow,
+NX6xx key coverage, NX7xx donation) need every module's call graph --
+but only reports findings in files whose hash differs from the
+baseline, so a focused edit gets a focused report.
+
+``--budget SECONDS`` enforces the analyzer's own runtime contract: the
+full-tree run must stay fast enough to sit in the inner loop (CI pins
+30s). Overrunning the budget is itself a failure under ``--strict``.
 
 ruff is invoked when it's on PATH and skipped (with a note) when it
 isn't -- the container image doesn't ship it, CI installs it. navilint's
@@ -17,12 +32,18 @@ own NX4xx hygiene rules keep pyflakes-grade coverage either way.
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
 import pathlib
 import shutil
 import subprocess
 import sys
+import time
 
 from repro.analysis import navilint
+
+BASELINE_NAME = "ANALYSIS_baseline.json"
+DEFAULT_TREES = ("src", "tests", "benchmarks", "examples")
 
 
 def repo_root() -> pathlib.Path:
@@ -49,38 +70,123 @@ def run_ruff(paths: list[str], github: bool) -> int:
     return proc.returncode
 
 
+def _file_hashes(paths: list[str]) -> dict[str, str]:
+    root = repo_root()
+    out: dict[str, str] = {}
+    for path in navilint.iter_python_files(paths):
+        p = pathlib.Path(path).resolve()
+        try:
+            rel = str(p.relative_to(root))
+        except ValueError:
+            rel = str(p)
+        out[rel] = hashlib.sha256(p.read_bytes()).hexdigest()
+    return out
+
+
+def write_baseline(paths: list[str]) -> pathlib.Path:
+    target = repo_root() / BASELINE_NAME
+    payload = {"version": 1, "files": _file_hashes(paths)}
+    target.write_text(json.dumps(payload, indent=1, sort_keys=True)
+                      + "\n")
+    return target
+
+
+def changed_files(paths: list[str]) -> set[str] | None:
+    """Repo-relative paths whose content differs from the committed
+    baseline (new files count as changed). None when no baseline."""
+    target = repo_root() / BASELINE_NAME
+    if not target.exists():
+        return None
+    try:
+        base = json.loads(target.read_text()).get("files", {})
+    except (json.JSONDecodeError, OSError):
+        return None
+    current = _file_hashes(paths)
+    return {rel for rel, digest in current.items()
+            if base.get(rel) != digest}
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="navilint + ruff over the repo tree")
     ap.add_argument("paths", nargs="*",
-                    help="files/dirs to analyze (default: src tests)")
+                    help="files/dirs to analyze "
+                         "(default: src tests benchmarks examples)")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero on any finding")
     ap.add_argument("--github", action="store_true",
                     help="emit GitHub Actions ::error annotations")
     ap.add_argument("--no-ruff", action="store_true",
                     help="run only navilint")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="analyze the whole project but report only "
+                         "findings in files changed vs "
+                         + BASELINE_NAME)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record per-file content hashes to "
+                         + BASELINE_NAME + " and exit")
+    ap.add_argument("--budget", type=float, default=None, metavar="SEC",
+                    help="fail (under --strict) when the navilint run "
+                         "itself exceeds SEC seconds")
     args = ap.parse_args(argv)
 
     paths = args.paths
     if not paths:
         root = repo_root()
-        paths = [str(root / "src"), str(root / "tests")]
+        paths = [str(root / t) for t in DEFAULT_TREES]
         paths = [p for p in paths if pathlib.Path(p).exists()]
 
+    if args.write_baseline:
+        target = write_baseline(paths)
+        n = len(json.loads(target.read_text())["files"])
+        print(f"[analysis] baseline written: {target.name} "
+              f"({n} files)")
+        return 0
+
+    t0 = time.monotonic()
     findings = navilint.analyze_paths(paths)
+    elapsed = time.monotonic() - t0
+
+    if args.changed_only:
+        changed = changed_files(paths)
+        if changed is None:
+            print(f"[analysis] no {BASELINE_NAME}; --changed-only "
+                  f"falls back to a full report")
+        else:
+            root = repo_root()
+
+            def _rel(f):
+                try:
+                    return str(pathlib.Path(
+                        f.path).resolve().relative_to(root))
+                except ValueError:
+                    return f.path
+
+            total = len(findings)
+            findings = [f for f in findings if _rel(f) in changed]
+            print(f"[analysis] --changed-only: {len(changed)} changed "
+                  f"file(s); reporting {len(findings)}/{total} "
+                  f"finding(s)")
+
     for f in findings:
         print(f.render())
         if args.github:
             print(f.github())
     n_files = len(navilint.iter_python_files(paths))
     print(f"[analysis] navilint: {len(findings)} finding(s) "
-          f"across {n_files} file(s)")
+          f"across {n_files} file(s) in {elapsed:.1f}s")
+
+    over_budget = args.budget is not None and elapsed > args.budget
+    if over_budget:
+        print(f"[analysis] BUDGET EXCEEDED: navilint took "
+              f"{elapsed:.1f}s > {args.budget:.0f}s -- the analyzer "
+              f"must stay fast enough for the inner loop",
+              file=sys.stderr)
 
     ruff_rc = 0 if args.no_ruff else run_ruff(paths, args.github)
 
-    if findings and args.strict:
+    if args.strict and (findings or over_budget):
         return 1
     if ruff_rc != 0 and args.strict:
         return ruff_rc

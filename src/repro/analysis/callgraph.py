@@ -1,0 +1,376 @@
+"""Project-wide call graph for navilint's flow passes.
+
+navilint's lexical rules see one file at a time; the flow families
+(NX5xx tracer-flow, NX6xx key coverage, NX7xx donation safety, and the
+interprocedural NX201 lock proof) need to know *who calls whom* across
+the whole sweep. This module parses every swept file once into a
+:class:`Project` -- modules, function definitions under their
+``__qualname__`` spelling (nested functions use ``<locals>``, matching
+the hot-path registry), import aliases -- and resolves call expressions
+to definitions:
+
+* ``name(...)``            -> enclosing scopes, then module level, then
+  ``from m import name`` targets in other swept modules;
+* ``self.method(...)``     -> the enclosing class's method;
+* ``alias.attr(...)``      -> ``import repro.core.x as alias`` /
+  ``from repro.core import x`` module aliases.
+
+Resolution is deliberately conservative: anything it cannot prove
+(library calls, duck-typed dispatch, getattr) resolves to ``None`` and
+the flow passes fall back to their safe default for that edge.
+
+The module also extracts the JAX *entry-point* metadata the passes key
+on: ``jit`` decorations (including ``functools.partial(jax.jit, ...)``),
+``static_argnames``/``static_argnums``, and ``donate_argnums`` --
+including the conditional ``(3,) if donate else ()`` spelling the
+sharded program builders use (recorded as ``donate_cond="donate"``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+#: higher-order jax/lax entry points whose function-valued arguments run
+#: traced (positions of those arguments per callee name)
+TRACED_HOF_ARGS: dict[str, tuple[int, ...]] = {
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "scan": (0,),
+    "cond": (1, 2),
+    "switch": (1, 2, 3, 4, 5),
+    "vmap": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "custom_jvp": (0,),
+    "custom_vjp": (0,),
+    "associative_scan": (0,),
+}
+
+
+@dataclasses.dataclass(eq=False)      # identity hash: one node, one info
+class FuncInfo:
+    """One function definition, with its jit/donation metadata."""
+    qualname: str
+    module: "ModuleInfo"
+    node: ast.AST                      # FunctionDef | AsyncFunctionDef
+    cls: Optional[str] = None          # enclosing class qualname
+    root_kind: Optional[str] = None    # "jit" | "shard_map" | "pallas"
+    static_names: frozenset = frozenset()
+    static_nums: frozenset = frozenset()
+    donate_idx: tuple = ()             # donated positional indices
+    donate_cond: Optional[str] = None  # name gating donation (IfExp test)
+
+    @property
+    def params(self) -> list[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    @property
+    def kwonly(self) -> list[str]:
+        return [p.arg for p in self.node.args.kwonlyargs]
+
+    @property
+    def vararg(self) -> Optional[str]:
+        va = self.node.args.vararg
+        return va.arg if va is not None else None
+
+    def param_index(self, name: str) -> Optional[int]:
+        try:
+            return self.params.index(name)
+        except ValueError:
+            return None
+
+    def bind(self, call: ast.Call) -> dict[str, ast.expr]:
+        """Map parameter names to call-site argument expressions (best
+        effort; ``*args``/``**kwargs`` at the call site stop binding).
+        For a method called through an attribute (``obj.m(a)``) the
+        receiver is implicit, so ``self``/``cls`` is skipped."""
+        out: dict[str, ast.expr] = {}
+        params = self.params
+        if (self.cls is not None and params
+                and params[0] in ("self", "cls")
+                and isinstance(call.func, ast.Attribute)):
+            params = params[1:]
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                break
+            if i < len(params):
+                out[params[i]] = arg
+        for kw in call.keywords:
+            if kw.arg is not None:
+                out[kw.arg] = kw.value
+        return out
+
+
+def attr_chain(node: ast.AST) -> list[str]:
+    """``a.b.c`` -> ["a", "b", "c"]; [] when not a plain name chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return []
+
+
+def _const_strs(node: ast.AST) -> frozenset:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return frozenset([node.value])
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return frozenset(e.value for e in node.elts
+                         if isinstance(e, ast.Constant))
+    return frozenset()
+
+
+def _const_ints(node: ast.AST) -> tuple:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant))
+    return ()
+
+
+def parse_jit_kwargs(call: ast.Call) -> dict:
+    """static/donate metadata from a ``jit(...)``/``partial(jit, ...)``
+    call's keywords. ``donate_argnums=(3,) if donate else ()`` records
+    the body tuple plus the gating name in ``donate_cond``."""
+    out = {"static_names": frozenset(), "static_nums": frozenset(),
+           "donate_idx": (), "donate_cond": None}
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            out["static_names"] = _const_strs(kw.value)
+        elif kw.arg == "static_argnums":
+            out["static_nums"] = frozenset(_const_ints(kw.value))
+        elif kw.arg in ("donate_argnums", "donate_argnames"):
+            val = kw.value
+            if (isinstance(val, ast.IfExp)
+                    and isinstance(val.test, ast.Name)):
+                out["donate_cond"] = val.test.id
+                val = val.body
+            out["donate_idx"] = _const_ints(val)
+    return out
+
+
+def _is_jit_chain(chain: list) -> bool:
+    return bool(chain) and chain[-1] == "jit" and (
+        len(chain) == 1 or chain[0] in ("jax", "functools"))
+
+
+def _is_partial_jit(call: ast.Call) -> bool:
+    chain = attr_chain(call.func)
+    return (bool(chain) and chain[-1] == "partial" and call.args
+            and _is_jit_chain(attr_chain(call.args[0])))
+
+
+class ModuleInfo:
+    """One parsed file: definitions under registry-style qualnames plus
+    the import aliases call resolution needs."""
+
+    def __init__(self, path: str, rel_path: str, tree: ast.Module):
+        self.path = path
+        self.rel_path = rel_path
+        self.tree = tree
+        self.name = self._module_name(rel_path)
+        self.funcs: dict[str, FuncInfo] = {}
+        self.classes: dict[str, ast.ClassDef] = {}
+        self.import_alias: dict[str, str] = {}
+        self.from_names: dict[str, tuple] = {}
+        self._collect_imports(tree)
+        self._collect_defs(tree, qual="", cls=None)
+
+    @staticmethod
+    def _module_name(rel_path: str) -> str:
+        stem = rel_path[:-3] if rel_path.endswith(".py") else rel_path
+        if stem.endswith("/__init__"):
+            stem = stem[: -len("/__init__")]
+        return stem.replace("/", ".")
+
+    def _collect_imports(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_alias[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if a.name != "*":
+                        self.from_names[a.asname or a.name] = (
+                            node.module, a.name)
+
+    def _collect_defs(self, node: ast.AST, qual: str,
+                      cls: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{qual}{child.name}"
+                info = FuncInfo(q, self, child, cls=cls)
+                self._apply_decorators(info)
+                self.funcs[q] = info
+                self._collect_defs(child, f"{q}.<locals>.", cls=None)
+            elif isinstance(child, ast.ClassDef):
+                cq = f"{qual}{child.name}"
+                self.classes[cq] = child
+                self._collect_defs(child, f"{cq}.", cls=cq)
+            else:
+                self._collect_defs(child, qual, cls)
+
+    def _apply_decorators(self, info: FuncInfo) -> None:
+        for dec in info.node.decorator_list:
+            if _is_jit_chain(attr_chain(dec)):
+                info.root_kind = "jit"
+            elif isinstance(dec, ast.Call):
+                if _is_partial_jit(dec) or _is_jit_chain(
+                        attr_chain(dec.func)):
+                    info.root_kind = "jit"
+                    for k, v in parse_jit_kwargs(dec).items():
+                        setattr(info, k, v)
+
+
+class Project:
+    """Every swept module, with cross-module call resolution."""
+
+    def __init__(self, modules: list):
+        self.modules: list[ModuleInfo] = list(modules)
+        self.by_name: dict[str, ModuleInfo] = {}
+        for m in self.modules:
+            self.by_name.setdefault(m.name, m)
+        self._mark_call_roots()
+
+    # -- construction ---------------------------------------------------
+    def _mark_call_roots(self) -> None:
+        """Functions passed (by name) into shard_map / pallas_call /
+        jax.jit calls are traced entry points too."""
+        for mod in self.modules:
+            for fi in list(mod.funcs.values()):
+                for call in ast.walk(fi.node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    chain = attr_chain(call.func)
+                    if not chain or not call.args:
+                        continue
+                    target = self.resolve(mod, fi.qualname, call.args[0])
+                    if target is None:
+                        continue
+                    last = chain[-1]
+                    if last in ("shard_map", "_shard_map"):
+                        target.root_kind = target.root_kind or "shard_map"
+                    elif last == "pallas_call":
+                        target.root_kind = target.root_kind or "pallas"
+                    elif _is_jit_chain(chain):
+                        target.root_kind = target.root_kind or "jit"
+                        for k, v in parse_jit_kwargs(call).items():
+                            if v:
+                                setattr(target, k, v)
+
+    # -- resolution -----------------------------------------------------
+    def _scope_prefixes(self, qual: str) -> list:
+        """Lexical scopes a name is looked up in, innermost first."""
+        parts = qual.split(".<locals>.")
+        out = []
+        for i in range(len(parts), 0, -1):
+            out.append(".<locals>.".join(parts[:i]) + ".<locals>.")
+        out.append("")
+        return out
+
+    def resolve(self, mod: ModuleInfo, caller_qual: str,
+                expr: ast.AST) -> Optional[FuncInfo]:
+        """Resolve a callee expression to its definition, or ``None``."""
+        if isinstance(expr, ast.Name):
+            for prefix in self._scope_prefixes(caller_qual):
+                hit = mod.funcs.get(prefix + expr.id)
+                if hit is not None:
+                    return hit
+            src = mod.from_names.get(expr.id)
+            if src is not None:
+                target = self.by_name.get(src[0])
+                if target is not None:
+                    return target.funcs.get(src[1])
+            return None
+        if isinstance(expr, ast.Attribute) and isinstance(
+                expr.value, ast.Name):
+            base, attr = expr.value.id, expr.attr
+            if base == "self":
+                caller = mod.funcs.get(caller_qual)
+                if caller is not None and caller.cls:
+                    return mod.funcs.get(f"{caller.cls}.{attr}")
+                return None
+            target_name = None
+            if base in mod.import_alias:
+                target_name = mod.import_alias[base]
+            elif base in mod.from_names:
+                m, a = mod.from_names[base]
+                target_name = f"{m}.{a}"
+            if target_name is not None:
+                target = self.by_name.get(target_name)
+                if target is not None:
+                    return target.funcs.get(attr)
+        return None
+
+    def iter_funcs(self):
+        for mod in self.modules:
+            yield from mod.funcs.values()
+
+
+def build_project(parsed: list) -> Project:
+    """``parsed``: iterable of (path, rel_path, ast.Module)."""
+    return Project([ModuleInfo(p, rel, tree) for p, rel, tree in parsed])
+
+
+# -- class-local call sites (interprocedural NX201) -------------------------
+
+@dataclasses.dataclass
+class MethodCallSite:
+    caller: str                 # enclosing method name
+    lexical_locks: frozenset    # self.<lock> With-blocks around the call
+
+
+def class_call_sites(cls: ast.ClassDef
+                     ) -> tuple[dict[str, list], set]:
+    """Intra-class ``self.m(...)`` call sites with the ``with
+    self.<lock>`` context lexically around each, plus the set of methods
+    that *escape* -- referenced as ``self.m`` in non-call position
+    (callbacks, thread targets), where no caller-side lock proof holds.
+    """
+    sites: dict[str, list] = {}
+    escapes: set = set()
+
+    def walk(node: ast.AST, held: frozenset, method: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            child_held = held
+            if isinstance(child, ast.With):
+                acquired = set()
+                for item in child.items:
+                    ce = item.context_expr
+                    if (isinstance(ce, ast.Attribute)
+                            and isinstance(ce.value, ast.Name)
+                            and ce.value.id == "self"):
+                        acquired.add(ce.attr)
+                child_held = held | frozenset(acquired)
+            if (isinstance(child, ast.Call)
+                    and isinstance(child.func, ast.Attribute)
+                    and isinstance(child.func.value, ast.Name)
+                    and child.func.value.id == "self"):
+                sites.setdefault(child.func.attr, []).append(
+                    MethodCallSite(method, child_held))
+                for sub in child.args + [kw.value for kw in child.keywords]:
+                    walk(sub, child_held, method)
+                continue
+            walk_refs_shallow(child)
+            walk(child, child_held, method)
+
+    def walk_refs_shallow(node: ast.AST) -> None:
+        # a bare `self.m` that is not the func of a Call escapes
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and isinstance(node.ctx, ast.Load)):
+            escapes.add(node.attr)
+
+    for item in cls.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            walk(item, frozenset(), item.name)
+    return sites, escapes

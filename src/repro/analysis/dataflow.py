@@ -1,0 +1,560 @@
+"""Tracer-flow analysis (NX5xx): host-Python operations on traced values.
+
+The lexical hot-path rules (NX1xx) only see code *inside* registered hot
+functions. This pass instead starts from every JAX entry point -- ``jit``
+decorations, ``shard_map`` bodies, ``pallas_call`` kernels -- in
+``repro/core/``, ``repro/kernels/``, and ``repro/api/plan_compile.py``,
+and propagates *traced-ness* through the transitive call closure:
+
+* a root's parameters are traced except ``static_argnames`` /
+  ``static_argnums``;
+* a callee's parameter is traced when any resolvable call site passes a
+  traced argument there; the join is monotone, so the fixpoint is small;
+* function results are traced when any ``return`` expression is traced,
+  and ``jnp.* / lax.* / jax.*`` library calls are traced by construction;
+* values that are static *by structure* stay static: ``.shape/.ndim/
+  .dtype/.size`` reads, attributes of static parameters (``params.ub``),
+  ``x is None`` tests, ``len()``/``isinstance()`` results, and the
+  truthiness of a ``*args`` tuple (``efsl[0] if efsl else None`` -- the
+  element is traced, the emptiness test is not).
+
+Three sink rules fire anywhere in the closure:
+
+* **NX501** -- Python-level control flow (``if``/``while``/``assert``/
+  conditional expressions) on a traced value: under ``jit`` this raises
+  ``TracerBoolConversionError`` at trace time on real inputs, or worse,
+  silently freezes a data-dependent decision at trace-time constants.
+* **NX502** -- host conversion of a traced value (``np.*`` calls,
+  ``.item()/.tolist()/.block_until_ready()``, ``int/float/bool(...)``,
+  ``jax.device_get``): a device sync inside the traced region.
+* **NX503** -- a traced value used as a *shape* (``jnp.zeros(n, ...)``,
+  ``x.reshape(m, -1)``, ``jnp.broadcast_to(x, shp)`` where ``n/m/shp``
+  are traced): shapes must be static under XLA; this retraces per value
+  at best and fails to lower at worst.
+
+Suppression kind: ``# navilint: trace-ok <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.callgraph import (
+    TRACED_HOF_ARGS, FuncInfo, Project, attr_chain)
+
+TRACE_BRANCH = "NX501"
+TRACE_HOST = "NX502"
+TRACE_SHAPE = "NX503"
+
+#: traced-ness lattice: STATIC < CONTAINER (static tuple that may hold
+#: traced elements, e.g. ``*args``) < TRACED
+STATIC, CONTAINER, TRACED = 0, 1, 2
+
+#: attribute reads that are static even on a traced value
+_STATIC_ATTRS = frozenset(
+    {"shape", "ndim", "dtype", "size", "weak_type", "sharding"})
+#: builtins whose result is static regardless of argument traced-ness
+_STATIC_BUILTINS = frozenset(
+    {"len", "range", "isinstance", "issubclass", "hasattr", "type",
+     "id", "repr", "str", "format", "print", "enumerate"})
+#: library roots whose call results are traced arrays
+_TRACED_ROOTS = frozenset({"jnp", "jax", "lax", "pl", "plgpu", "pltpu"})
+#: library helpers whose result is static even on traced input
+#: (``jnp.ndim(x)`` is a Python int, not a tracer)
+_STATIC_LIB_FNS = frozenset(
+    {"ndim", "shape", "size", "result_type", "issubdtype",
+     "iscomplexobj"})
+#: numpy aliases: calling these on a traced value is a host conversion
+_NUMPY_ROOTS = ("np", "numpy", "onp")
+_SYNC_METHODS = ("item", "tolist", "block_until_ready", "copy_to_host",
+                 "__array__")
+#: jnp constructors whose FIRST positional argument is a shape
+_SHAPE_ARG0 = frozenset({"zeros", "ones", "empty", "full"})
+
+
+def _root_scope(rel_path: str) -> bool:
+    return (rel_path.startswith("repro/core/")
+            or rel_path.startswith("repro/kernels/")
+            or rel_path == "repro/api/plan_compile.py")
+
+
+def _property_is_static(fn: ast.FunctionDef) -> bool:
+    """True for one-expression properties that compute from static
+    structure only (``HnswGraph.n -> self.vectors.shape[0]``)."""
+    body = [s for s in fn.body
+            if not (isinstance(s, ast.Expr)
+                    and isinstance(s.value, ast.Constant))]
+    if len(body) != 1 or not isinstance(body[0], ast.Return):
+        return False
+
+    def ok(e: ast.AST) -> bool:
+        if e is None or isinstance(e, ast.Constant):
+            return True
+        if isinstance(e, ast.Attribute):
+            return e.attr in _STATIC_ATTRS
+        if isinstance(e, ast.Subscript):
+            return ok(e.value) and ok(e.slice)
+        if isinstance(e, ast.BinOp):
+            return ok(e.left) and ok(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return ok(e.operand)
+        if isinstance(e, ast.Compare):
+            return ok(e.left) and all(ok(c) for c in e.comparators)
+        if isinstance(e, ast.Tuple):
+            return all(ok(x) for x in e.elts)
+        if isinstance(e, ast.Call):
+            chain = attr_chain(e.func)
+            return (len(chain) == 1
+                    and chain[0] in (_STATIC_BUILTINS
+                                     | {"int", "min", "max"})
+                    and all(ok(a) for a in e.args))
+        return False
+
+    return ok(body[0].value)
+
+
+def _static_property_names(project: Project) -> frozenset:
+    """Property names that are static in *every* class defining them."""
+    static: set = set()
+    traced: set = set()
+    for fi in project.iter_funcs():
+        if fi.cls is None:
+            continue
+        is_prop = any(
+            (isinstance(d, ast.Name) and d.id == "property")
+            or (isinstance(d, ast.Attribute)
+                and d.attr == "cached_property")
+            for d in fi.node.decorator_list)
+        if not is_prop:
+            continue
+        if _property_is_static(fi.node):
+            static.add(fi.node.name)
+        else:
+            traced.add(fi.node.name)
+    return frozenset(static - traced)
+
+
+def _init_params(fi: FuncInfo) -> dict:
+    env: dict[str, int] = {}
+    statics = fi.static_names
+    for i, p in enumerate(fi.params):
+        if fi.root_kind == "jit" and (p in statics or i in fi.static_nums):
+            env[p] = STATIC
+        else:
+            env[p] = TRACED
+    for p in fi.kwonly:
+        env[p] = STATIC if (fi.root_kind == "jit" and p in statics) \
+            else TRACED
+    if fi.vararg:
+        env[fi.vararg] = CONTAINER
+    return env
+
+
+class _FnFlow:
+    """One traversal of a closure member under a parameter state."""
+
+    def __init__(self, pass_, fi: FuncInfo, params: dict, report):
+        self.pass_ = pass_
+        self.fi = fi
+        self.env = dict(params)
+        self.report = report       # emit callback or None (summary mode)
+        self.returns_traced = False
+        self.span = (fi.node.lineno, fi.node.lineno)
+
+    # -- expression traced-ness ----------------------------------------
+    def traced(self, node: ast.AST) -> int:
+        if node is None or isinstance(node, (ast.Constant, ast.Lambda,
+                                             ast.JoinedStr)):
+            return STATIC
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, STATIC)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS \
+                    or node.attr in self.pass_.static_props:
+                return STATIC
+            chain = attr_chain(node)
+            if chain:
+                key = ".".join(chain)
+                if key in self.env:
+                    return self.env[key]
+                base = self.env.get(chain[0], STATIC)
+                # attributes of a static value (params.ub) are static;
+                # attributes of a traced pytree are traced leaves
+                return TRACED if base == TRACED else STATIC
+            return self.traced(node.value)
+        if isinstance(node, ast.Subscript):
+            base = self.traced(node.value)
+            if base == CONTAINER:
+                return TRACED
+            return base
+        if isinstance(node, ast.Starred):
+            return self.traced(node.value)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            vals = [self.traced(e) for e in node.elts]
+            if any(v == TRACED for v in vals):
+                return CONTAINER
+            return STATIC
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in node.ops):
+                return STATIC
+            vals = [self.traced(node.left)] + [
+                self.traced(c) for c in node.comparators]
+            return TRACED if TRACED in vals else STATIC
+        if isinstance(node, ast.BoolOp):
+            vals = [self.traced(v) for v in node.values]
+            return max(vals) if vals else STATIC
+        if isinstance(node, ast.BinOp):
+            return max(self.traced(node.left), self.traced(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.traced(node.operand)
+        if isinstance(node, ast.IfExp):
+            self.check_test(node.test, node)
+            return max(self.traced(node.body), self.traced(node.orelse))
+        if isinstance(node, ast.NamedExpr):
+            v = self.traced(node.value)
+            if isinstance(node.target, ast.Name):
+                self.env[node.target.id] = v
+            return v
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            vals = [self.traced(g.iter) for g in node.generators]
+            return CONTAINER if TRACED in vals or CONTAINER in vals \
+                else STATIC
+        if isinstance(node, ast.Call):
+            return self.call(node)
+        if isinstance(node, ast.Dict):
+            vals = [self.traced(v) for v in node.values if v is not None]
+            return CONTAINER if TRACED in vals else STATIC
+        return STATIC
+
+    # -- calls ----------------------------------------------------------
+    def _arg_vals(self, node: ast.Call) -> list:
+        return ([self.traced(a) for a in node.args]
+                + [self.traced(kw.value) for kw in node.keywords])
+
+    def call(self, node: ast.Call) -> int:
+        chain = attr_chain(node.func)
+        arg_vals = self._arg_vals(node)
+        any_traced = TRACED in arg_vals
+        # sinks first ---------------------------------------------------
+        if self.report is not None:
+            self._call_sinks(node, chain, arg_vals, any_traced)
+        # library results -----------------------------------------------
+        if chain:
+            root = chain[0]
+            if root in _NUMPY_ROOTS:
+                return STATIC          # host now (and flagged above)
+            if root in _TRACED_ROOTS:
+                if chain[-1] in _STATIC_LIB_FNS:
+                    return STATIC
+                return TRACED
+            if len(chain) == 1 and root in _STATIC_BUILTINS:
+                return STATIC
+            if len(chain) == 1 and root in ("int", "float", "bool"):
+                return STATIC          # concretized (flagged above)
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS):
+            return STATIC
+        # resolved callees ----------------------------------------------
+        callee = self.pass_.resolve_call(self.fi, node)
+        if callee is not None:
+            self.pass_.observe_edge(self.fi, callee, node, self)
+            if callee in self.pass_.closure:
+                return TRACED if self.pass_.returns_traced.get(
+                    callee, False) else STATIC
+        # method on a traced object, or unknown helper fed traced args
+        if (isinstance(node.func, ast.Attribute)
+                and self.traced(node.func.value) == TRACED):
+            return TRACED
+        return TRACED if any_traced else STATIC
+
+    def _call_sinks(self, node: ast.Call, chain: list, arg_vals: list,
+                    any_traced: bool) -> None:
+        dotted = ".".join(chain)
+        if chain and chain[0] in _NUMPY_ROOTS and any_traced:
+            self.emit(TRACE_HOST, node,
+                      f"'{dotted}' pulls a traced value to host inside "
+                      f"the jit closure (device sync / trace break)")
+            return
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS
+                and self.traced(node.func.value) == TRACED):
+            self.emit(TRACE_HOST, node,
+                      f"'.{node.func.attr}()' on a traced value inside "
+                      f"the jit closure")
+            return
+        if dotted in ("jax.device_get", "device_get") and any_traced:
+            self.emit(TRACE_HOST, node,
+                      "'jax.device_get' on a traced value inside the "
+                      "jit closure")
+            return
+        if (len(chain) == 1 and chain[0] in ("int", "float", "bool")
+                and node.args and self.traced(node.args[0]) == TRACED):
+            self.emit(TRACE_HOST, node,
+                      f"'{chain[0]}(...)' concretizes a traced value "
+                      f"(TracerBoolConversionError under jit)")
+            return
+        # shape sinks ---------------------------------------------------
+        if len(chain) >= 2 and chain[-2] in ("jnp", "numpy"):
+            fn = chain[-1]
+            if (fn in _SHAPE_ARG0 and node.args
+                    and self.traced(node.args[0]) == TRACED):
+                self.emit(TRACE_SHAPE, node,
+                          f"traced value as the shape of 'jnp.{fn}': "
+                          f"XLA shapes are static; this cannot lower")
+            elif (fn in ("reshape", "broadcast_to", "tile")
+                  and len(node.args) >= 2
+                  and self.traced(node.args[1]) == TRACED):
+                self.emit(TRACE_SHAPE, node,
+                          f"traced value as the target shape of "
+                          f"'jnp.{fn}'")
+            elif fn == "arange" and any(
+                    self.traced(a) == TRACED for a in node.args):
+                self.emit(TRACE_SHAPE, node,
+                          "traced bound in 'jnp.arange': the result "
+                          "shape would be data-dependent")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "reshape"
+              and self.traced(node.func.value) == TRACED
+              and any(self.traced(a) == TRACED for a in node.args)):
+            self.emit(TRACE_SHAPE, node,
+                      "traced value as a '.reshape' dimension")
+
+    # -- statements -----------------------------------------------------
+    def check_test(self, test: ast.AST, node: ast.AST) -> None:
+        if self.report is not None and self.traced(test) == TRACED:
+            self.emit(TRACE_BRANCH, node,
+                      "Python control flow on a traced value: under jit "
+                      "this either raises at trace time or freezes the "
+                      "decision at trace-time constants -- use lax.cond/"
+                      "lax.select/jnp.where")
+
+    def assign(self, target: ast.AST, value_tr: int,
+               value: Optional[ast.AST]) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = max(
+                value_tr, self.env.get(target.id, STATIC)) \
+                if self.pass_.widen else value_tr
+        elif isinstance(target, ast.Attribute):
+            chain = attr_chain(target)
+            if chain:
+                self.env[".".join(chain)] = value_tr
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            elts = value.elts if isinstance(
+                value, (ast.Tuple, ast.List)) and len(value.elts) == len(
+                    target.elts) else None
+            for i, t in enumerate(target.elts):
+                if elts is not None:
+                    self.assign(t, self.traced(elts[i]), elts[i])
+                else:
+                    tr = TRACED if value_tr in (TRACED, CONTAINER) \
+                        else STATIC
+                    self.assign(t, tr, None)
+        elif isinstance(target, ast.Starred):
+            self.assign(target.value, value_tr, None)
+
+    def walk_body(self, body: list) -> None:
+        for stmt in body:
+            self.span = (stmt.lineno, stmt.end_lineno or stmt.lineno)
+            self.stmt(stmt)
+
+    def stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return                      # nested defs analyzed separately
+        if isinstance(node, ast.Return):
+            if node.value is not None and self.traced(
+                    node.value) in (TRACED, CONTAINER):
+                self.returns_traced = True
+            return
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            value = getattr(node, "value", None)
+            if value is None:
+                return
+            tr = self.traced(value)
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                self.assign(t, tr, value)
+            return
+        if isinstance(node, ast.AugAssign):
+            tr = max(self.traced(node.target), self.traced(node.value))
+            self.assign(node.target, tr, None)
+            return
+        if isinstance(node, ast.Expr):
+            self.traced(node.value)
+            return
+        if isinstance(node, ast.If):
+            self.check_test(node.test, node)
+            self.walk_nested(node.body)
+            self.walk_nested(node.orelse)
+            return
+        if isinstance(node, ast.While):
+            self.check_test(node.test, node)
+            self.walk_nested(node.body)
+            self.walk_nested(node.orelse)
+            return
+        if isinstance(node, ast.Assert):
+            self.check_test(node.test, node)
+            return
+        if isinstance(node, ast.For):
+            it = self.traced(node.iter)
+            tr = TRACED if it in (TRACED, CONTAINER) else STATIC
+            self.assign(node.target, tr, None)
+            self.walk_nested(node.body)
+            self.walk_nested(node.orelse)
+            return
+        if isinstance(node, ast.With):
+            for item in node.items:
+                tr = self.traced(item.context_expr)
+                if item.optional_vars is not None:
+                    self.assign(item.optional_vars, tr, None)
+            self.walk_nested(node.body)
+            return
+        if isinstance(node, ast.Try):
+            self.walk_nested(node.body)
+            for h in node.handlers:
+                self.walk_nested(h.body)
+            self.walk_nested(node.orelse)
+            self.walk_nested(node.finalbody)
+            return
+        if isinstance(node, (ast.Raise,)):
+            if node.exc is not None:
+                self.traced(node.exc)
+            return
+        # default: evaluate child expressions for sink detection
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.traced(child)
+
+    def walk_nested(self, body: list) -> None:
+        outer = self.span
+        self.walk_body(body)
+        self.span = outer
+
+    def run(self) -> None:
+        # two passes over the body pick up loop-carried traced-ness
+        self.walk_body(self.fi.node.body)
+        if self.report is None:
+            self.walk_body(self.fi.node.body)
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.report(rule, self.fi.module, node, self.span, message)
+
+
+class TracerFlowPass:
+    """Fixpoint over the traced-call closure, then one reporting pass."""
+
+    def __init__(self, project: Project, emit):
+        self.project = project
+        self.emit = emit
+        self.closure: dict[FuncInfo, dict] = {}
+        self.returns_traced: dict[FuncInfo, bool] = {}
+        self.callers: dict[FuncInfo, set] = {}
+        self.widen = True
+        self.static_props = _static_property_names(project)
+        self._work: list[FuncInfo] = []
+
+    # -- closure membership --------------------------------------------
+    def _enter(self, fi: FuncInfo, params: dict) -> None:
+        if fi not in self.closure:
+            self.closure[fi] = dict(params)
+            self.returns_traced.setdefault(fi, False)
+            self._work.append(fi)
+            self._enter_nested(fi)
+
+    def _enter_nested(self, fi: FuncInfo) -> None:
+        """Functions defined lexically inside a closure member run
+        traced (loop bodies, shard_map locals, returned step closures)."""
+        prefix = f"{fi.qualname}.<locals>."
+        for qual, sub in fi.module.funcs.items():
+            if qual.startswith(prefix) and "<locals>" not in qual[
+                    len(prefix):]:
+                env = {p: TRACED for p in sub.params}
+                env.update({p: TRACED for p in sub.kwonly})
+                if sub.vararg:
+                    env[sub.vararg] = CONTAINER
+                self._enter(sub, env)
+
+    def resolve_call(self, caller: FuncInfo, node: ast.Call):
+        return self.project.resolve(
+            caller.module, caller.qualname, node.func)
+
+    def observe_edge(self, caller: FuncInfo, callee: FuncInfo,
+                     node: ast.Call, flow: _FnFlow) -> None:
+        if callee is caller:
+            return
+        binding = callee.bind(node)
+        env = {}
+        for p, expr in binding.items():
+            env[p] = flow.traced(expr)
+        # unbound params (defaults, *args call sites) stay static
+        for p in callee.params + callee.kwonly:
+            env.setdefault(p, STATIC)
+        if callee.vararg:
+            env[callee.vararg] = CONTAINER
+        if all(v == STATIC for v in env.values()) \
+                and callee not in self.closure:
+            return                      # host-only edge: not traced
+        self.callers.setdefault(callee, set()).add(caller)
+        old = self.closure.get(callee)
+        if old is None:
+            self._enter(callee, env)
+            return
+        changed = False
+        for p, v in env.items():
+            if v > old.get(p, STATIC):
+                old[p] = v
+                changed = True
+        if changed and callee not in self._work:
+            self._work.append(callee)
+
+    def _hof_edges(self, fi: FuncInfo) -> None:
+        """Name arguments passed to lax/jax higher-order entry points
+        from inside the closure run traced with all params traced."""
+        for call in ast.walk(fi.node):
+            if not isinstance(call, ast.Call):
+                continue
+            chain = attr_chain(call.func)
+            if not chain or chain[-1] not in TRACED_HOF_ARGS:
+                continue
+            if chain[0] not in _TRACED_ROOTS and len(chain) > 1:
+                continue
+            for pos in TRACED_HOF_ARGS[chain[-1]]:
+                if pos < len(call.args):
+                    target = self.project.resolve(
+                        fi.module, fi.qualname, call.args[pos])
+                    if target is not None:
+                        env = {p: TRACED for p in target.params}
+                        if target.vararg:
+                            env[target.vararg] = CONTAINER
+                        self._enter(target, env)
+
+    # -- driver ---------------------------------------------------------
+    def run(self) -> None:
+        for fi in self.project.iter_funcs():
+            if fi.root_kind and _root_scope(fi.module.rel_path):
+                self._enter(fi, _init_params(fi))
+        rounds = 0
+        while self._work and rounds < 4000:
+            rounds += 1
+            fi = self._work.pop()
+            flow = _FnFlow(self, fi, self.closure[fi], report=None)
+            flow.run()
+            self._hof_edges(fi)
+            if flow.returns_traced and not self.returns_traced.get(fi):
+                self.returns_traced[fi] = True
+                for caller in self.callers.get(fi, ()):
+                    if caller not in self._work:
+                        self._work.append(caller)
+        # reporting pass under the stable state
+        self.widen = False
+        for fi in sorted(self.closure,
+                         key=lambda f: (f.module.path, f.node.lineno)):
+            _FnFlow(self, fi, self.closure[fi], report=self.emit).run()
+
+
+def check(project: Project, emit) -> None:
+    """Run the tracer-flow pass; findings go through ``emit``."""
+    TracerFlowPass(project, emit).run()

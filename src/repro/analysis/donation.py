@@ -1,0 +1,443 @@
+"""Donation safety (NX7xx): def-use analysis of donated buffers.
+
+The serving tier's overlapped stepping donates its state buffers to the
+device (``engine_steps_overlap`` / ``steps_program(donate=True)``): the
+callee may write the result *in place* of the argument, so the
+argument's buffer is dead the moment the call is dispatched. On CPU,
+JAX silently ignores donation -- which is exactly why this bug class
+never shows up in the CI suites and detonates only on real TPU/GPU
+hardware. This pass makes the lifecycle a static contract:
+
+* **donating callables** are discovered from the call graph: direct
+  ``donate_argnums`` decorations, the conditional
+  ``donate_argnums=(3,) if donate else ()`` program builders behind
+  ``steps_program(params, donate=True)``-style constructors, instance
+  attributes bound to such constructor calls, and *wrapper methods*
+  that pass their own parameter straight into a donated position
+  (``_FlatLanes.steps`` donates its ``st`` because
+  ``engine_steps_overlap`` does);
+* **NX701 use-after-donate** -- a read of a donated name (or
+  ``self.attr`` chain) after the donating call, before it is rebound.
+  Rebinding in the same statement (``self.st, live = f(..., self.st)``)
+  is the sanctioned pattern and passes.
+* **NX702 discarded donation** -- a donating call whose result is
+  thrown away (a bare expression statement): the result holds the only
+  live buffers; dropping it leaves every donated argument dead with
+  nothing to rebind from.
+* **NX703 donation alias** -- the same value passed at a donated
+  position *and* anywhere else in one call: the other use reads a
+  buffer the callee is free to overwrite.
+
+Suppression kind: ``# navilint: donate-ok <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.callgraph import FuncInfo, Project, attr_chain
+
+USE_AFTER_DONATE = "NX701"
+DISCARDED_DONATION = "NX702"
+DONATION_ALIAS = "NX703"
+
+
+def _render(node: ast.AST) -> Optional[str]:
+    chain = attr_chain(node)
+    return ".".join(chain) if chain else None
+
+
+class DonationTables:
+    """Project-wide donation facts, computed before the def-use walk."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        #: constructor method name -> donated positions of the callable
+        #: it returns when called with donate=True
+        self.constructors: dict[str, tuple] = {}
+        #: (module path, class qualname, attr) -> donated positions for
+        #: instance attributes bound to donate=True constructor calls
+        self.attr_programs: dict[tuple, tuple] = {}
+        #: method name -> donated DEF positions, when every analyzed
+        #: class defining that method agrees (duck-typed backends)
+        self.duck_methods: dict[str, tuple] = {}
+        #: FuncInfo -> donated DEF positions (direct + wrapper-propagated)
+        self.func_donates: dict[FuncInfo, tuple] = {}
+        self._build()
+
+    # -- construction ---------------------------------------------------
+    def _build(self) -> None:
+        for fi in self.project.iter_funcs():
+            if fi.donate_idx and fi.donate_cond is None:
+                self.func_donates[fi] = fi.donate_idx
+        self._find_constructors()
+        self._find_attr_programs()
+        self._propagate_wrappers()
+        self._build_duck_table()
+
+    def _find_constructors(self) -> None:
+        """Methods with a ``donate`` parameter returning either a
+        conditionally-donating nested jit or ``self._program("<kind>",
+        ...)`` whose ``_build_<kind>`` sibling holds one."""
+        for mod in self.project.modules:
+            for fi in mod.funcs.values():
+                if fi.cls is None or "donate" not in (
+                        fi.params + fi.kwonly):
+                    continue
+                pos = self._constructor_positions(mod, fi)
+                if pos:
+                    prev = self.constructors.get(fi.node.name)
+                    if prev is None or prev == pos:
+                        self.constructors[fi.node.name] = pos
+
+    def _constructor_positions(self, mod, fi: FuncInfo
+                               ) -> Optional[tuple]:
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Return) or node.value is None:
+                continue
+            val = node.value
+            if isinstance(val, ast.IfExp):
+                target = self.project.resolve(mod, fi.qualname, val.body)
+                if target is not None and target.donate_idx:
+                    return target.donate_idx
+            if (isinstance(val, ast.Call) and val.args
+                    and isinstance(val.func, ast.Attribute)
+                    and val.func.attr == "_program"
+                    and isinstance(val.args[0], ast.Constant)):
+                kind = val.args[0].value
+                builder = mod.funcs.get(f"{fi.cls}._build_{kind}")
+                if builder is not None:
+                    prefix = f"{builder.qualname}.<locals>."
+                    for qual, sub in mod.funcs.items():
+                        if qual.startswith(prefix) and sub.donate_cond:
+                            return sub.donate_idx
+        return None
+
+    def _find_attr_programs(self) -> None:
+        """``self.X = obj.steps_program(params, donate=True)``: the
+        attribute holds a donating compiled callable."""
+        for mod in self.project.modules:
+            for fi in mod.funcs.values():
+                if fi.cls is None:
+                    continue
+                for node in ast.walk(fi.node):
+                    if not isinstance(node, ast.Assign):
+                        continue
+                    pos = self._donating_constructor_call(node.value)
+                    if pos is None:
+                        continue
+                    for t in node.targets:
+                        if (isinstance(t, ast.Attribute)
+                                and isinstance(t.value, ast.Name)
+                                and t.value.id == "self"):
+                            self.attr_programs[
+                                (mod.path, fi.cls, t.attr)] = pos
+
+    def _donating_constructor_call(self, expr: ast.AST
+                                   ) -> Optional[tuple]:
+        """Positions when ``expr`` is ``<x>.<ctor>(..., donate=True)``."""
+        if not (isinstance(expr, ast.Call)
+                and isinstance(expr.func, ast.Attribute)):
+            return None
+        pos = self.constructors.get(expr.func.attr)
+        if pos is None:
+            return None
+        for kw in expr.keywords:
+            if (kw.arg == "donate" and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                return pos
+        return None
+
+    def _propagate_wrappers(self) -> None:
+        """A method passing its own (unrebound) parameter into a donated
+        position donates that parameter itself."""
+        for _ in range(3):
+            changed = False
+            for mod in self.project.modules:
+                for fi in mod.funcs.values():
+                    if fi in self.func_donates:
+                        continue
+                    pos = self._wrapper_positions(mod, fi)
+                    if pos:
+                        self.func_donates[fi] = pos
+                        changed = True
+            if not changed:
+                break
+
+    def _wrapper_positions(self, mod, fi: FuncInfo) -> tuple:
+        params = fi.params
+        rebound: set = set()
+        donated: set = set()
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        rebound.add(t.id)
+            if not isinstance(node, ast.Call):
+                continue
+            pos = self.call_donated_args(mod, fi, node)
+            for i in pos:
+                if i < len(node.args):
+                    arg = node.args[i]
+                    if (isinstance(arg, ast.Name)
+                            and arg.id in params
+                            and arg.id not in rebound):
+                        donated.add(params.index(arg.id))
+        return tuple(sorted(donated))
+
+    def _build_duck_table(self) -> None:
+        """Method names whose every class-level definition donates the
+        same DEF positions -- applied to unresolvable ``x.m(...)``.
+        A same-name method that merely *forwards* to another ``.m(...)``
+        call (the ``LaneBatch.evict`` -> ``backend.evict`` dispatcher
+        pattern) is not counted as disagreement."""
+        by_name: dict[str, set] = {}
+        for fi, pos in self.func_donates.items():
+            if fi.cls is not None:
+                by_name.setdefault(fi.node.name, set()).add(pos)
+        for mod in self.project.modules:
+            for fi in mod.funcs.values():
+                if fi.cls is None or fi.node.name not in by_name \
+                        or fi in self.func_donates:
+                    continue
+                forwards = any(
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr == fi.node.name
+                    for n in ast.walk(fi.node))
+                if not forwards:
+                    by_name[fi.node.name].add(())
+        for name, variants in by_name.items():
+            if len(variants) == 1:
+                pos = next(iter(variants))
+                if pos:
+                    self.duck_methods[name] = pos
+
+    # -- per-call-site donation ----------------------------------------
+    def call_donated_args(self, mod, fi: FuncInfo, call: ast.Call,
+                          local_programs: Optional[dict] = None) -> tuple:
+        """Donated CALL-ARGUMENT indices for one call expression (method
+        receiver offset already applied)."""
+        callee = self.project.resolve(mod, fi.qualname, call.func)
+        if callee is not None:
+            pos = self.func_donates.get(callee, ())
+            if not pos:
+                return ()
+            if callee.cls is not None and isinstance(
+                    call.func, ast.Attribute):
+                # bound method: def position i surfaces at call arg i-1
+                return tuple(i - 1 for i in pos if i >= 1)
+            return pos
+        if isinstance(call.func, ast.Attribute):
+            key = _render(call.func)
+            if key is not None and key.startswith("self.") \
+                    and fi.cls is not None:
+                hit = self.attr_programs.get(
+                    (mod.path, fi.cls, call.func.attr))
+                if hit is not None:
+                    return hit
+            pos = self.duck_methods.get(call.func.attr)
+            if pos is not None:
+                out = tuple(i - 1 for i in pos if i >= 1)
+                # arity guard: a same-named method taking fewer args is
+                # a different signature (``LaneBatch.evict(lane_ids)``
+                # vs ``_FlatLanes.evict(st, udc, mask)``), not a
+                # donating duck match
+                if out and all(i < len(call.args) for i in out):
+                    return out
+                return ()
+        elif isinstance(call.func, ast.Name) and local_programs:
+            hit = local_programs.get(call.func.id)
+            if hit is not None:
+                return hit
+        return ()
+
+
+class _DefUse:
+    """Linear def-use walk of one function body: donated keys die at
+    the donating call and revive at rebinding."""
+
+    def __init__(self, tables: DonationTables, mod, fi: FuncInfo, emit):
+        self.tables = tables
+        self.mod = mod
+        self.fi = fi
+        self.emit = emit
+        self.dead: dict[str, int] = {}      # key -> donation line
+        self.reported: set = set()
+        self.local_programs: dict[str, tuple] = {}
+        self.span = (fi.node.lineno, fi.node.lineno)
+
+    # -- statement processing ------------------------------------------
+    def run(self) -> None:
+        self.walk(self.fi.node.body)
+
+    def walk(self, body: list) -> None:
+        for stmt in body:
+            self.span = (stmt.lineno, stmt.end_lineno or stmt.lineno)
+            self.stmt(stmt)
+
+    def stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(node, (ast.If, ast.While)):
+            self.check_reads(node.test)
+            self.walk(node.body)
+            self.walk(node.orelse)
+            return
+        if isinstance(node, ast.For):
+            self.check_reads(node.iter)
+            self.walk(node.body)
+            self.walk(node.orelse)
+            return
+        if isinstance(node, ast.With):
+            for item in node.items:
+                self.process_expr(item.context_expr)
+            self.walk(node.body)
+            return
+        if isinstance(node, ast.Try):
+            self.walk(node.body)
+            for h in node.handlers:
+                self.walk(h.body)
+            self.walk(node.orelse)
+            self.walk(node.finalbody)
+            return
+        targets: list = []
+        value = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+            value = node.value
+        elif isinstance(node, ast.Return):
+            value = node.value
+        elif isinstance(node, ast.Expr):
+            value = node.value
+            if isinstance(value, ast.Call):
+                pos = self.tables.call_donated_args(
+                    self.mod, self.fi, value, self.local_programs)
+                if pos:
+                    self.emit(
+                        DISCARDED_DONATION, self.mod, value, self.span,
+                        "result of a donating call discarded: the "
+                        "donated arguments are dead and the only live "
+                        "buffers are in the dropped result -- bind it "
+                        "(e.g. 'st, ... = ...') or use the non-donating "
+                        "variant")
+        else:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    self.check_reads(child)
+            return
+        # 1) reads + donations in the value expression
+        if value is not None:
+            self.process_expr(value, skip_targets=targets)
+        # 2) rebinding revives keys; track program-constructor locals
+        if isinstance(node, ast.Assign) and value is not None:
+            ctor = self.tables._donating_constructor_call(value)
+            if ctor is not None:
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        self.local_programs[t.id] = ctor
+        for t in targets:
+            self.rebind(t)
+
+    # -- expression processing -----------------------------------------
+    def process_expr(self, expr: ast.AST, skip_targets=()) -> None:
+        """Check reads of dead keys, then apply this expression's
+        donations (reads happen at dispatch; death is after)."""
+        self.check_reads(expr)
+        for call in ast.walk(expr):
+            if isinstance(call, ast.Call):
+                self.apply_donation(call)
+
+    def apply_donation(self, call: ast.Call) -> None:
+        pos = self.tables.call_donated_args(
+            self.mod, self.fi, call, self.local_programs)
+        if not pos:
+            return
+        donated_keys = []
+        for i in pos:
+            if i < len(call.args):
+                key = _render(call.args[i])
+                if key is not None:
+                    donated_keys.append((key, call.args[i]))
+        # NX703: donated value aliased elsewhere in the same call
+        all_renders = []
+        for j, a in enumerate(call.args):
+            all_renders.append((_render(a), j))
+        for kw in call.keywords:
+            all_renders.append((_render(kw.value), None))
+        for key, node in donated_keys:
+            uses = [r for r, j in all_renders if r == key]
+            if len(uses) > 1:
+                self.emit(
+                    DONATION_ALIAS, self.mod, node, self.span,
+                    f"'{key}' passed at a donated position and again in "
+                    f"the same call: the callee may overwrite the "
+                    f"donated buffer the other argument still reads")
+        for key, _node in donated_keys:
+            self.dead[key] = getattr(call, "lineno", self.span[0])
+
+    def check_reads(self, expr: ast.AST) -> None:
+        if expr is None or not self.dead:
+            return
+        for node in ast.walk(expr):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            if isinstance(getattr(node, "ctx", None), ast.Store):
+                continue
+            key = _render(node)
+            if key is None:
+                continue
+            hit = self._dead_hit(key)
+            if hit is not None and (key, self.span[0]) not in \
+                    self.reported:
+                self.reported.add((key, self.span[0]))
+                self.emit(
+                    USE_AFTER_DONATE, self.mod, node, self.span,
+                    f"'{key}' was donated on line {self.dead[hit]} and "
+                    f"not rebound since: its buffer may already be "
+                    f"overwritten by the callee (JAX ignores donation "
+                    f"on CPU, so tests pass and TPU/GPU corrupts) -- "
+                    f"rebind it from the call result, or annotate "
+                    f"'# navilint: donate-ok <reason>'")
+
+    def _dead_hit(self, key: str) -> Optional[str]:
+        if key in self.dead:
+            return key
+        # a read of a donated chain's prefix-extension (self.st.d) or
+        # of a dead leaf through its parent is also a use
+        for dead in self.dead:
+            if key.startswith(dead + "."):
+                return dead
+        return None
+
+    def rebind(self, target: ast.AST) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for t in target.elts:
+                self.rebind(t)
+            return
+        if isinstance(target, ast.Starred):
+            self.rebind(target.value)
+            return
+        key = _render(target)
+        if key is not None:
+            for dead in [d for d in self.dead
+                         if d == key or d.startswith(key + ".")]:
+                del self.dead[dead]
+
+
+def check(project: Project, emit) -> None:
+    """Run the donation-safety pass; findings go through ``emit``."""
+    tables = DonationTables(project)
+    for mod in project.modules:
+        for fi in mod.funcs.values():
+            has_donation = any(
+                isinstance(n, ast.Call)
+                and (tables.call_donated_args(mod, fi, n)
+                     or tables._donating_constructor_call(n) is not None)
+                for n in ast.walk(fi.node))
+            if has_donation:
+                _DefUse(tables, mod, fi, emit).run()

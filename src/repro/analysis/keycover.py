@@ -1,0 +1,450 @@
+"""ProgramKey coverage proofs (NX6xx): static zero-steady-compile.
+
+``COMPILE_baseline.json`` regression-tests the zero-steady-compile
+property dynamically: after warmup, the open-loop smoke must perform no
+further XLA compiles. That only proves the property for the plan shapes
+the smoke happened to exercise. This pass proves it structurally, for
+every AOT program cache in the tree (any module defining a
+``*Key(NamedTuple)`` class alongside a program store):
+
+* **NX601 uncovered static field** -- a cache arm lowers its program
+  with a ``static_argnames`` parameter whose NamedTuple type has fields
+  the :class:`ProgramKey` construction never hashes. A call site varying
+  such a field would silently reuse a program compiled for a different
+  value (or retrace per value, breaking the compile baseline). The check
+  follows ``self._key(...)`` helper indirection: a field read on the
+  helper's parameter covers the caller's corresponding argument.
+* **NX602 uncovered program input** -- a value that determines the
+  *identity* of the stored program (the jitted function object, a
+  static argument, the sharded receiver) does not reach the key: two
+  call sites differing only in that value would collide on one cache
+  entry. Roots are traced through local assignment chains
+  (``bb = _bucket(b); b = Q.shape[0]`` covers ``Q``) and through
+  ``functools.partial`` pre-binding (the ``batch(engine)`` pattern:
+  the bound ``fn`` co-varies with the key-covered ``engine`` arm).
+* **NX603 unknown key field** -- the key construction reads a field
+  that the parameter's NamedTuple type does not define: rename drift
+  between the params type and the cache key (the key arm silently
+  hashes ``None``-ish garbage or raises at first use).
+
+Suppression kind: ``# navilint: key-ok <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.callgraph import (
+    FuncInfo, ModuleInfo, Project, attr_chain)
+
+UNCOVERED_STATIC = "NX601"
+UNCOVERED_INPUT = "NX602"
+UNKNOWN_KEY_FIELD = "NX603"
+
+
+def _namedtuple_fields(cls: ast.ClassDef) -> Optional[tuple]:
+    is_nt = any(
+        (isinstance(b, ast.Name) and b.id == "NamedTuple")
+        or (isinstance(b, ast.Attribute) and b.attr == "NamedTuple")
+        for b in cls.bases)
+    if not is_nt:
+        return None
+    fields = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name):
+            fields.append(node.target.id)
+    return tuple(fields)
+
+
+class _ModuleTypes:
+    """NamedTuple definitions reachable from one module (local classes
+    plus ``from m import T`` targets in other swept modules)."""
+
+    def __init__(self, project: Project, mod: ModuleInfo):
+        self.project = project
+        self.mod = mod
+        self._cache: dict[str, Optional[tuple]] = {}
+        self._cls_cache: dict[str, Optional[ast.ClassDef]] = {}
+
+    def _lookup(self, type_name: str) -> Optional[ast.ClassDef]:
+        if type_name in self._cls_cache:
+            return self._cls_cache[type_name]
+        out: Optional[ast.ClassDef] = None
+        for cls in self.mod.classes.values():
+            if cls.name == type_name:
+                out = cls
+                break
+        if out is None and type_name in self.mod.from_names:
+            src_mod, src_name = self.mod.from_names[type_name]
+            target = self.project.by_name.get(src_mod)
+            if target is not None:
+                for cls in target.classes.values():
+                    if cls.name == src_name:
+                        out = cls
+                        break
+        self._cls_cache[type_name] = out
+        return out
+
+    def fields_of(self, type_name: str) -> Optional[tuple]:
+        if type_name not in self._cache:
+            cls = self._lookup(type_name)
+            self._cache[type_name] = None if cls is None \
+                else _namedtuple_fields(cls)
+        return self._cache[type_name]
+
+    def readable_of(self, type_name: str) -> Optional[frozenset]:
+        """Every attribute legitimately readable on the type: tuple
+        fields plus properties/methods (``graph.n`` is a property
+        derived from field shapes, not a field)."""
+        fields = self.fields_of(type_name)
+        if fields is None:
+            return None
+        cls = self._lookup(type_name)
+        extra = {n.name for n in cls.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        return frozenset(fields) | extra
+
+    def annotation_fields(self, fi: FuncInfo, param: str
+                          ) -> Optional[tuple]:
+        name = self.annotation_name(fi, param)
+        return None if name is None else self.fields_of(name)
+
+    def annotation_name(self, fi: FuncInfo, param: str) -> Optional[str]:
+        a = fi.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.arg == param and isinstance(p.annotation, ast.Name):
+                return p.annotation.id
+        return None
+
+
+def _names_in(node: ast.AST) -> set:
+    """Free names under ``node`` (lambda parameters are bound, not
+    inputs: ``jax.jit(lambda q: q)`` depends on nothing)."""
+    out: set = set()
+
+    def visit(n: ast.AST, bound: frozenset) -> None:
+        if isinstance(n, ast.Lambda):
+            a = n.args
+            params = {p.arg for p in a.posonlyargs + a.args
+                      + a.kwonlyargs}
+            for v in (a.vararg, a.kwarg):
+                if v is not None:
+                    params.add(v.arg)
+            for d in list(a.defaults) + [d for d in a.kw_defaults
+                                         if d is not None]:
+                visit(d, bound)
+            visit(n.body, bound | params)
+            return
+        if isinstance(n, ast.Name):
+            if n.id not in bound:
+                out.add(n.id)
+        for c in ast.iter_child_nodes(n):
+            visit(c, bound)
+
+    visit(node, frozenset())
+    return out
+
+
+def _attr_reads(node: ast.AST) -> dict:
+    """name -> set of fields read as ``name.field`` under ``node``."""
+    out: dict[str, set] = {}
+    for n in ast.walk(node):
+        if (isinstance(n, ast.Attribute)
+                and isinstance(n.value, ast.Name)):
+            out.setdefault(n.value.id, set()).add(n.attr)
+    return out
+
+
+def _local_chains(fn: ast.AST) -> dict:
+    """Transitive local-assignment roots: ``bb -> {Q}`` when
+    ``bb = _bucket(b)`` and ``b = Q.shape[0]``."""
+    direct: dict[str, set] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            names = _names_in(node.value)
+            for t in node.targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name) and isinstance(
+                            sub.ctx, ast.Store):
+                        direct.setdefault(sub.id, set()).update(names)
+    # small transitive closure
+    for _ in range(len(direct) + 1):
+        changed = False
+        for name, roots in direct.items():
+            extra = set()
+            for r in list(roots):
+                extra |= direct.get(r, set())
+            if not extra <= roots:
+                roots |= extra
+                changed = True
+        if not changed:
+            break
+    return direct
+
+
+class _CacheModule:
+    """One module owning a ``*Key(NamedTuple)`` program cache."""
+
+    def __init__(self, project: Project, mod: ModuleInfo,
+                 key_classes: list, emit):
+        self.project = project
+        self.mod = mod
+        self.key_names = {cls.name for cls, _ in key_classes}
+        self.key_fields = {cls.name: f for cls, f in key_classes}
+        self.types = _ModuleTypes(project, mod)
+        self.emit = emit
+        #: params of each function passed into a jit() call inside it
+        self.jit_targets: dict[str, set] = {}
+        self.static_names: set = set()
+        self._checked_key_calls: set = set()
+        self._collect_jit_surface()
+
+    # -- jit surface ----------------------------------------------------
+    def _collect_jit_surface(self) -> None:
+        for fi in self.mod.funcs.values():
+            for call in ast.walk(fi.node):
+                if not isinstance(call, ast.Call):
+                    continue
+                chain = attr_chain(call.func)
+                if not (chain and chain[-1] == "jit"):
+                    continue
+                for kw in call.keywords:
+                    if kw.arg == "static_argnames":
+                        for n in ast.walk(kw.value):
+                            if isinstance(n, ast.Constant) and isinstance(
+                                    n.value, str):
+                                self.static_names.add(n.value)
+                if call.args and isinstance(call.args[0], ast.Name):
+                    name = call.args[0].id
+                    if name in fi.params + fi.kwonly:
+                        self.jit_targets.setdefault(
+                            fi.qualname, set()).add(name)
+
+    # -- key constructions ----------------------------------------------
+    def _key_calls(self, fi: FuncInfo) -> list:
+        """(call, covered-fields-per-name, key-root-names) for every key
+        construction in ``fi`` -- direct ``ProgramKey(...)`` or through
+        a local ``self._key(...)``-style builder."""
+        out = []
+        chains = _local_chains(fi.node)
+
+        def expand(names: set) -> set:
+            roots = set(names)
+            for n in names:
+                roots |= chains.get(n, set())
+            return roots
+
+        for call in ast.walk(fi.node):
+            if not isinstance(call, ast.Call):
+                continue
+            # direct Key(...) construction
+            if isinstance(call.func, ast.Name) \
+                    and call.func.id in self.key_names:
+                covered = _attr_reads(call)
+                self._check_unknown_fields(fi, call, covered)
+                out.append((call, covered, expand(_names_in(call))))
+                continue
+            # helper indirection: self._key(...) / _key(...)
+            builder = self.project.resolve(
+                self.mod, fi.qualname, call.func)
+            if builder is None or builder.module is not self.mod:
+                continue
+            bcall = self._builder_key_call(builder)
+            if bcall is None:
+                continue
+            bcov = _attr_reads(bcall)
+            self._check_unknown_fields(builder, bcall, bcov)
+            binding = builder.bind(call)
+            covered: dict[str, set] = {}
+            roots = set()
+            for bparam, expr in binding.items():
+                fields = bcov.get(bparam)
+                for name in _names_in(expr):
+                    roots.add(name)
+                    if fields:
+                        covered.setdefault(name, set()).update(fields)
+            out.append((call, covered, expand(roots)))
+        return out
+
+    def _builder_key_call(self, builder: FuncInfo) -> Optional[ast.Call]:
+        for node in ast.walk(builder.node):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in self.key_names):
+                return node
+        return None
+
+    def _check_unknown_fields(self, fi: FuncInfo, key_call: ast.Call,
+                              covered: dict) -> None:
+        if key_call in self._checked_key_calls:
+            return          # a builder's key call is bound once per
+        self._checked_key_calls.add(key_call)       # caller: check once
+        span = (key_call.lineno, key_call.end_lineno or key_call.lineno)
+        for name, fields in covered.items():
+            tname = self.types.annotation_name(fi, name)
+            readable = None if tname is None \
+                else self.types.readable_of(tname)
+            if readable is None:
+                continue
+            for f in sorted(fields - readable):
+                self.emit(
+                    UNKNOWN_KEY_FIELD, self.mod, key_call, span,
+                    f"key construction reads '{name}.{f}' but "
+                    f"'{name}' has no such field -- rename drift "
+                    f"between the params type and the cache key")
+
+    # -- store sites ----------------------------------------------------
+    def _store_exprs(self, fi: FuncInfo) -> list:
+        """Expressions whose value is stored in the program cache:
+        ``self._programs[k] = expr`` plus the program-identity args of
+        calls into jit-forwarding helpers (``self._get(key, fn, ...)``).
+        """
+        out = []
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if (isinstance(t, ast.Subscript)
+                            and isinstance(t.value, ast.Attribute)
+                            and t.value.attr.startswith("_program")):
+                        out.append(node.value)
+            elif isinstance(node, ast.Call):
+                callee = self.project.resolve(
+                    self.mod, fi.qualname, node.func)
+                if callee is None:
+                    continue
+                fwd = self.jit_targets.get(callee.qualname)
+                if not fwd:
+                    continue
+                binding = callee.bind(node)
+                for p in fwd:
+                    if p in binding:
+                        out.append(binding[p])
+        return out
+
+    # -- partial pre-binding --------------------------------------------
+    def _partial_origins(self, fi: FuncInfo) -> dict:
+        """param name -> origin root names, from ``functools.partial(
+        self.<fi>, a, b)`` sites anywhere in the module."""
+        out: dict[str, set] = {}
+        for other in self.mod.funcs.values():
+            for call in ast.walk(other.node):
+                if not isinstance(call, ast.Call):
+                    continue
+                chain = attr_chain(call.func)
+                if not (chain and chain[-1] == "partial" and call.args):
+                    continue
+                target = self.project.resolve(
+                    self.mod, other.qualname, call.args[0])
+                if target is not fi:
+                    continue
+                params = [p for p in fi.params if p != "self"]
+                for i, arg in enumerate(call.args[1:]):
+                    if i < len(params):
+                        out.setdefault(params[i], set()).update(
+                            _names_in(arg))
+        return out
+
+    # -- the arm check --------------------------------------------------
+    def check_arms(self) -> None:
+        for fi in self.mod.funcs.values():
+            key_calls = self._key_calls(fi)
+            if not key_calls:
+                continue
+            stores = self._store_exprs(fi)
+            if not stores:
+                continue        # pure key builder (e.g. `_key` itself)
+            for key_call, covered, key_roots in key_calls:
+                self._check_static_coverage(fi, key_call, covered)
+                for expr in stores:
+                    self._check_store_roots(
+                        fi, key_call, key_roots, expr)
+
+    def _check_static_coverage(self, fi: FuncInfo, key_call: ast.Call,
+                               covered: dict) -> None:
+        span = (key_call.lineno, key_call.end_lineno or key_call.lineno)
+        for param in fi.params + fi.kwonly:
+            if param not in self.static_names:
+                continue
+            tfields = self.types.annotation_fields(fi, param)
+            if tfields is None:
+                continue
+            missing = [f for f in tfields
+                       if f not in covered.get(param, set())]
+            if missing:
+                self.emit(
+                    UNCOVERED_STATIC, self.mod, key_call, span,
+                    f"program key never hashes {param} field(s) "
+                    f"{', '.join(repr(m) for m in missing)}: a call "
+                    f"site varying them reuses a program compiled for "
+                    f"a different value (or retraces per value) -- "
+                    f"add them to the key, or annotate "
+                    f"'# navilint: key-ok <reason>'")
+
+    def _is_module_level(self, name: str) -> bool:
+        return (name in self.mod.funcs
+                or name in {c.name for c in self.mod.classes.values()}
+                or name in self.mod.import_alias
+                or name in self.mod.from_names
+                or name in ("self", "cls", "None", "True", "False"))
+
+    def _check_store_roots(self, fi: FuncInfo, key_call: ast.Call,
+                           key_roots: set, expr: ast.AST) -> None:
+        chains = _local_chains(fi.node)
+        origins = None
+        # a local is covered when everything it was derived from is
+        # (bb <- _bucket(b) <- Q.shape[0]: Q in the key covers bb)
+        covered = {n for n in set(chains) | key_roots
+                   if n in key_roots or self._is_module_level(n)}
+        for _ in range(len(chains) + 1):
+            grew = False
+            for name, srcs in chains.items():
+                if name not in covered and srcs and all(
+                        s in covered or self._is_module_level(s)
+                        for s in srcs):
+                    covered.add(name)
+                    grew = True
+            if not grew:
+                break
+        uncovered = []
+        for name in sorted(_names_in(expr)):
+            if name in covered or self._is_module_level(name):
+                continue
+            if name in fi.params or name in fi.kwonly:
+                if origins is None:
+                    origins = self._partial_origins(fi)
+                # partial pre-binding: the param's origin expression
+                # shares its roots with a key-covered parameter
+                mine = {n for n in origins.get(name, set())
+                        if not self._is_module_level(n)}
+                if origins.get(name) is not None:
+                    covered_origin = set()
+                    for p in fi.params + fi.kwonly:
+                        if p in key_roots:
+                            covered_origin |= origins.get(p, {p})
+                    if mine <= covered_origin:
+                        continue
+            uncovered.append(name)
+        if uncovered:
+            span = (expr.lineno, expr.end_lineno or expr.lineno)
+            self.emit(
+                UNCOVERED_INPUT, self.mod, expr, span,
+                f"stored program depends on "
+                f"{', '.join(repr(u) for u in uncovered)} which never "
+                f"reach(es) the cache key: call sites differing only "
+                f"there would collide on one cache entry -- hash an "
+                f"arm for it, or annotate '# navilint: key-ok <reason>'")
+
+
+def check(project: Project, emit) -> None:
+    """Run the key-coverage pass; findings go through ``emit``."""
+    for mod in project.modules:
+        key_classes = []
+        for cls in mod.classes.values():
+            if cls.name.endswith("Key"):
+                fields = _namedtuple_fields(cls)
+                if fields is not None:
+                    key_classes.append((cls, fields))
+        if key_classes:
+            _CacheModule(project, mod, key_classes, emit).check_arms()

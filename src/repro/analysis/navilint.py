@@ -54,7 +54,7 @@ import re
 import tokenize
 from typing import Iterable, Optional
 
-from repro.analysis import registry
+from repro.analysis import callgraph, dataflow, donation, keycover, registry
 
 # -- rule ids ---------------------------------------------------------------
 SYNC_IN_HOT = "NX101"          # host sync inside a hot-path function
@@ -67,6 +67,16 @@ MALFORMED_SUPPRESSION = "NX302"  # suppression without a reason
 STALE_REGISTRY = "NX303"       # registry qualname not found in the file
 UNUSED_IMPORT = "NX401"        # module-level import never used
 BARE_EXCEPT = "NX402"          # except: with no exception type
+# flow families (repro.analysis.dataflow / keycover / donation)
+TRACE_BRANCH = dataflow.TRACE_BRANCH            # NX501
+TRACE_HOST = dataflow.TRACE_HOST                # NX502
+TRACE_SHAPE = dataflow.TRACE_SHAPE              # NX503
+UNCOVERED_STATIC = keycover.UNCOVERED_STATIC    # NX601
+UNCOVERED_INPUT = keycover.UNCOVERED_INPUT      # NX602
+UNKNOWN_KEY_FIELD = keycover.UNKNOWN_KEY_FIELD  # NX603
+USE_AFTER_DONATE = donation.USE_AFTER_DONATE    # NX701
+DISCARDED_DONATION = donation.DISCARDED_DONATION  # NX702
+DONATION_ALIAS = donation.DONATION_ALIAS        # NX703
 
 #: suppression kind accepted per rule (None = not suppressible)
 _SUPPRESS_KIND = {
@@ -74,6 +84,15 @@ _SUPPRESS_KIND = {
     FORBIDDEN_OP: "op-ok",
     WALLCLOCK: "wallclock-ok",
     UNLOCKED_ACCESS: "lock-ok",
+    TRACE_BRANCH: "trace-ok",
+    TRACE_HOST: "trace-ok",
+    TRACE_SHAPE: "trace-ok",
+    UNCOVERED_STATIC: "key-ok",
+    UNCOVERED_INPUT: "key-ok",
+    UNKNOWN_KEY_FIELD: "key-ok",
+    USE_AFTER_DONATE: "donate-ok",
+    DISCARDED_DONATION: "donate-ok",
+    DONATION_ALIAS: "donate-ok",
 }
 
 #: method names whose call on any object is a host sync
@@ -84,7 +103,8 @@ _AT_SETTERS = ("set", "add", "mul", "min", "max", "apply", "get")
 _NUMPY_ROOTS = ("np", "numpy", "onp")
 
 _SUPPRESS_RE = re.compile(
-    r"#\s*navilint:\s*(sync-ok|op-ok|wallclock-ok|lock-ok)\b\s*(.*)")
+    r"#\s*navilint:\s*(sync-ok|op-ok|wallclock-ok|lock-ok|trace-ok"
+    r"|key-ok|donate-ok)\b\s*(.*)")
 _HOT_RE = re.compile(r"#\s*navilint:\s*hot\b")
 _LOCK_HELD_RE = re.compile(r"#\s*navilint:\s*lock-held\s+(\w+)")
 _GUARDED_RE = re.compile(r"#\s*guarded-by:\s*(\w+)")
@@ -190,11 +210,18 @@ class _FileAnalyzer:
         self.seen_qualnames: set[str] = set()
         # statement line-span stack: suppressions attach to statements
         self._stmt_spans: list[tuple[int, int]] = []
+        self.tree: Optional[ast.Module] = None
+        #: NX201 candidates in private methods, resolved interprocedurally
+        #: against the class call graph after the lexical pass
+        self._deferred_nx201: list[tuple] = []
 
     # -- plumbing -------------------------------------------------------
-    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+    def emit(self, rule: str, node: ast.AST, message: str,
+             span: Optional[tuple] = None) -> None:
         line = getattr(node, "lineno", 1)
-        span = self._stmt_spans[-1] if self._stmt_spans else (line, line)
+        if span is None:
+            span = self._stmt_spans[-1] if self._stmt_spans \
+                else (line, line)
         kind = _SUPPRESS_KIND.get(rule)
         if kind is not None:
             for ln in range(span[0] - 1, span[1] + 1):
@@ -235,18 +262,32 @@ class _FileAnalyzer:
         return None
 
     # -- entry ----------------------------------------------------------
-    def run(self) -> list[Finding]:
+    def run_pre(self) -> None:
+        """Lexical pass: everything except suppression staleness (the
+        flow passes still mark suppressions used) and the deferred
+        interprocedural NX201 resolution."""
         try:
-            tree = ast.parse(self.source, filename=self.path)
+            self.tree = ast.parse(self.source, filename=self.path)
         except SyntaxError as e:
-            return [Finding("NX000", self.path, e.lineno or 1,
-                            f"syntax error: {e.msg}")]
-        self._scan_functions(tree, qual="", hot=False)
-        self._scan_wallclock(tree)
-        self._scan_classes(tree)
-        self._scan_hygiene(tree)
+            self.findings.append(Finding(
+                "NX000", self.path, e.lineno or 1,
+                f"syntax error: {e.msg}"))
+            return
+        self._scan_functions(self.tree, qual="", hot=False)
+        self._scan_wallclock(self.tree)
+        self._scan_classes(self.tree)
+        self._scan_hygiene(self.tree)
         self._finish_registry()
+
+    def finish(self) -> None:
+        if self.tree is None:
+            return
+        self._resolve_deferred_nx201()
         self._finish_suppressions()
+
+    def run(self) -> list[Finding]:
+        self.run_pre()
+        self.finish()
         return self.findings
 
     # -- hot-loop purity ------------------------------------------------
@@ -383,12 +424,16 @@ class _FileAnalyzer:
                     f"{cls.name} never binds 'self.{lock}'"))
         for node in cls.body:
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                self._scan_method(node, guarded)
+                self._scan_method(node, guarded, cls)
 
-    def _scan_method(self, fn: ast.AST, guarded: dict[str, str]) -> None:
+    def _scan_method(self, fn: ast.AST, guarded: dict[str, str],
+                     cls: ast.ClassDef) -> None:
         if fn.name in ("__init__", "__del__"):
             return                  # construction happens-before sharing
         held0 = {self._lock_held_name(fn)} - {None}
+        # a private helper may be provable lock-held from its intra-class
+        # call sites; defer those candidates to the call-graph resolution
+        defer = fn.name.startswith("_") and not fn.name.startswith("__")
 
         def walk(node: ast.AST, held: set) -> None:
             for child in ast.iter_child_nodes(node):
@@ -417,18 +462,81 @@ class _FileAnalyzer:
                         and guarded[child.attr] not in held):
                     verb = ("write to" if isinstance(
                         child.ctx, (ast.Store, ast.Del)) else "read of")
-                    self.emit(UNLOCKED_ACCESS, child,
-                              f"{verb} 'self.{child.attr}' outside 'with "
-                              f"self.{guarded[child.attr]}' (field is "
-                              f"'# guarded-by: {guarded[child.attr]}'; "
-                              f"hold the lock, or annotate the method "
-                              f"'# navilint: lock-held "
-                              f"{guarded[child.attr]}')")
+                    message = (
+                        f"{verb} 'self.{child.attr}' outside 'with "
+                        f"self.{guarded[child.attr]}' (field is "
+                        f"'# guarded-by: {guarded[child.attr]}'; "
+                        f"hold the lock, call the method only from "
+                        f"'with self.{guarded[child.attr]}' blocks, or "
+                        f"annotate the method '# navilint: lock-held "
+                        f"{guarded[child.attr]}')")
+                    if defer:
+                        span = (self._stmt_spans[-1]
+                                if self._stmt_spans
+                                else (child.lineno, child.lineno))
+                        self._deferred_nx201.append(
+                            (cls, fn.name, guarded[child.attr], child,
+                             span, message))
+                    else:
+                        self.emit(UNLOCKED_ACCESS, child, message)
                 walk(child, child_held)
                 if is_stmt:
                     self._stmt_spans.pop()
 
         walk(fn, held0)
+
+    def _resolve_deferred_nx201(self) -> None:
+        """Interprocedural NX201: a private method's unlocked access to
+        a guarded field passes when EVERY intra-class call site provably
+        holds the lock -- lexically inside ``with self.<lock>``, in a
+        ``lock-held``-annotated method, or (recursively) in a method
+        that is itself proven lock-held. Methods that escape as bare
+        ``self.m`` references (thread targets, callbacks) or have no
+        intra-class call sites at all get no proof and are reported."""
+        if not self._deferred_nx201:
+            return
+        by_cls: dict[int, tuple] = {}
+        for cand in self._deferred_nx201:
+            by_cls.setdefault(id(cand[0]), (cand[0], []))[1].append(cand)
+        for cls, cands in by_cls.values():
+            sites, escapes = callgraph.class_call_sites(cls)
+            annotated: dict[str, set] = {}
+            methods: set[str] = set()
+            for item in cls.body:
+                if isinstance(item, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    methods.add(item.name)
+                    annotated[item.name] = (
+                        {self._lock_held_name(item)} - {None})
+            all_locks = {c[2] for c in cands}
+            # optimistic init, decreasing fixpoint over the call graph
+            resolved: dict[str, set] = {}
+            for m in methods:
+                eligible = (m.startswith("_")
+                            and not m.startswith("__")
+                            and sites.get(m) and m not in escapes)
+                resolved[m] = set(all_locks) if eligible else set()
+            for _ in range(len(methods) + 2):
+                changed = False
+                for m in methods:
+                    if not resolved[m]:
+                        continue
+                    meet: Optional[set] = None
+                    for s in sites.get(m, ()):
+                        held = (set(s.lexical_locks)
+                                | annotated.get(s.caller, set())
+                                | resolved.get(s.caller, set()))
+                        meet = held if meet is None else meet & held
+                    new = resolved[m] & (meet if meet is not None
+                                         else set())
+                    if new != resolved[m]:
+                        resolved[m] = new
+                        changed = True
+                if not changed:
+                    break
+            for _cls, method, lock, node, span, message in cands:
+                if lock not in resolved.get(method, set()):
+                    self.emit(UNLOCKED_ACCESS, node, message, span=span)
 
     # -- hygiene (pyflakes-grade, for trees without ruff) ---------------
     def _scan_hygiene(self, tree: ast.Module) -> None:
@@ -510,12 +618,45 @@ class _FileAnalyzer:
 
 # -- public API -------------------------------------------------------------
 
+def _analyze_project(specs: list) -> list[Finding]:
+    """The full pipeline over (path, source, rel_path) specs: per-file
+    lexical pass, then the cross-file flow passes (tracer-flow, key
+    coverage, donation safety) over one shared call graph, then the
+    suppression-staleness closers -- so flow-rule suppressions are never
+    falsely stale."""
+    analyzers: list[_FileAnalyzer] = []
+    parsed: list[tuple] = []
+    for path, source, rel in specs:
+        a = _FileAnalyzer(path, source, rel)
+        a.run_pre()
+        analyzers.append(a)
+        if a.tree is not None:
+            parsed.append((path, rel, a.tree))
+    project = callgraph.build_project(parsed)
+    by_path = {a.path: a for a in analyzers}
+
+    def emit(rule: str, module, node: ast.AST, span: tuple,
+             message: str) -> None:
+        by_path[module.path].emit(rule, node, message, span=span)
+
+    dataflow.check(project, emit)
+    keycover.check(project, emit)
+    donation.check(project, emit)
+    findings: list[Finding] = []
+    for a in analyzers:
+        a.finish()
+        findings.extend(a.findings)
+    return findings
+
+
 def analyze_source(source: str, path: str = "<string>",
                    rel_path: Optional[str] = None) -> list[Finding]:
-    """Analyze one source string (the test-fixture entry point)."""
+    """Analyze one source string (the test-fixture entry point). Flow
+    passes run over a single-file project, so fixtures exercise them."""
     rel = rel_path if rel_path is not None else registry.normalize_path(
         path)
-    return _FileAnalyzer(path, source, rel).run()
+    return sorted(_analyze_project([(path, source, rel)]),
+                  key=lambda f: (f.path, f.line, f.rule))
 
 
 def analyze_file(path: pathlib.Path) -> list[Finding]:
@@ -535,12 +676,17 @@ def iter_python_files(paths: Iterable[str]) -> list[pathlib.Path]:
 
 
 def analyze_paths(paths: Iterable[str]) -> list[Finding]:
-    """Run navilint over files/directories; findings sorted by location."""
-    findings: list[Finding] = []
+    """Run navilint over files/directories; findings sorted by location.
+    All files form ONE project, so the flow passes see cross-file call
+    edges (a core entry point jitted in api/, donated state consumed in
+    serving/)."""
+    specs = []
     seen_registry_files = set()
     for f in iter_python_files(paths):
-        findings.extend(analyze_file(f))
+        specs.append((str(f), f.read_text(encoding="utf-8"),
+                      registry.normalize_path(str(f))))
         seen_registry_files.add(registry.normalize_path(str(f)))
+    findings = _analyze_project(specs)
     # registry entries pointing at files the sweep never saw are stale
     # only when the sweep actually covered the repro package
     if any(p.startswith("repro/") for p in seen_registry_files):

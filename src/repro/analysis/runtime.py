@@ -1,6 +1,6 @@
 """Runtime verification: the invariants static analysis cannot see.
 
-Two guards, both context managers, both designed to wrap an existing
+Three guards, all context managers, all designed to wrap an existing
 test or benchmark without changing what it measures:
 
 :class:`CompileCounter` hooks ``jax.monitoring``'s event-duration
@@ -20,6 +20,19 @@ A is held. Locks are keyed by *creation site* (file:line), lockdep
 style, so every instance of ``SubmissionQueue._lock`` is one node. A
 cycle in the graph is a deadlock that merely hasn't fired yet; the
 PR-6 herd/shutdown/straggler tests run under this monitor.
+
+:class:`DonationGuard` (via :func:`guard_donation`) is the *temporal*
+complement to navilint's static NX7xx donation rules. The static pass
+proves no code path reads a donated buffer after the donating call; it
+cannot see a second thread (or a later method call) touching lane
+state while a donated chunk is in flight. The guard patches
+``LaneBatch`` class-wide so that between ``step_async`` and
+``step_wait`` (the donation window) the host mirrors are frozen
+read-only and every device-state entry point (``admit``/``finalize``/
+``evict``) raises :class:`DonationError`. JAX silently ignores
+donation on CPU, so these bugs pass every CPU suite and corrupt
+results only on TPU/GPU -- the guard makes the window a hard error on
+any backend. The open-loop serving smoke runs under it.
 
 jax is imported lazily so navilint's AST side stays importable (and
 fast) in environments without an accelerator stack.
@@ -247,6 +260,123 @@ def _creation_site(depth: int = 2) -> str:
     if frame is None:  # pragma: no cover
         return "<unknown>"
     return f"{frame.f_code.co_filename.rsplit('/', 1)[-1]}:{frame.f_lineno}"
+
+
+# -- donation-window guarding ------------------------------------------------
+
+
+class DonationError(RuntimeError):
+    """Lane state touched while a donated device chunk was in flight."""
+
+
+class DonationGuard:
+    """Counts donation windows and records any in-window violation.
+
+    A *window* opens when ``step_async`` dispatches a chunk (the state
+    buffers are donated: the pre-dispatch ``st`` is dead, the output
+    handle is still being written) and closes at ``step_wait``. Inside
+    the window the only legal host work is work that does not touch
+    lane state -- queue expiry, future resolution, response building.
+    """
+
+    def __init__(self) -> None:
+        self.windows = 0
+        self.violations: list[str] = []
+
+    def report(self) -> dict:
+        """JSON-able summary for bench artifacts."""
+        return {"windows": self.windows,
+                "violations": list(self.violations)}
+
+    def _violate(self, what: str) -> None:
+        msg = (f"{what} while a donated device chunk is in flight: the "
+               f"chunk owns the lane state until step_wait() (JAX "
+               f"ignores donation on CPU, so this corrupts silently on "
+               f"TPU/GPU) -- step_wait() first")
+        self.violations.append(msg)
+        raise DonationError(msg)
+
+
+def _lane_mirrors(lanes) -> list:
+    """The numpy host mirrors a LaneBatch owns (best effort: sharded
+    backends may use non-numpy sel buffers; those are skipped)."""
+    out = []
+    for name in ("Qh", "selh", "sigh", "efsh"):
+        arr = getattr(lanes, name, None)
+        if arr is not None and hasattr(arr, "flags"):
+            out.append(arr)
+    return out
+
+
+@contextlib.contextmanager
+def guard_donation(guard: Optional[DonationGuard] = None
+                   ) -> Iterator[DonationGuard]:
+    """Patch :class:`~repro.serving.lanes.LaneBatch` so the donation
+    window between ``step_async`` and ``step_wait`` is enforced at
+    runtime: host mirrors go read-only (an ``admit`` writing ``Qh``
+    trips numpy's writeable check even before the explicit raise) and
+    ``admit``/``finalize``/``evict`` raise :class:`DonationError`.
+
+    The patch is class-wide, so every LaneBatch created before or
+    during the block is guarded; state is restored on exit even when
+    the block raises.
+    """
+    from repro.serving.lanes import LaneBatch
+
+    g = guard if guard is not None else DonationGuard()
+    orig = {name: getattr(LaneBatch, name)
+            for name in ("step_async", "step_wait", "admit",
+                         "finalize", "evict")}
+    frozen: dict[int, list] = {}      # id(lanes) -> [(arr, writeable)]
+
+    def _freeze(self) -> None:
+        saved = []
+        for arr in _lane_mirrors(self):
+            saved.append((arr, bool(arr.flags.writeable)))
+            try:
+                arr.flags.writeable = False
+            except ValueError:      # pragma: no cover - foreign base
+                saved.pop()
+        frozen[id(self)] = saved
+
+    def _thaw(self) -> None:
+        for arr, writeable in frozen.pop(id(self), ()):
+            try:
+                arr.flags.writeable = writeable
+            except ValueError:      # pragma: no cover
+                pass
+
+    def step_async(self, n_steps):
+        orig["step_async"](self, n_steps)
+        g.windows += 1
+        _freeze(self)
+
+    def step_wait(self):
+        _thaw(self)
+        return orig["step_wait"](self)
+
+    def _gated(name):
+        def method(self, *args, **kwargs):
+            if getattr(self, "_live_pending", None) is not None:
+                g._violate(f"LaneBatch.{name}()")
+            return orig[name](self, *args, **kwargs)
+        return method
+
+    LaneBatch.step_async = step_async
+    LaneBatch.step_wait = step_wait
+    for name in ("admit", "finalize", "evict"):
+        setattr(LaneBatch, name, _gated(name))
+    try:
+        yield g
+    finally:
+        for name, fn in orig.items():
+            setattr(LaneBatch, name, fn)
+        for lanes_id in list(frozen):
+            for arr, writeable in frozen.pop(lanes_id, ()):
+                try:
+                    arr.flags.writeable = writeable
+                except ValueError:      # pragma: no cover
+                    pass
 
 
 @contextlib.contextmanager

@@ -418,6 +418,12 @@ class SearchService:
         else:
             for it in self.queue.drain_remaining():
                 self._cancel(it.meta)
+            # the loop thread exits right after dispatching a chunk
+            # (tick step 5), so a non-drain stop usually lands here
+            # with that chunk still in flight -- synchronize before
+            # touching the donated lane state
+            if self.lanes.step_pending:
+                self.lanes.step_wait()
             occ = self.lanes.occupied()
             for i in occ:
                 self._cancel(self.lanes.meta[i])

@@ -20,12 +20,17 @@ import numpy as np
 import pytest
 
 from repro.analysis import analyze_paths, analyze_source
-from repro.analysis.navilint import (BARE_EXCEPT, FORBIDDEN_OP,
+from repro.analysis.navilint import (BARE_EXCEPT, DISCARDED_DONATION,
+                                     DONATION_ALIAS, FORBIDDEN_OP,
                                      MALFORMED_SUPPRESSION, STALE_REGISTRY,
-                                     STALE_SUPPRESSION, UNKNOWN_LOCK,
+                                     STALE_SUPPRESSION, TRACE_BRANCH,
+                                     TRACE_HOST, TRACE_SHAPE,
+                                     UNCOVERED_INPUT, UNCOVERED_STATIC,
+                                     UNKNOWN_KEY_FIELD, UNKNOWN_LOCK,
                                      UNLOCKED_ACCESS, UNUSED_IMPORT,
-                                     WALLCLOCK)
-from repro.analysis.runtime import (CompileCounter, LockOrderMonitor,
+                                     USE_AFTER_DONATE, WALLCLOCK)
+from repro.analysis.runtime import (CompileCounter, DonationError,
+                                    LockOrderMonitor, guard_donation,
                                     instrument_locks)
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
@@ -195,6 +200,326 @@ def risky():
                  UNUSED_IMPORT) == [(UNUSED_IMPORT, 1)]
 
 
+# -- tracer flow (NX5xx) -----------------------------------------------------
+
+def test_flags_tracer_branch_host_shape_in_jit_root():
+    src = '''
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+@jax.jit
+def step(x, n):
+    if x > 0:
+        x = x + 1
+    h = np.asarray(x)
+    z = jnp.zeros(n)
+    return x + z + h.shape[0]
+'''
+    findings = analyze_source(src, "src/repro/core/fixture_flow.py")
+    assert _hits(findings, TRACE_BRANCH) == [(TRACE_BRANCH, 8)]
+    assert _hits(findings, TRACE_HOST) == [(TRACE_HOST, 10)]
+    assert _hits(findings, TRACE_SHAPE) == [(TRACE_SHAPE, 11)]
+
+
+def test_flags_tracer_flow_through_transitive_helper():
+    """The sink is two calls away from the jit root: the closure must
+    carry traced-ness through the intermediate helper."""
+    src = '''
+import jax
+
+def _decide(flag):
+    if flag:
+        return 1
+    return 0
+
+def _route(v):
+    return _decide(v > 0)
+
+@jax.jit
+def run(x):
+    return x * _route(x)
+'''
+    findings = analyze_source(src, "src/repro/core/fixture_deep.py")
+    assert _hits(findings, TRACE_BRANCH) == [(TRACE_BRANCH, 5)]
+
+
+def test_passes_static_by_structure_and_suppression():
+    """Shape reads, `is None` tests, `jnp.ndim`, len() and a reasoned
+    trace-ok suppression all stay clean inside a jit root."""
+    src = '''
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def run(x, sig):
+    if x.ndim == 2:
+        x = x[0]
+    if sig is None:
+        sig = jnp.ones(x.shape[0])
+    per_lane = jnp.ndim(sig) == 1
+    if per_lane:
+        sig = sig[0]
+    if bool(x[0] > 0):  # navilint: trace-ok fixture exercises suppression
+        pass
+    return x * sig * len(x.shape)
+'''
+    assert analyze_source(src, "src/repro/core/fixture_static.py") == []
+
+
+def test_regression_jit_root_static_property_stays_clean():
+    """Distilled from the first full-tree sweep: `graph.n` is a
+    NamedTuple *property* computing `self.vectors.shape[0]` -- a static
+    int. Pre-fix, the pass treated any attribute of a traced pytree as
+    traced, flagging `full_mask(graph.n)`'s shape use and every branch
+    downstream (core/bitset.py, core/search.py false positives)."""
+    src = '''
+import jax
+import jax.numpy as jnp
+from typing import NamedTuple
+
+class G(NamedTuple):
+    vectors: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+def full_mask(n):
+    if n % 32:
+        n = n + 32 - n % 32
+    return jnp.zeros(n // 32, jnp.uint32)
+
+@jax.jit
+def search(graph: G, q):
+    sel = full_mask(graph.n)
+    return q, sel
+'''
+    assert analyze_source(src, "src/repro/core/fixture_prop.py") == []
+
+
+# -- ProgramKey coverage (NX6xx) ---------------------------------------------
+
+_KEY_FIXTURE = '''
+from typing import NamedTuple
+import jax
+
+class Params(NamedTuple):
+    k: int
+    efs: int
+
+class ProgKey(NamedTuple):
+    k: int
+    e: int
+    b: int
+
+class Cache:
+    def __init__(self):
+        self._programs = {{}}
+
+    def run(self, params: Params, Q):
+        b = Q.shape[0]
+        key = ProgKey(k=params.k, e={efs_arm}, b=b)
+        prog = jax.jit(lambda q: q, static_argnames=("params",))
+        self._programs[key] = prog
+        return prog
+'''
+
+
+def test_flags_uncovered_static_field():
+    """`params` is a static_argnames arg whose `efs` field never
+    reaches the key: a call site varying efs reuses the wrong
+    program."""
+    src = _KEY_FIXTURE.format(efs_arm="0")
+    findings = analyze_source(src, "src/repro/api/fixture_key.py")
+    assert _hits(findings, UNCOVERED_STATIC), findings
+    assert "efs" in [f for f in findings
+                     if f.rule == UNCOVERED_STATIC][0].message
+
+
+def test_passes_fully_covered_key():
+    src = _KEY_FIXTURE.format(efs_arm="params.efs")
+    assert analyze_source(src, "src/repro/api/fixture_key_ok.py") == []
+
+
+def test_flags_unknown_key_field_rename_drift():
+    src = _KEY_FIXTURE.format(efs_arm="params.efs_search")
+    findings = analyze_source(src, "src/repro/api/fixture_key_drift.py")
+    assert _hits(findings, UNKNOWN_KEY_FIELD), findings
+
+
+def test_flags_uncovered_program_input():
+    """The stored program co-varies with `engine` but the key never
+    hashes it: two engines collide on one cache entry."""
+    src = '''
+from typing import NamedTuple
+import jax
+
+class ProgKey(NamedTuple):
+    b: int
+
+class Cache:
+    def __init__(self):
+        self._programs = {}
+
+    def run(self, Q, engine):
+        key = ProgKey(b=Q.shape[0])
+        self._programs[key] = jax.jit(engine)
+        return key
+'''
+    findings = analyze_source(src, "src/repro/api/fixture_key_input.py")
+    assert _hits(findings, UNCOVERED_INPUT), findings
+
+
+def test_regression_bound_builder_indirection_covers_caller_args():
+    """Distilled from the first full-tree sweep: `self._key(graph,
+    params)` binds the builder's params THROUGH the implicit receiver.
+    Pre-fix, FuncInfo.bind mapped call args against `self`, shifting
+    every parameter by one -- plan_compile's fully-covered arms
+    false-positived NX601."""
+    src = '''
+from typing import NamedTuple
+import jax
+
+class Params(NamedTuple):
+    k: int
+    efs: int
+
+class ProgKey(NamedTuple):
+    k: int
+    e: int
+
+class Cache:
+    def __init__(self):
+        self._programs = {}
+
+    def _key(self, graph, params):
+        return ProgKey(k=params.k, e=params.efs)
+
+    def run(self, graph, params: Params):
+        key = self._key(graph, params)
+        prog = jax.jit(lambda q: q, static_argnames=("params",))
+        self._programs[key] = prog
+        return prog
+'''
+    assert analyze_source(src, "src/repro/api/fixture_key_bind.py") == []
+
+
+# -- donation safety (NX7xx) -------------------------------------------------
+
+_DONATE_HEADER = '''
+import jax
+from functools import partial
+
+@partial(jax.jit, donate_argnums=(0,))
+def engine(st, q):
+    return st
+'''
+
+
+def test_flags_use_after_donate_and_discard_and_alias():
+    src = _DONATE_HEADER + '''
+def drive(st, q):
+    out = engine(st, q)
+    bad = st + 1
+    engine(out, q)
+    engine(out, out)
+    return bad
+'''
+    findings = analyze_source(src, "src/repro/serving/fixture_don.py")
+    assert _hits(findings, USE_AFTER_DONATE) == [
+        (USE_AFTER_DONATE, 11), (USE_AFTER_DONATE, 13)]
+    assert _hits(findings, DISCARDED_DONATION) == [
+        (DISCARDED_DONATION, 12), (DISCARDED_DONATION, 13)]
+    assert _hits(findings, DONATION_ALIAS) == [(DONATION_ALIAS, 13)]
+
+
+def test_passes_same_statement_rebind_and_suppression():
+    """`self.st, live = backend.steps(..., self.st, ...)` is the
+    sanctioned pattern: the rebind in the same statement revives the
+    key. A reasoned donate-ok suppression covers deliberate reads."""
+    src = _DONATE_HEADER + '''
+class Lanes:
+    def step(self, q):
+        self.st = engine(self.st, q)
+        return self.st
+
+    def peek(self, q):
+        out = engine(self.st, q)
+        # navilint: donate-ok fixture: reads a donated alias on purpose
+        stale = self.st
+        self.st = out
+        return stale
+'''
+    assert analyze_source(
+        src, "src/repro/serving/fixture_don_ok.py") == []
+
+
+def test_flags_donation_through_constructor_attr():
+    """`self._steps = obj.steps_program(donate=True)` donates through
+    the instance attribute -- the wrapper-method table must see it."""
+    src = '''
+import jax
+from functools import partial
+
+class Backend:
+    def steps_program(self, donate=False):
+        @partial(jax.jit, donate_argnums=(0,))
+        def _donating(st):
+            return st
+
+        @jax.jit
+        def _plain(st):
+            return st
+
+        return _donating if donate else _plain
+
+class Lanes:
+    def __init__(self, backend):
+        self._steps = backend.steps_program(donate=True)
+        self.st = None
+
+    def step(self):
+        self._steps(self.st)
+        return self.st
+'''
+    findings = analyze_source(src, "src/repro/serving/fixture_ctor.py")
+    assert _hits(findings, DISCARDED_DONATION), findings
+    assert _hits(findings, USE_AFTER_DONATE), findings
+
+
+def test_regression_duck_arity_mismatch_is_not_a_donation():
+    """Distilled from the first full-tree sweep: LaneBatch.evict(
+    lane_ids) shares a name with _FlatLanes.evict(st, udc, mask) which
+    donates (0, 1). Pre-fix, the duck table applied the donating
+    signature to the 1-arg dispatcher call, flagging service.py's
+    `self.lanes.evict(occ)` as a discarded donation."""
+    src = '''
+import jax
+from functools import partial
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def engine_evict(st, udc, mask):
+    return st, udc
+
+class Flat:
+    def evict(self, st, udc, mask):
+        return engine_evict(st, udc, mask)
+
+class Batch:
+    def evict(self, lane_ids):
+        self.st, self.udc = self.backend.evict(self.st, self.udc,
+                                               lane_ids)
+
+class Service:
+    def shutdown(self):
+        self.lanes.evict([0, 1])
+'''
+    findings = analyze_source(src, "src/repro/serving/fixture_duck.py")
+    assert _hits(findings, DISCARDED_DONATION) == []
+    assert _hits(findings, USE_AFTER_DONATE) == []
+
+
 # -- the real tree -----------------------------------------------------------
 
 def test_full_tree_is_clean():
@@ -202,8 +527,19 @@ def test_full_tree_is_clean():
     tree carries its own annotations, so any finding here is a real
     regression (or a missing annotation) introduced by a change."""
     findings = analyze_paths([str(REPO / "src"), str(REPO / "tests"),
-                              str(REPO / "benchmarks")])
+                              str(REPO / "benchmarks"),
+                              str(REPO / "examples")])
     assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_full_tree_analysis_stays_inside_budget():
+    """The analyzer sits in the CI inner loop with a 30s contract
+    (`--budget 30`); the whole-tree run -- four interprocedural passes
+    included -- must stay well inside it."""
+    t0 = time.monotonic()
+    analyze_paths([str(REPO / "src"), str(REPO / "tests"),
+                   str(REPO / "benchmarks"), str(REPO / "examples")])
+    assert time.monotonic() - t0 < 30.0
 
 
 def test_registry_names_resolve_against_source():
@@ -407,3 +743,172 @@ def test_db_execute_bucket_reuse_compiles_nothing(index):
         db.execute(Q.match("Chunk").where("cID", "<", n // 3)
                    .knn(k=5, efs=20), query=qs[:8])  # new predicate
     assert cc.counts["steady"] == 0, cc.counts
+
+
+# -- interprocedural lock discipline (NX201 via the call graph) ---------------
+
+_UNGATE_FIXTURE = '''
+import threading
+
+class Q:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []    # guarded-by: _lock
+        self._gated = False # guarded-by: _lock
+
+    def pop(self):
+        with self._lock:
+            self._items.pop()
+            self._maybe_ungate()
+{extra}
+    def _maybe_ungate(self):
+        if self._gated and not self._items:
+            self._gated = False
+'''
+
+
+def test_private_helper_proven_locked_at_every_call_site_passes():
+    """The `SubmissionQueue._maybe_ungate` pattern: a private method
+    touching guarded fields needs no `lock-held` annotation when every
+    intra-class call site holds the lock lexically."""
+    src = _UNGATE_FIXTURE.format(extra="")
+    assert analyze_source(src, "src/repro/serving/fixture_ip.py") == []
+
+
+def test_private_helper_with_one_unlocked_call_site_flags():
+    src = _UNGATE_FIXTURE.format(extra='''
+    def poke(self):
+        self._maybe_ungate()
+''')
+    findings = analyze_source(src, "src/repro/serving/fixture_ip2.py")
+    assert _hits(findings, UNLOCKED_ACCESS), findings
+
+
+def test_private_helper_escaping_as_callback_still_flags():
+    """Passing the bound method out of the class defeats the call-site
+    proof -- the analysis must treat an escaped method as unproven."""
+    src = _UNGATE_FIXTURE.format(extra='''
+    def register(self, bus):
+        bus.on_drain(self._maybe_ungate)
+''')
+    findings = analyze_source(src, "src/repro/serving/fixture_ip3.py")
+    assert _hits(findings, UNLOCKED_ACCESS), findings
+
+
+# -- donation runtime guard ---------------------------------------------------
+
+def _lane_batch(index, queries, bsz=2):
+    from repro.serving.lanes import LaneBatch
+    lanes = LaneBatch(index, "adaptive_local", k_cap=6, efs_cap=24,
+                      bsz=bsz)
+    full = lanes.backend.full_row()
+    q = np.asarray(index._prep_query(np.stack(queries[:bsz])))
+    lanes.admit([((j,), q[j], full, 1.0, 24) for j in range(bsz)])
+    return lanes
+
+
+def test_donation_guard_blocks_lane_state_access_in_flight(index,
+                                                           queries):
+    """Inside a step_async/step_wait window the chunk owns the donated
+    lane state: evict/finalize/admit raise, host mirrors are frozen.
+    After step_wait everything is legal again."""
+    with guard_donation() as g:
+        lanes = _lane_batch(index, queries)
+        lanes.step_async(2)
+        with pytest.raises(DonationError):
+            lanes.evict([0])
+        with pytest.raises(DonationError):
+            lanes.finalize(np.ones(1, bool))
+        with pytest.raises(ValueError):
+            lanes.Qh[0] = 0.0            # frozen mirror
+        lanes.step_wait()
+        lanes.finalize(np.ones(1, bool))
+        lanes.evict([0, 1])
+        lanes.Qh[0] = 0.0                # thawed
+    assert g.windows == 1
+    assert len(g.violations) == 2
+    # class-wide patch restored on exit
+    from repro.serving.lanes import LaneBatch
+    assert LaneBatch.step_async.__qualname__.startswith("LaneBatch.")
+
+
+def test_donation_guard_is_transparent_to_a_clean_driver(index,
+                                                         queries):
+    """The synchronous step() spelling and the admit->step->finalize
+    cycle run unchanged under the guard (windows counted, nothing
+    raised) -- the guard must not perturb what it measures."""
+    with guard_donation() as g:
+        lanes = _lane_batch(index, queries)
+        lanes.step(2)
+        lanes.step(0)
+        ids, dists = lanes.finalize(np.ones(1, bool))
+        assert ids.shape[0] == 2
+    assert g.windows == 2 and g.violations == []
+
+
+def test_regression_nondrain_shutdown_waits_for_inflight_chunk(
+        index, queries):
+    """The real defect this guard family caught: `shutdown(
+    drain=False)` joins the loop thread right after a tick dispatched a
+    chunk (tick step 5), then evicted the occupied lanes with that
+    chunk still in flight. Statically legal -- the device stream
+    serializes -- but a violation of the donation window the guard
+    enforces; the fix step_waits first. The whole lifecycle must now
+    run clean under the guard."""
+    from repro.api.db import NavixDB
+    from repro.storage.columnar import GraphStore
+
+    n = index.graph.n
+    store = GraphStore()
+    store.add_node_table("Chunk", n, {"cID": np.arange(n)})
+    db = NavixDB(store)
+    db.register_index("default", index)
+    with guard_donation() as g:
+        svc = db.serve(k_cap=6, efs_cap=24, max_batch=4,
+                       step_iters=1).start()
+        futs = [svc.submit(queries[j], k=6) for j in range(6)]
+        time.sleep(0.02)             # let the loop dispatch chunks
+        assert svc.shutdown(drain=False, timeout=60)
+        for f in futs:
+            assert f.done()
+    assert g.violations == []
+
+
+# -- analysis baseline / changed-only ----------------------------------------
+
+def test_changed_only_reports_only_edited_files(tmp_path, monkeypatch):
+    """--changed-only plumbing: a baseline write, an edit, and the
+    changed-set diff (new and edited files count, untouched ones
+    don't)."""
+    from repro.analysis import __main__ as cli
+
+    (tmp_path / "ROADMAP.md").write_text("x")
+    tree = tmp_path / "src"
+    tree.mkdir()
+    (tree / "a.py").write_text("A = 1\n")
+    (tree / "b.py").write_text("B = 2\n")
+    monkeypatch.setattr(cli, "repo_root", lambda: tmp_path)
+
+    cli.write_baseline([str(tree)])
+    assert cli.changed_files([str(tree)]) == set()
+
+    (tree / "b.py").write_text("B = 3\n")
+    (tree / "c.py").write_text("C = 4\n")
+    assert cli.changed_files([str(tree)]) == {"src/b.py", "src/c.py"}
+
+
+def test_committed_baseline_is_current():
+    """ANALYSIS_baseline.json must be refreshed alongside any file
+    change (python -m repro.analysis --write-baseline): a stale
+    baseline makes --changed-only report stale diffs."""
+    from repro.analysis import __main__ as cli
+
+    baseline = REPO / cli.BASELINE_NAME
+    assert baseline.exists(), "run: python -m repro.analysis " \
+                              "--write-baseline"
+    paths = [str(REPO / t) for t in cli.DEFAULT_TREES
+             if (REPO / t).exists()]
+    changed = cli.changed_files(paths)
+    assert changed == set(), (
+        f"{len(changed)} file(s) differ from {cli.BASELINE_NAME}; "
+        f"refresh it with: python -m repro.analysis --write-baseline")
